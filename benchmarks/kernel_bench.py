@@ -1,0 +1,66 @@
+"""Kernel-layer microbenchmarks.
+
+CPU wall times are for the jnp REFERENCE implementations (real compiled
+code); Pallas kernels run in interpret mode here (TPU is the target) so
+their timings are not comparable and are reported only as allclose checks
++ roofline-style derived metrics (arithmetic intensity of the op)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import time_fn
+
+
+def bench() -> list[tuple]:
+    rows = []
+    # --- fanout_mean / gather_reduce (GCN aggregation hot spot) ---
+    m, k, d = 4096, 20, 128
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k, d))
+    mask = jax.random.bernoulli(jax.random.PRNGKey(1), 0.9, (m, k))
+    f = jax.jit(ref.fanout_mean_ref)
+    t = time_fn(f, x, mask)
+    flops = 2 * m * k * d
+    rows.append(("kernel_fanout_mean_ref", t,
+                 f"ai={flops/(x.size*4+m*d*4):.2f}flops_per_byte"))
+    got = ops.fanout_mean(x, mask, use_kernel=True)
+    ok = np.allclose(np.asarray(got), np.asarray(f(x, mask)), rtol=1e-5, atol=1e-5)
+    rows.append(("kernel_fanout_mean_pallas_interpret", 0.0, f"allclose={ok}"))
+
+    # --- flash attention ---
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 1024, 64))
+    kk = jax.random.normal(jax.random.PRNGKey(3), (1, 2, 1024, 64))
+    v = jax.random.normal(jax.random.PRNGKey(4), (1, 2, 1024, 64))
+    f = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c, True))
+    t = time_fn(f, q, kk, v)
+    s, h, dh = 1024, 8, 64
+    flops = 4 * h * s * s * dh
+    rows.append(("kernel_attention_ref_1k", t,
+                 f"gflops_cpu={flops/t*1e-3:.1f}"))
+    got = ops.flash_attention(q, kk, v, causal=True, use_kernel=True)
+    ok = np.allclose(np.asarray(got), np.asarray(f(q, kk, v)), rtol=2e-3, atol=2e-3)
+    rows.append(("kernel_flash_attention_pallas_interpret", 0.0, f"allclose={ok}"))
+
+    # --- SSD scan ---
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 512, 4, 64))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(6), (2, 512, 4)))
+    a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(7), (4,)))
+    bm = jax.random.normal(jax.random.PRNGKey(8), (2, 512, 64))
+    cm = jax.random.normal(jax.random.PRNGKey(9), (2, 512, 64))
+    from repro.models.ssm import ssd_chunked
+    f_seq = jax.jit(ref.ssd_scan_ref)
+    f_chunk = jax.jit(lambda *args: ssd_chunked(*args, 128))
+    t_seq = time_fn(f_seq, x, dt, a, bm, cm, warmup=1, iters=3)
+    t_chunk = time_fn(f_chunk, x, dt, a, bm, cm, warmup=1, iters=3)
+    rows.append(("kernel_ssd_sequential_ref", t_seq, ""))
+    rows.append(("kernel_ssd_chunked", t_chunk,
+                 f"chunked_speedup={t_seq/t_chunk:.1f}x"))
+    got = ops.ssd_scan(x[:1, :128], dt[:1, :128], a, bm[:1, :128], cm[:1, :128],
+                       use_kernel=True, chunk=64)
+    want = f_seq(x[:1, :128], dt[:1, :128], a, bm[:1, :128], cm[:1, :128])
+    ok = np.allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+    rows.append(("kernel_ssd_pallas_interpret", 0.0, f"allclose={ok}"))
+    return rows

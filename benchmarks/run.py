@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/claim (DESIGN.md §5).
+
+    PYTHONPATH=src python -m benchmarks.run [--scale] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from .common import emit
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", action="store_true",
+                    help="include the 1M-nodes-per-iteration configuration")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (gen_throughput, kernel_bench, load_balance,
+                   padding_and_dropping, pipeline_overlap, tree_reduce_bench)
+
+    suites = {
+        "gen_throughput": lambda: gen_throughput.bench(scale=False),
+        "load_balance": load_balance.bench,
+        "pipeline_overlap": pipeline_overlap.bench,
+        "tree_reduce": tree_reduce_bench.bench,
+        "kernels": kernel_bench.bench,
+        "padding_and_dropping": padding_and_dropping.bench,
+    }
+    if args.scale:
+        suites["gen_throughput_1M"] = lambda: gen_throughput.bench(scale=True)
+
+    print("name,us_per_call,derived")
+    failed = False
+    for name, fn in suites.items():
+        if args.only and args.only != name:
+            continue
+        try:
+            emit(fn())
+        except Exception:
+            failed = True
+            print(f"{name},0.0,ERROR", file=sys.stdout)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

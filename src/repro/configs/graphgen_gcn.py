@@ -1,0 +1,7 @@
+"""The paper's own model: mini-batch GCN on 2-hop (40, 20) subgraphs (§3)."""
+from ..core.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="graphgen-gcn", family="gcn",
+    gcn_in_dim=128, gcn_hidden=256, n_classes=64, fanouts=(40, 20),
+)

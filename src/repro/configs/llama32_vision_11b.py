@@ -1,0 +1,11 @@
+"""Llama-3.2-11B-Vision [hf:meta-llama/Llama-3.2-11B-Vision] — text decoder
+with gated cross-attn every 5th layer; patch-embedding frontend is a STUB."""
+from ..core.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b", family="vlm",
+    n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=128256, head_dim=128,
+    rope_theta=500_000.0,
+    cross_attn_every=5, n_vision_tokens=1600, d_vision=1280,
+)

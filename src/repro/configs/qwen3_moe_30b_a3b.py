@@ -1,0 +1,10 @@
+"""Qwen3-30B-A3B [hf:Qwen/Qwen3-30B-A3B] — 128 experts top-8 MoE.
+The assignment's d_ff=768 is the per-expert (routed) FFN width."""
+from ..core.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4,
+    d_ff=0, d_ff_expert=768, vocab_size=151936, head_dim=128,
+    n_experts=128, top_k=8,
+)

@@ -1,0 +1,5 @@
+from .config import (ModelConfig, ShapeConfig, MeshConfig, TrainConfig, SHAPES,
+                     PEAK_FLOPS_BF16, HBM_BW, ICI_BW)
+from .balance import balance_table, rebalance_on_failure, load_skew, BalanceTable
+from .partition import partition_edges, PartitionedGraph
+from .tree_reduce import tree_allreduce, tree_psum

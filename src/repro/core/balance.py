@@ -1,0 +1,70 @@
+"""Load-Balanced Subgraph Mapping (paper §2 step 2, Algorithm 1 lines 4-13).
+
+The coordinator builds a *balance table* mapping seed nodes to workers:
+seeds are shuffled, assigned round-robin, and the remainder ``|S| mod |W|``
+is **discarded** so every worker owns exactly ``floor(|S|/|W|)`` seeds.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BalanceTable:
+    """``assignment[i]`` is the worker owning shuffled seed i (discarded
+    seeds excluded).  ``per_worker[w]`` is the [S/W] seed array of worker w —
+    this stacked form is what shards over the mesh ``data`` axis."""
+
+    per_worker: np.ndarray      # [n_workers, seeds_per_worker] int32
+    n_discarded: int
+    seed_order: np.ndarray      # the shuffled survivor seeds, round-robin order
+
+    @property
+    def n_workers(self) -> int:
+        return self.per_worker.shape[0]
+
+    @property
+    def seeds_per_worker(self) -> int:
+        return self.per_worker.shape[1]
+
+
+def balance_table(seeds: np.ndarray, n_workers: int, seed: int = 0) -> BalanceTable:
+    """Algorithm 1 lines 4-13, vectorized.
+
+    Line 4:  shuffle S to avoid sequential bias.
+    Line 6:  max_i = floor(|S|/|W|) * |W|   (remainder discarded).
+    Line 11: M[s_i] = W[i mod |W|]          (round-robin).
+    """
+    if n_workers <= 0:
+        raise ValueError("need at least one worker")
+    rng = np.random.default_rng(seed)
+    shuffled = rng.permutation(np.asarray(seeds, dtype=np.int32))
+    per = len(shuffled) // n_workers
+    max_i = per * n_workers
+    kept = shuffled[:max_i]
+    # i mod |W| assignment == reshape so column w holds worker w's seeds.
+    per_worker = kept.reshape(per, n_workers).T.copy()
+    return BalanceTable(
+        per_worker=per_worker,
+        n_discarded=len(shuffled) - max_i,
+        seed_order=kept,
+    )
+
+
+def rebalance_on_failure(table: BalanceTable, failed: list[int], seed: int = 1) -> BalanceTable:
+    """Fault tolerance: rebuild the balance table over surviving workers
+    (Algorithm 1 re-run with |W| - |failed|).  The failed workers' seeds are
+    pooled with everyone else's and re-dealt round-robin."""
+    survivors = [w for w in range(table.n_workers) if w not in set(failed)]
+    if not survivors:
+        raise RuntimeError("all workers failed")
+    all_seeds = table.per_worker.reshape(-1)
+    return balance_table(all_seeds, len(survivors), seed=seed)
+
+
+def load_skew(per_worker_work: np.ndarray) -> float:
+    """max/mean worker load — the balance metric benchmarked in §3."""
+    m = float(np.mean(per_worker_work))
+    return float(np.max(per_worker_work)) / m if m > 0 else float("inf")

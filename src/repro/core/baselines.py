@@ -1,0 +1,100 @@
+"""Baseline subgraph-generation strategies the paper compares against (§3).
+
+1. ``sql_like_sample``   — the "traditional SQL-like" method: each hop is a
+   relational JOIN of the frontier against the full edge table, with no
+   adjacency index.  Cost O(F x E) per hop (a broadcast compare / one-hot
+   contraction), which is why the paper reports a 27x win over it.
+
+2. ``node_centric_sample`` — AGL's node-centric MapReduce paradigm: each
+   frontier node's neighbor list is collected *serially* (a fori_loop over
+   its full degree).  Hot nodes serialize — the exact bottleneck GraphGen+'s
+   edge-centric scan removes.
+
+3. The *offline GraphGen* baseline (precompute all subgraphs, round-trip
+   them through storage, then train) is a driver pattern, not a sampler —
+   see ``benchmarks/pipeline_overlap.py`` and ``core.pipeline.offline_loop``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def sql_like_sample(
+    edge_src: jax.Array,   # [E]
+    edge_dst: jax.Array,   # [E]
+    frontier: jax.Array,   # [F]
+    k: int,
+    rng: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """JOIN frontier x edges with no index: for every (frontier, edge) pair
+    test ``edge.src == frontier.node``; rank matches by random priority and
+    keep k.  Returns (ids [F,k], mask [F,k])."""
+    e = edge_src.shape[0]
+    pri = jax.random.uniform(rng, (e,), minval=1e-6)
+
+    def per_node(v):
+        match = edge_src == v                       # full edge-table scan
+        score = jnp.where(match, pri, -jnp.inf)
+        top, idx = lax.top_k(score, k)              # O(E log k)
+        return edge_dst[idx], jnp.isfinite(top)
+
+    ids, mask = jax.vmap(per_node)(frontier)
+    return ids.astype(jnp.int32), mask
+
+
+def node_centric_sample(
+    indptr: jax.Array,
+    indices: jax.Array,
+    frontier: jax.Array,
+    k: int,
+    rng: jax.Array,
+    max_degree: int,
+) -> tuple[jax.Array, jax.Array]:
+    """AGL-style: every frontier node walks its neighbor list one edge at a
+    time (serial reservoir sampling up to ``max_degree`` steps).  The loop
+    bound is the *maximum* degree, so one hot node stalls the whole batch —
+    the behaviour the paper attributes AGL's bottleneck to."""
+    f = frontier.shape[0]
+    node = jnp.clip(frontier, 0, indptr.shape[0] - 2)
+    start = indptr[node]
+    deg = indptr[node + 1] - start
+
+    def per_node(s, d, key):
+        def body(i, state):
+            res, key = state
+            key, sub = jax.random.split(key)
+            nbr = indices[jnp.clip(s + i, 0, indices.shape[0] - 1)]
+            active = i < d
+            # serial reservoir: position i replaces slot j ~ U[0, i] if j < k
+            j = jax.random.randint(sub, (), 0, jnp.maximum(i + 1, 1))
+            take = jnp.logical_and(active, jnp.logical_or(i < k, j < k))
+            slot = jnp.where(i < k, i, j)
+            res = lax.cond(
+                take, lambda r: r.at[slot].set(nbr), lambda r: r, res
+            )
+            return res, key
+        res = jnp.zeros((k,), jnp.int32)
+        res, _ = lax.fori_loop(0, max_degree, body, (res, key))
+        valid = jnp.arange(k) < jnp.minimum(d, k)
+        return res, valid
+
+    keys = jax.random.split(rng, f)
+    ids, mask = jax.vmap(per_node)(start, deg, keys)
+    return ids, mask
+
+
+def edge_centric_sample(
+    indptr: jax.Array,
+    indices: jax.Array,
+    frontier: jax.Array,
+    k: int,
+    rng: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """GraphGen+'s sampler, single-partition form: a pure parallel gather
+    over the edge array (all F x k draws independent)."""
+    from .generation import local_candidates
+
+    cand = local_candidates(indptr, indices, frontier, k, rng)
+    return jnp.where(jnp.isfinite(cand.keys), cand.ids, 0), jnp.isfinite(cand.keys)

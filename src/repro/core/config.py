@@ -1,0 +1,217 @@
+"""Configuration dataclasses for the repro framework.
+
+One ``ModelConfig`` describes any architecture in the zoo (the paper's GCN
+plus the 10 assigned LM-family architectures).  ``ShapeConfig`` describes an
+input-shape cell (train / prefill / decode / long-decode).  ``MeshConfig``
+describes the device mesh.  All are plain frozen dataclasses — no jax state
+is touched at import time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | vlm | audio | ssm | hybrid | gcn
+    n_layers: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    head_dim: int = 0          # 0 -> d_model // n_heads
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0       # per-expert FFN width (qwen3/deepseek style)
+    first_dense_layers: int = 0  # deepseek: first k layers are dense
+    # --- MLA (deepseek) ---
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_rope_head_dim: int = 0
+    qk_nope_head_dim: int = 0
+    v_head_dim: int = 0
+    # --- SSM (mamba2) ---
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 0
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    conv_width: int = 4
+    # --- hybrid (zamba2): shared attention block every `attn_every` layers ---
+    attn_every: int = 0
+    # --- vlm: cross-attention every `cross_attn_every` layers ---
+    cross_attn_every: int = 0
+    n_vision_tokens: int = 0
+    d_vision: int = 0
+    # --- audio (whisper): encoder-decoder ---
+    n_encoder_layers: int = 0
+    n_audio_frames: int = 0
+    d_audio: int = 0
+    # --- gcn (the paper's model) ---
+    gcn_hidden: int = 0
+    gcn_in_dim: int = 0
+    n_classes: int = 0
+    fanouts: Tuple[int, ...] = ()
+    # --- performance knobs (hillclimbed in §Perf) ---
+    remat: str = "none"        # none | full | dots
+    scan_layers: bool = True   # stack layer params and lax.scan over them
+    use_flash_attention: bool = False
+    fsdp_params: bool = True   # shard params over the data axis (ZeRO-3 style)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND roofline, not allocation)."""
+        if self.family == "gcn":
+            d, h = self.gcn_in_dim, self.gcn_hidden
+            return d * h + h + h * h + h + h * self.n_classes + self.n_classes
+        hd = self.resolved_head_dim
+        emb = self.vocab_size * self.d_model
+        out = 0 if self.tie_embeddings else self.vocab_size * self.d_model
+        if self.family == "ssm":
+            per = _mamba2_layer_params(self)
+            return emb + out + self.n_layers * per
+        if self.family == "hybrid":
+            n_attn = self.n_layers // max(self.attn_every, 1)
+            per = _mamba2_layer_params(self)
+            attn = _attn_params(self) + _mlp_params(self.d_model, self.d_ff)
+            return emb + out + self.n_layers * per + attn + (n_attn - 1) * 0
+        per = _attn_params(self)
+        if self.family == "moe":
+            dense_ff = _mlp_params(self.d_model, self.d_ff if self.d_ff else self.d_ff_expert)
+            moe_ff = (
+                self.n_experts * _mlp_params(self.d_model, self.d_ff_expert)
+                + self.n_shared_experts * _mlp_params(self.d_model, self.d_ff_expert)
+                + self.d_model * self.n_experts
+            )
+            n_moe = self.n_layers - self.first_dense_layers
+            ff_total = self.first_dense_layers * dense_ff + n_moe * moe_ff
+        else:
+            ff_total = self.n_layers * _mlp_params(self.d_model, self.d_ff)
+        total = emb + out + self.n_layers * per + ff_total
+        if self.family == "audio":
+            total += self.n_encoder_layers * (
+                _attn_params(self) + _mlp_params(self.d_model, self.d_ff)
+            )
+            total += self.n_layers * _attn_params(self)  # decoder cross-attn
+        if self.family == "vlm":
+            n_cross = self.n_layers // max(self.cross_attn_every, 1)
+            total += n_cross * _attn_params(self)
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (== param_count for dense)."""
+        if self.family != "moe":
+            return self.param_count()
+        per_attn = _attn_params(self)
+        emb = self.vocab_size * self.d_model
+        out = 0 if self.tie_embeddings else self.vocab_size * self.d_model
+        active_ff = (self.top_k + self.n_shared_experts) * _mlp_params(
+            self.d_model, self.d_ff_expert
+        ) + self.d_model * self.n_experts
+        dense_ff = _mlp_params(self.d_model, self.d_ff if self.d_ff else self.d_ff_expert)
+        n_moe = self.n_layers - self.first_dense_layers
+        return (
+            emb + out + self.n_layers * per_attn
+            + self.first_dense_layers * dense_ff + n_moe * active_ff
+        )
+
+
+def _attn_params(cfg: ModelConfig) -> int:
+    hd = cfg.resolved_head_dim
+    if cfg.kv_lora_rank:  # MLA
+        q = cfg.d_model * cfg.n_heads * (cfg.qk_rope_head_dim + cfg.qk_nope_head_dim)
+        kv = (
+            cfg.d_model * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+            + cfg.kv_lora_rank * cfg.n_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim)
+        )
+        o = cfg.n_heads * cfg.v_head_dim * cfg.d_model
+        return q + kv + o
+    q = cfg.d_model * cfg.n_heads * hd
+    kv = 2 * cfg.d_model * cfg.n_kv_heads * hd
+    o = cfg.n_heads * hd * cfg.d_model
+    return q + kv + o
+
+
+def _mlp_params(d_model: int, d_ff: int) -> int:
+    return 3 * d_model * d_ff  # gate, up, down
+
+
+def _mamba2_layer_params(cfg: ModelConfig) -> int:
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = cfg.ssm_heads or max(d_in // max(cfg.ssm_head_dim, 1), 1)
+    in_proj = cfg.d_model * (2 * d_in + 2 * cfg.ssm_state + nh)
+    conv = (d_in + 2 * cfg.ssm_state) * cfg.conv_width
+    out_proj = d_in * cfg.d_model
+    return in_proj + conv + out_proj + 2 * nh
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str            # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (2, 16, 16) if self.multi_pod else (16, 16)
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+# TPU v5e hardware constants for the roofline model (target hardware).
+PEAK_FLOPS_BF16 = 197e12        # per chip, FLOP/s
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    microbatches: int = 1       # gradient accumulation
+    grad_sync: str = "psum"     # psum | tree (explicit butterfly tree reduction)
+    compress_grads: bool = False
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3

@@ -1,0 +1,2 @@
+from .loader import PrefetchLoader
+from .tokens import synthetic_token_batch, token_shard_schedule

@@ -1,0 +1,110 @@
+"""Host-side producer/consumer pipeline (GraphGen+ step 4, generalized).
+
+The on-device double buffer (``core.pipeline``) overlaps one step of
+generation; this loader generalizes the same idea across the host boundary
+for producers that are not pure-JAX (tokenized text shards, file readers):
+a bounded queue of prefetched batches, produced by worker threads that own
+balance-table shards, with MapReduce-style **speculative execution** for
+straggler mitigation: when a shard's production time exceeds
+``straggler_factor x`` the running median, the same shard is re-issued to an
+idle thread and whichever copy finishes first wins.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Iterator, Optional
+
+
+class PrefetchLoader:
+    def __init__(
+        self,
+        produce: Callable[[int], object],   # shard_index -> batch
+        n_shards: int,
+        depth: int = 2,
+        n_threads: int = 2,
+        straggler_factor: float = 4.0,
+        max_backups: int = 8,
+    ) -> None:
+        self._produce = produce
+        self._n_shards = n_shards
+        self._q: "queue.Queue[tuple[int, object]]" = queue.Queue(maxsize=depth)
+        self._pending: "queue.Queue[int]" = queue.Queue()
+        self._done: dict[int, object] = {}
+        self._done_lock = threading.Lock()
+        self._times: list[float] = []
+        self._stop = threading.Event()
+        self._straggler_factor = straggler_factor
+        self._backups_issued = 0
+        self._max_backups = max_backups
+        self._inflight: dict[int, float] = {}   # shard -> start time
+        for s in range(n_shards):
+            self._pending.put(s)
+        self._threads = [
+            threading.Thread(target=self._worker, daemon=True)
+            for _ in range(n_threads)
+        ]
+        self._watchdog = threading.Thread(target=self._watch, daemon=True)
+
+    # -- internals ---------------------------------------------------------
+    def _worker(self) -> None:
+        while not self._stop.is_set():
+            try:
+                shard = self._pending.get(timeout=0.05)
+            except queue.Empty:
+                if self._all_done():
+                    return
+                continue
+            with self._done_lock:
+                if shard in self._done:      # a backup already finished it
+                    continue
+                self._inflight[shard] = time.perf_counter()
+            t0 = time.perf_counter()
+            batch = self._produce(shard)
+            dt = time.perf_counter() - t0
+            with self._done_lock:
+                if shard in self._done:
+                    continue                 # lost the race to a backup
+                self._done[shard] = batch
+                self._inflight.pop(shard, None)
+                self._times.append(dt)
+            self._q.put((shard, batch))
+
+    def _watch(self) -> None:
+        """Speculative re-execution of stragglers."""
+        while not self._stop.is_set() and not self._all_done():
+            time.sleep(0.01)
+            with self._done_lock:
+                if len(self._times) < 3 or self._backups_issued >= self._max_backups:
+                    continue
+                med = sorted(self._times)[len(self._times) // 2]
+                now = time.perf_counter()
+                for shard, t0 in list(self._inflight.items()):
+                    if now - t0 > self._straggler_factor * max(med, 1e-4):
+                        self._pending.put(shard)        # re-issue
+                        self._inflight.pop(shard)
+                        self._backups_issued += 1
+
+    def _all_done(self) -> bool:
+        with self._done_lock:
+            return len(self._done) >= self._n_shards
+
+    # -- public ------------------------------------------------------------
+    def __iter__(self) -> Iterator[object]:
+        for t in self._threads:
+            t.start()
+        self._watchdog.start()
+        served = 0
+        while served < self._n_shards:
+            shard, batch = self._q.get()
+            served += 1
+            yield batch
+        self._stop.set()
+
+    @property
+    def backups_issued(self) -> int:
+        return self._backups_issued
+
+    def stop(self) -> None:
+        self._stop.set()

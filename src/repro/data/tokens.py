@@ -1,0 +1,41 @@
+"""Token data pipeline for the assigned LM-family architectures.
+
+Synthetic token streams (no corpus ships with the container) sharded with
+the SAME balance-table discipline as subgraph seeds (DESIGN.md §4): document
+ids are shuffled, dealt round-robin to data-parallel workers, and the
+remainder is discarded — so every worker sees an identical batch count.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.balance import balance_table
+from ..core.config import ModelConfig, ShapeConfig
+
+
+def synthetic_token_batch(
+    cfg: ModelConfig, shape: ShapeConfig, seed: int = 0
+) -> dict:
+    """A host-materialized batch (smoke tests; dry-runs use input_specs)."""
+    rng = np.random.default_rng(seed)
+    b, s = shape.global_batch, shape.seq_len
+    tokens = rng.integers(0, cfg.vocab_size, size=(b, s), dtype=np.int32)
+    batch = {"tokens": jnp.asarray(tokens)}
+    batch["labels"] = jnp.asarray(
+        np.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    )
+    return batch
+
+
+def token_shard_schedule(
+    n_documents: int, n_workers: int, steps: int, per_step: int, seed: int = 0
+) -> np.ndarray:
+    """Balance-table document assignment -> [steps, W, per_step] schedule."""
+    table = balance_table(np.arange(n_documents, dtype=np.int32), n_workers, seed)
+    per_w = table.per_worker  # [W, S/W]
+    need = steps * per_step
+    reps = -(-need // per_w.shape[1])
+    tiled = np.tile(per_w, (1, reps))[:, :need]          # [W, steps*per_step]
+    return tiled.reshape(n_workers, steps, per_step).transpose(1, 0, 2)

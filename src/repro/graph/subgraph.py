@@ -1,0 +1,64 @@
+"""Fixed-fanout padded subgraph batches.
+
+MapReduce GraphGen+ emits ragged subgraphs; XLA needs static shapes, so we
+adopt the paper's own sampling configuration — 2-hop expansion with fanout
+(40, 20) — as a *fixed-fanout padded tree* with validity masks (DESIGN.md §2,
+"changed assumptions").
+
+A batch of B seeds with fanouts (k1, k2) is:
+    seeds   [B]          int32
+    hop1    [B, k1]      int32 sampled 1-hop neighbor ids
+    mask1   [B, k1]      bool
+    hop2    [B, k1, k2]  int32 sampled 2-hop neighbor ids
+    mask2   [B, k1, k2]  bool
+    x_seed  [B, D]       float  features (collected during generation —
+    x_hop1  [B, k1, D]          the paper routes subgraph *data*, not ids,
+    x_hop2  [B, k1, k2, D]      through the tree reduction)
+    labels  [B]          int32
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SubgraphBatch(NamedTuple):
+    seeds: jax.Array
+    hop1: jax.Array
+    mask1: jax.Array
+    hop2: jax.Array
+    mask2: jax.Array
+    x_seed: jax.Array
+    x_hop1: jax.Array
+    x_hop2: jax.Array
+    labels: jax.Array
+
+    @property
+    def batch_size(self) -> int:
+        return self.seeds.shape[0]
+
+    def nodes_per_iteration(self) -> int:
+        """Total (padded) node slots materialized per iteration — the paper's
+        '1M nodes per iteration' metric counts these."""
+        b, k1 = self.hop1.shape
+        k2 = self.hop2.shape[-1]
+        return b * (1 + k1 + k1 * k2)
+
+
+def batch_specs(batch: int, k1: int, k2: int, dim: int):
+    """ShapeDtypeStruct stand-ins for a SubgraphBatch (dry-run input)."""
+    f32, i32 = jnp.float32, jnp.int32
+    s = jax.ShapeDtypeStruct
+    return SubgraphBatch(
+        seeds=s((batch,), i32),
+        hop1=s((batch, k1), i32),
+        mask1=s((batch, k1), jnp.bool_),
+        hop2=s((batch, k1, k2), i32),
+        mask2=s((batch, k1, k2), jnp.bool_),
+        x_seed=s((batch, dim), f32),
+        x_hop1=s((batch, k1, dim), f32),
+        x_hop2=s((batch, k1, k2, dim), f32),
+        labels=s((batch,), i32),
+    )

@@ -1,0 +1,115 @@
+"""Pallas TPU kernels for the GCN aggregation hot spot.
+
+Two kernels:
+
+* ``fanout_mean``    — masked mean over the fanout axis of already-gathered
+  features, x [M, K, D] -> [M, D].  Tiled (block_m x K x block_d) in VMEM;
+  D blocks are 128-aligned for the VPU lanes.
+
+* ``gather_reduce``  — fused gather + masked mean straight from the node
+  feature table: table [N, D] stays in HBM (memory_space=ANY) and rows are
+  pulled with per-row dynamic-slice DMAs — the TPU-native shape of the
+  "collect edges for my seeds" inner loop (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU memory spaces; interpret mode tolerates their absence
+    from jax.experimental.pallas import tpu as pltpu
+    _ANY = pltpu.ANY
+except Exception:  # pragma: no cover
+    pltpu = None
+    _ANY = None
+
+
+def _fanout_mean_kernel(x_ref, mask_ref, o_ref):
+    x = x_ref[...]                       # [bm, K, bd]
+    m = mask_ref[...].astype(x.dtype)    # [bm, K]
+    num = jnp.einsum("mkd,mk->md", x, m)
+    den = jnp.maximum(m.sum(axis=1, keepdims=True), 1.0)
+    o_ref[...] = num / den
+
+
+def fanout_mean_pallas(
+    x: jax.Array,
+    mask: jax.Array,
+    *,
+    block_m: int = 128,
+    block_d: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    m, k, d = x.shape
+    bm, bd = min(block_m, m), min(block_d, d)
+    grid = (pl.cdiv(m, bm), pl.cdiv(d, bd))
+    return pl.pallas_call(
+        _fanout_mean_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k, bd), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=interpret,
+    )(x, mask)
+
+
+def _gather_reduce_kernel(table_ref, idx_ref, mask_ref, o_ref, *, k: int):
+    """One (block_m, block_d) output tile; rows DMA'd from HBM one fanout
+    slot at a time (k is small: the paper's fanouts are 40/20)."""
+    idx = idx_ref[...]                    # [bm, k] int32
+    msk = mask_ref[...]                   # [bm, k] bool
+    bm = idx.shape[0]
+    bd = o_ref.shape[1]
+    jd = pl.program_id(1)
+
+    def slot(kk, acc):
+        def row(i, acc):
+            r = idx[i, kk]
+            vals = pl.load(
+                table_ref, (pl.dslice(r, 1), pl.dslice(jd * bd, bd))
+            )[0]                          # [bd] row DMA from HBM
+            take = msk[i, kk].astype(vals.dtype)
+            return acc.at[i].add(vals * take)
+        return jax.lax.fori_loop(0, bm, row, acc)
+
+    acc = jax.lax.fori_loop(0, k, slot, jnp.zeros(o_ref.shape, jnp.float32))
+    den = jnp.maximum(msk.sum(axis=1, keepdims=True).astype(jnp.float32), 1.0)
+    o_ref[...] = (acc / den).astype(o_ref.dtype)
+
+
+def gather_reduce_pallas(
+    table: jax.Array,
+    idx: jax.Array,
+    mask: jax.Array,
+    *,
+    block_m: int = 64,
+    block_d: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    m, k = idx.shape
+    n, d = table.shape
+    bm, bd = min(block_m, m), min(block_d, d)
+    grid = (pl.cdiv(m, bm), pl.cdiv(d, bd))
+    table_spec = (
+        pl.BlockSpec(memory_space=_ANY)
+        if _ANY is not None
+        else pl.BlockSpec((n, d), lambda i, j: (0, 0))
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_reduce_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            table_spec,
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, d), table.dtype),
+        interpret=interpret,
+    )(table, jnp.clip(idx, 0, n - 1), mask)

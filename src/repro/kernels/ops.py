@@ -1,0 +1,60 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Each op dispatches kernel vs pure-jnp reference via ``use_kernel`` (models
+pass their config's flag).  On non-TPU backends kernels run in
+``interpret=True`` mode — the kernel body executes exactly, which is the
+validation story on this CPU container; on TPU they compile natively.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .gather_reduce import fanout_mean_pallas, gather_reduce_pallas
+from .ssd_scan import ssd_scan_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fanout_mean(x: jax.Array, mask: jax.Array, use_kernel: bool = False) -> jax.Array:
+    if use_kernel:
+        return fanout_mean_pallas(x, mask, interpret=_interpret())
+    return ref.fanout_mean_ref(x, mask)
+
+
+def gather_reduce(
+    table: jax.Array, idx: jax.Array, mask: jax.Array, use_kernel: bool = False
+) -> jax.Array:
+    if use_kernel:
+        return gather_reduce_pallas(table, idx, mask, interpret=_interpret())
+    return ref.gather_reduce_ref(table, idx, mask)
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    causal: bool = True, use_kernel: bool = False,
+    block_q: int = 128, block_k: int = 128,
+) -> jax.Array:
+    if use_kernel:
+        return flash_attention_pallas(
+            q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+            interpret=_interpret(),
+        )
+    return ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+def ssd_scan(
+    x: jax.Array, dt: jax.Array, a: jax.Array,
+    b_mat: jax.Array, c_mat: jax.Array,
+    use_kernel: bool = False, chunk: int = 128,
+) -> jax.Array:
+    if use_kernel:
+        return ssd_scan_pallas(x, dt, a, b_mat, c_mat, chunk=chunk,
+                               interpret=_interpret())
+    return ref.ssd_scan_ref(x, dt, a, b_mat, c_mat)

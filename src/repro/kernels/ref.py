@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function here is the semantic ground truth; kernel tests sweep shapes
+and dtypes and ``assert_allclose`` the Pallas output (interpret=True on this
+CPU container; TPU is the compile target) against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fanout_mean_ref(x: jax.Array, mask: jax.Array) -> jax.Array:
+    """Masked mean over the fanout axis: x [M, K, D], mask [M, K] -> [M, D].
+
+    The GCN aggregation step on a padded fanout tree (paper §3 model)."""
+    m = mask.astype(x.dtype)
+    num = jnp.einsum("mkd,mk->md", x, m)
+    den = jnp.maximum(m.sum(axis=1, keepdims=True), 1.0)
+    return num / den
+
+
+def gather_reduce_ref(
+    table: jax.Array, idx: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Gather rows then masked-mean: table [N, D], idx [M, K], mask [M, K]
+    -> [M, D].  The fused per-worker hot spot of edge-centric collection +
+    aggregation."""
+    rows = table[jnp.clip(idx, 0, table.shape[0] - 1)]        # [M, K, D]
+    return fanout_mean_ref(rows, mask)
+
+
+def flash_attention_ref(
+    q: jax.Array,      # [B, Hq, Lq, Dh]
+    k: jax.Array,      # [B, Hkv, Lk, Dh]
+    v: jax.Array,      # [B, Hkv, Lk, Dh]
+    causal: bool = True,
+) -> jax.Array:
+    """Exact softmax attention with GQA head grouping."""
+    b, hq, lq, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, lq, dh)
+    scale = 1.0 / jnp.sqrt(dh).astype(q.dtype)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k) * scale
+    if causal:
+        lk = k.shape[2]
+        qi = jnp.arange(lq)[:, None] + (lk - lq)   # align last q with last k
+        ki = jnp.arange(lk)[None, :]
+        logits = jnp.where(qi >= ki, logits, -jnp.inf)
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v)
+    return out.reshape(b, hq, lq, dh)
+
+
+def ssd_scan_ref(
+    x: jax.Array,      # [B, L, H, P]
+    dt: jax.Array,     # [B, L, H]        (post-softplus, > 0)
+    a: jax.Array,      # [H]              (negative: decay log-rate)
+    b_mat: jax.Array,  # [B, L, N]        (single group, broadcast over heads)
+    c_mat: jax.Array,  # [B, L, N]
+) -> jax.Array:
+    """Mamba-2 SSD recurrence, exact sequential oracle:
+
+        h_t = exp(a * dt_t) * h_{t-1} + dt_t * (b_t  outer  x_t)
+        y_t = h_t @ c_t
+    """
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+
+    def step(h_state, inp):
+        xt, dtt, bt, ct = inp                      # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(a[None, :] * dtt)          # [B, H]
+        upd = dtt[..., None, None] * (
+            xt[..., :, None] * bt[:, None, None, :]
+        )                                           # [B, H, P, N]
+        h_state = h_state * decay[..., None, None] + upd
+        yt = jnp.einsum("bhpn,bn->bhp", h_state, ct)
+        return h_state, yt
+
+    h0 = jnp.zeros((bsz, h, p, n), x.dtype)
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(b_mat, 1, 0),
+        jnp.moveaxis(c_mat, 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)                  # [B, L, H, P]

@@ -1,0 +1,274 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract the roofline terms from the compiled artifact.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+        --shape train_4k [--multi-pod] [--attn chunked] [--remat full] \
+        [--variant name] [--out results.jsonl]
+
+This proves the distribution config is coherent without hardware: the
+sharded program must partition (no sharding mismatches), compile (no
+unsupported collectives), and fit (memory_analysis).
+"""
+# The VERY FIRST lines, before ANY other import (jax locks the device count
+# on first init):
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import sys          # noqa: E402
+import time         # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from ..configs import REGISTRY, SUBQUADRATIC, get_config   # noqa: E402
+from ..core.config import SHAPES, TrainConfig              # noqa: E402
+from ..models import layers as L                           # noqa: E402
+from ..models import zoo                                   # noqa: E402
+from ..train.train_loop import init_state, make_train_step # noqa: E402
+from .hlo_analysis import collective_bytes, trip_weighted_cost  # noqa: E402
+from .mesh import make_production_mesh                     # noqa: E402
+
+
+def _artifact_stats(compiled, chips: int, t_lower: float, t_compile: float) -> dict:
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    out = dict(
+        chips=chips,
+        flops_per_device=trip_weighted_cost(hlo)["flops"],
+        bytes_per_device=trip_weighted_cost(hlo)["bytes"],
+        xla_cost_flops=float(cost.get("flops", 0.0)),
+        xla_cost_bytes=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes_per_device=collective_bytes(hlo),
+        t_lower_s=round(t_lower, 1),
+        t_compile_s=round(t_compile, 1),
+    )
+    try:
+        out["memory"] = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+        }
+    except Exception:
+        out["memory"] = str(mem)
+    return out
+
+
+def lower_gcn_cell(rec: dict, multi_pod: bool, merge_mode: str = "butterfly") -> dict:
+    """The paper's own workload at production scale: one synchronized
+    generation+training step on a 530M-node / 5B-edge graph (the paper's
+    evaluation graph), 2-hop (40, 20) sampling, ~1.7M padded nodes per
+    iteration.  Generation shards over 'data' (the worker axis); the small
+    GCN replicates over 'model'."""
+    from ..core.generation import make_generator_fn
+    from ..core.pipeline import make_pipelined_step
+    from ..graph.subgraph import batch_specs
+    from ..models import gcn as gcn_mod
+    from ..train.optimizer import adam_update, init_adam
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axis = "data"
+    w = mesh.shape[axis]
+    cfg = dataclasses.replace(get_config("graphgen-gcn"), gcn_in_dim=128,
+                              gcn_hidden=256, n_classes=64)
+    k1, k2 = cfg.fanouts
+    n_nodes = 530_000_000
+    n_edges = 5_000_000_000
+    b = 128                                  # seeds per worker
+    rows = -(-n_nodes // w)
+    e_pad = -(-n_edges // w)
+    s = jax.ShapeDtypeStruct
+    i32, f32 = jnp.int32, jnp.float32
+    device_args = (
+        s((w, n_nodes + 1), i32),
+        s((w, e_pad), i32),
+        s((w * rows, cfg.gcn_in_dim), f32),
+        s((w * rows, 1), f32),
+    )
+    seeds = s((w, b), i32)
+    rng = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    gen_fn = make_generator_fn(mesh, k1=k1, k2=k2, axis_name=axis,
+                               merge_mode=merge_mode)
+    tcfg = TrainConfig()
+
+    def train_fn(params, opt, batch):
+        loss, grads = jax.value_and_grad(gcn_mod.gcn_loss)(params, batch)
+        params, opt, _ = adam_update(tcfg, params, grads, opt)
+        return params, opt, loss
+
+    params = jax.eval_shape(lambda: gcn_mod.init_gcn(cfg, jax.random.PRNGKey(0)))
+    opt = jax.eval_shape(lambda: init_adam(params))
+    batch0 = batch_specs(w * b, k1, k2, cfg.gcn_in_dim)
+    step = make_pipelined_step(gen_fn, train_fn)
+    t0 = time.time()
+    lowered = jax.jit(step).lower((params, opt, batch0), device_args, seeds, rng)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec.update(_artifact_stats(compiled, mesh.size, t_lower, time.time() - t0))
+    rec.update(
+        status="ok",
+        params=cfg.param_count(),
+        active_params=cfg.param_count(),
+        tokens=w * b * (1 + k1 + k1 * k2),   # padded node slots per iteration
+    )
+    return rec
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               attn: str = "naive", remat: str = "keep",
+               variant: str = "baseline", shard_heads: bool = False,
+               gen_merge: str = "butterfly", moe_impl: str = "gather",
+               seq_parallel: bool = False, compress: bool = False) -> dict:
+    cfg = get_config(arch)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant,
+    }
+    if arch == "graphgen-gcn":
+        rec["kind"] = "train"
+        return lower_gcn_cell(rec, multi_pod, merge_mode=gen_merge)
+    shape = SHAPES[shape_name]
+    rec["kind"] = shape.kind
+    if shape_name == "long_500k" and arch not in SUBQUADRATIC:
+        rec["status"] = "skipped"
+        rec["reason"] = ("quadratic-attention arch; long_500k runs on "
+                         "SSM/hybrid only (DESIGN.md §4)")
+        return rec
+    if attn != "naive":
+        L.set_attn_impl(attn)
+    if shard_heads:
+        L.set_shard_heads(True)
+    if seq_parallel:
+        L.set_seq_parallel(True)
+    if moe_impl != "gather":
+        from ..models import moe as moe_mod
+        moe_mod.set_moe_impl(moe_impl)
+    if remat != "keep":
+        cfg = dataclasses.replace(cfg, remat=remat)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    L.set_mesh(mesh)
+    api = zoo.build(cfg)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(compress_grads=compress)
+        params_shape = jax.eval_shape(api.init, jax.random.key(0))
+        state_shape = jax.eval_shape(lambda p: init_state(p, tcfg), params_shape)
+        pspecs = zoo.param_pspecs(cfg, params_shape, mesh)
+        state_specs = type(state_shape)(
+            params=pspecs,
+            opt=type(state_shape.opt)(
+                step=jax.sharding.PartitionSpec(), m=pspecs, v=pspecs
+            ),
+            error=pspecs if compress else None,
+        )
+        batch_shape = zoo.input_specs(cfg, shape)
+        batch_specs = zoo.batch_pspecs(cfg, batch_shape, mesh)
+        step = make_train_step(api.loss, tcfg, mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(zoo.to_shardings(mesh, state_specs),
+                          zoo.to_shardings(mesh, batch_specs)),
+            out_shardings=(zoo.to_shardings(mesh, state_specs), None),
+            donate_argnums=(0,),
+        )
+        lowered = jitted.lower(state_shape, batch_shape)
+    elif shape.kind == "prefill":
+        params_shape = jax.eval_shape(api.init, jax.random.key(0))
+        pspecs = zoo.param_pspecs(cfg, params_shape, mesh)
+        batch_shape = zoo.prefill_specs(cfg, shape)
+        batch_specs = zoo.batch_pspecs(cfg, batch_shape, mesh)
+        fwd = lambda p, b: zoo.forward_logits(cfg, p, b)
+        jitted = jax.jit(
+            fwd,
+            in_shardings=(zoo.to_shardings(mesh, pspecs),
+                          zoo.to_shardings(mesh, batch_specs)),
+        )
+        lowered = jitted.lower(params_shape, batch_shape)
+    else:  # decode
+        params_shape = jax.eval_shape(api.init, jax.random.key(0))
+        pspecs = zoo.param_pspecs(cfg, params_shape, mesh)
+        cache_shape = jax.eval_shape(
+            lambda: api.init_cache(shape.global_batch, shape.seq_len)
+        )
+        cache_specs = zoo.cache_pspecs(cfg, cache_shape, mesh)
+        batch_shape = zoo.input_specs(cfg, shape)
+        batch_specs = zoo.batch_pspecs(cfg, batch_shape, mesh)
+        pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def serve_step(params, cache, batch, pos):
+            return api.decode(params, cache, batch["tokens"], pos)
+
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(
+                zoo.to_shardings(mesh, pspecs),
+                zoo.to_shardings(mesh, cache_specs),
+                zoo.to_shardings(mesh, batch_specs),
+                None,
+            ),
+            out_shardings=(None, zoo.to_shardings(mesh, cache_specs)),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(params_shape, cache_shape, batch_shape, pos_shape)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec.update(_artifact_stats(compiled, chips, t_lower, time.time() - t0))
+    rec.update(
+        status="ok",
+        params=cfg.param_count(),
+        active_params=cfg.active_param_count(),
+        tokens=shape.global_batch
+        * (shape.seq_len if shape.kind in ("train", "prefill") else 1),
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(REGISTRY))
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--attn", default="naive", choices=["naive", "chunked"])
+    ap.add_argument("--remat", default="keep",
+                    choices=["keep", "none", "full", "dots"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--shard-heads", action="store_true")
+    ap.add_argument("--gen-merge", default="butterfly",
+                    choices=["butterfly", "reduce_scatter"])
+    ap.add_argument("--moe", default="gather", choices=["gather", "ep_a2a"])
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--compress", action="store_true",
+                    help="int8 error-feedback gradient compression")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args()
+    rec = lower_cell(args.arch, args.shape, args.multi_pod,
+                     attn=args.attn, remat=args.remat, variant=args.variant,
+                     shard_heads=args.shard_heads, gen_merge=args.gen_merge,
+                     moe_impl=args.moe, seq_parallel=args.seq_parallel,
+                     compress=args.compress)
+    line = json.dumps(rec)
+    print(line)
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(line + "\n")
+    if rec.get("status") not in ("ok", "skipped"):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

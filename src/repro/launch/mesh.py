@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state; the dry-run launcher
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any
+jax import and then calls it.
+
+Mesh layout (TPU v5e pods, 256 chips each):
+  single-pod:  (data=16, model=16)
+  multi-pod:   (pod=2, data=16, model=16)   — "pod" maps to the DCN axis;
+               gradient AllReduce crosses it once per step, everything else
+               stays intra-pod on ICI.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """Build a mesh from the first prod(shape) devices (the forced-host
+    device pool holds 512; the single-pod mesh uses 256 of them)."""
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {tuple(shape)}, have {len(devices)} — "
+            "dryrun.py must set XLA_FLAGS=--xla_force_host_platform_device_count"
+        )
+    grid = np.asarray(devices[:n]).reshape(tuple(shape))
+    return Mesh(grid, tuple(axes))
+
+
+def make_local_mesh(n_data: int = 1, n_model: int = 1) -> Mesh:
+    """Small mesh over (possibly forced-host) devices — tests/examples."""
+    return make_mesh((n_data, n_model), ("data", "model"))

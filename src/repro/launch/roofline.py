@@ -1,0 +1,128 @@
+"""Roofline analysis over dry-run results.
+
+Reads the sweep JSONL and derives, per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s          (197 TF bf16)
+    memory term     = HLO_bytes_per_device / HBM_bw               (819 GB/s)
+    collective term = collective_bytes_per_device / link_bw       (50 GB/s ICI)
+
+plus MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE), the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPs, the dominant term, and a step-time lower
+bound max(terms) (perfect overlap assumption).  Emits the markdown tables
+for EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m repro.launch.roofline --in dryrun_results.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+from ..core.config import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+# one decode step generates 1 token/sequence; 6*N_active*tokens is the
+# model-flops floor for train (fwd+bwd); 2*N_active for forward-only.
+_FWD_BWD = {"train": 6.0, "prefill": 2.0, "decode": 2.0}
+
+
+def analyse(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["chips"]
+    comp = rec["flops_per_device"] / PEAK_FLOPS_BF16
+    mem = rec["bytes_per_device"] / HBM_BW
+    coll = rec["collective_bytes_per_device"]["total"] / ICI_BW
+    terms = {"compute": comp, "memory": mem, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    model_flops = (
+        _FWD_BWD[rec["kind"]] * rec["active_params"] * rec["tokens"]
+    )
+    hlo_global = rec["flops_per_device"] * chips
+    useful = model_flops / hlo_global if hlo_global else 0.0
+    bound = max(terms.values())
+    mfu_bound = (model_flops / chips / PEAK_FLOPS_BF16) / bound if bound else 0.0
+    return {
+        **rec,
+        "compute_s": comp,
+        "memory_s": mem,
+        "collective_s": coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_ratio": useful,
+        "step_bound_s": bound,
+        "mfu_bound": mfu_bound,
+    }
+
+
+def _fmt(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def markdown_table(rows: list[dict], mesh: str) -> str:
+    out = [
+        f"### Mesh {mesh}",
+        "",
+        "| arch | shape | compute | memory | collective | dominant | "
+        "model/HLO FLOPs | MFU bound | HBM/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | — |"
+            )
+            continue
+        hbm = ""
+        if isinstance(r.get("memory"), dict):
+            tot = (r["memory"]["argument_bytes"] + r["memory"]["temp_bytes"]
+                   + r["memory"]["output_bytes"])
+            hbm = f"{tot/2**30:.1f}GiB"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt(r['compute_s'])} | "
+            f"{_fmt(r['memory_s'])} | {_fmt(r['collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['mfu_bound']*100:.1f}% | {hbm} |"
+        )
+    return "\n".join(out)
+
+
+def load(path: str) -> dict:
+    cells = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            key = (r["arch"], r["shape"], r["mesh"])
+            cells[key] = r          # later lines win (re-runs)
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="dryrun_results.jsonl")
+    ap.add_argument("--md", default=None, help="write markdown here")
+    args = ap.parse_args()
+    cells = load(args.inp)
+    by_mesh = defaultdict(list)
+    for (arch, shape, mesh), r in sorted(cells.items()):
+        a = analyse(r) or r
+        by_mesh[mesh].append(a)
+    md = []
+    for mesh in sorted(by_mesh):
+        md.append(markdown_table(by_mesh[mesh], mesh))
+        md.append("")
+    text = "\n".join(md)
+    print(text)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Run the full dry-run sweep: every (arch x shape) cell on the single-pod
+16x16 mesh AND the multi-pod 2x16x16 mesh, one fresh subprocess per cell
+(compile caches don't accumulate; one bad cell can't kill the sweep).
+
+    PYTHONPATH=src python -m repro.launch.sweep --out dryrun_results.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+
+def cells():
+    from ..configs import ASSIGNED_ARCHS
+    from ..core.config import SHAPES
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            for multi_pod in (False, True):
+                yield arch, shape, multi_pod
+    # the paper's own workload (530M nodes / 5B edges GCN pipeline)
+    yield "graphgen-gcn", "train_4k", False
+    yield "graphgen-gcn", "train_4k", True
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out: str, timeout: int) -> dict:
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", arch, "--shape", shape, "--out", out,
+    ]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    t0 = time.time()
+    try:
+        proc = subprocess.run(
+            cmd, capture_output=True, text=True, timeout=timeout, env=env
+        )
+        if proc.returncode != 0:
+            rec = {
+                "arch": arch, "shape": shape,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "error",
+                "stderr_tail": proc.stderr[-2000:],
+                "wall_s": round(time.time() - t0, 1),
+            }
+            with open(out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+            return rec
+        return {"status": "ok", "wall_s": round(time.time() - t0, 1)}
+    except subprocess.TimeoutExpired:
+        rec = {
+            "arch": arch, "shape": shape,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "status": "timeout", "wall_s": timeout,
+        }
+        with open(out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--only-missing", action="store_true")
+    args = ap.parse_args()
+
+    done = set()
+    if args.only_missing and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("status") in ("ok", "skipped"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+
+    todo = list(cells())
+    for i, (arch, shape, multi_pod) in enumerate(todo):
+        mesh = "2x16x16" if multi_pod else "16x16"
+        if (arch, shape, mesh) in done:
+            continue
+        r = run_cell(arch, shape, multi_pod, args.out, args.timeout)
+        print(f"[{i+1}/{len(todo)}] {arch} {shape} {mesh}: "
+              f"{r['status']} ({r.get('wall_s', '?')}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""End-to-end training driver.
+
+Two modes, selected by --arch:
+
+* ``graphgen-gcn`` (the paper): synthetic power-law graph -> coordinator
+  partitioning -> balance table -> synchronized distributed subgraph
+  generation + in-memory GCN training (the GraphGen+ pipeline), with
+  checkpoint/restart and optional failure injection.
+
+* any LM arch id: reduced-config training on synthetic token batches using
+  the same substrate (AdamW, microbatching, checkpointing).
+
+Examples:
+    PYTHONPATH=src python -m repro.launch.train --arch graphgen-gcn --steps 50
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --steps 10 --smoke
+    REPRO_FORCE_DEVICES=8 PYTHONPATH=src python -m repro.launch.train \
+        --arch graphgen-gcn --steps 30 --workers 8
+"""
+import os
+if os.environ.get("REPRO_FORCE_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={os.environ['REPRO_FORCE_DEVICES']} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+
+import argparse        # noqa: E402
+import time            # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np     # noqa: E402
+
+from ..configs import get_config, smoke_config          # noqa: E402
+from ..core.balance import balance_table                # noqa: E402
+from ..core.config import TrainConfig                   # noqa: E402
+from ..core.generation import make_distributed_generator  # noqa: E402
+from ..core.partition import partition_edges            # noqa: E402
+from ..core.pipeline import make_pipelined_step         # noqa: E402
+from ..graph.synthetic import node_features, node_labels, powerlaw_graph  # noqa: E402
+from ..models import gcn as gcn_mod                     # noqa: E402
+from ..models import zoo                                # noqa: E402
+from ..train import checkpoint as ckpt                  # noqa: E402
+from ..train.optimizer import adam_update, init_adam    # noqa: E402
+from ..train.train_loop import init_state, make_train_step  # noqa: E402
+from .mesh import make_mesh                             # noqa: E402
+
+
+def train_gcn(args) -> dict:
+    w = args.workers
+    mesh = make_mesh((w,), ("data",))
+    cfg = get_config("graphgen-gcn")
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    k1, k2 = cfg.fanouts
+
+    graph = powerlaw_graph(args.nodes, avg_degree=args.avg_degree,
+                           n_hot=max(args.nodes // 1000, 1), seed=args.seed)
+    part = partition_edges(graph, w)                       # step 1
+    feats = node_features(graph.n_nodes, cfg.gcn_in_dim, args.seed)
+    labels = node_labels(graph.n_nodes, cfg.n_classes, args.seed)
+    table = balance_table(np.arange(graph.n_nodes), w, args.seed)  # step 2
+
+    gen_fn, device_args = make_distributed_generator(     # step 3
+        mesh, part, feats, labels, k1=k1, k2=k2
+    )
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       checkpoint_every=args.ckpt_every)
+    params = gcn_mod.init_gcn(cfg, jax.random.PRNGKey(args.seed))
+    opt = init_adam(params)
+
+    def train_fn(params, opt, batch):                      # step 4
+        loss, grads = jax.value_and_grad(gcn_mod.gcn_loss)(params, batch)
+        params, opt, _ = adam_update(tcfg, params, grads, opt)
+        return params, opt, loss
+
+    start = 0
+    if args.resume and ckpt.latest_step(args.ckpt_dir) is not None:
+        start = ckpt.latest_step(args.ckpt_dir)
+        params, opt = ckpt.restore(args.ckpt_dir, start, (params, opt))
+        print(f"resumed from step {start}")
+
+    step = jax.jit(make_pipelined_step(gen_fn, train_fn))
+    b = args.batch_per_worker
+    rngs = jax.random.split(jax.random.PRNGKey(args.seed + 1), args.steps + 1)
+
+    def seeds_for(t):
+        sw = table.per_worker
+        cols = (np.arange(b) + t * b) % sw.shape[1]
+        return jnp.asarray(sw[:, cols])
+
+    batch = gen_fn(device_args, seeds_for(0), rngs[0])
+    carry = (params, opt, batch)
+    losses = []
+    t0 = time.perf_counter()
+    for t in range(start, args.steps):
+        carry, loss = step(carry, device_args, seeds_for(t + 1), rngs[t + 1])
+        losses.append(float(loss))
+        if (t + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, t + 1, (carry[0], carry[1]),
+                      keep=tcfg.keep_checkpoints)
+        if (t + 1) % args.log_every == 0:
+            print(f"step {t+1}: loss={losses[-1]:.4f}")
+    jax.block_until_ready(carry[0])
+    dt = time.perf_counter() - t0
+    nodes_per_iter = batch.nodes_per_iteration()
+    print(f"trained {args.steps - start} steps in {dt:.1f}s "
+          f"({nodes_per_iter} padded nodes/iter, "
+          f"{(args.steps - start) * nodes_per_iter / dt:,.0f} nodes/s)")
+    return {"losses": losses, "nodes_per_iter": nodes_per_iter, "wall_s": dt}
+
+
+def train_lm(args) -> dict:
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    api = zoo.build(cfg)
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       microbatches=args.microbatches)
+    params = api.init(jax.random.PRNGKey(args.seed))
+    state = init_state(params, tcfg)
+    step = jax.jit(make_train_step(api.loss, tcfg))
+
+    start = 0
+    if args.resume and ckpt.latest_step(args.ckpt_dir) is not None:
+        start = ckpt.latest_step(args.ckpt_dir)
+        state = ckpt.restore(args.ckpt_dir, start, state)
+        print(f"resumed from step {start}")
+
+    rng = np.random.default_rng(args.seed)
+    b, s = args.lm_batch, args.lm_seq
+    losses = []
+    t0 = time.perf_counter()
+    for t in range(start, args.steps):
+        toks = rng.integers(0, cfg.vocab_size, (b, s), dtype=np.int32)
+        batch = {"tokens": jnp.asarray(toks),
+                 "labels": jnp.asarray(np.roll(toks, -1, axis=1))}
+        if cfg.family == "vlm":
+            batch["vision"] = jnp.asarray(
+                rng.standard_normal((b, cfg.n_vision_tokens, cfg.d_vision),
+                                    dtype=np.float32))
+        if cfg.family == "audio":
+            batch["frames"] = jnp.asarray(
+                rng.standard_normal((b, cfg.n_audio_frames, cfg.d_audio),
+                                    dtype=np.float32))
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+        if (t + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, t + 1, state, keep=tcfg.keep_checkpoints)
+        if (t + 1) % args.log_every == 0:
+            print(f"step {t+1}: loss={losses[-1]:.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f}")
+    dt = time.perf_counter() - t0
+    print(f"trained {args.steps - start} steps in {dt:.1f}s")
+    return {"losses": losses, "wall_s": dt}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="graphgen-gcn")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--nodes", type=int, default=20_000)
+    ap.add_argument("--avg-degree", type=float, default=10.0)
+    ap.add_argument("--batch-per-worker", type=int, default=32)
+    ap.add_argument("--lm-batch", type=int, default=4)
+    ap.add_argument("--lm-seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    if args.arch == "graphgen-gcn":
+        train_gcn(args)
+    else:
+        train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""DeepSeek-V2-236B: Multi-head Latent Attention (MLA, kv_lora=512) +
+fine-grained MoE (2 shared + 160 routed experts, top-6).
+
+MLA stores only the compressed latent (c_kv [.., 512] and the decoupled
+RoPE key [.., 64]) in the decode cache — the 'absorbed' serving form
+(q projected into latent space; values reconstructed after attention),
+which is what makes decode_32k at batch 128 feasible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.config import ModelConfig
+from . import layers as L
+from .moe import init_moe_mlp, moe_forward
+
+
+def init_mla_stack(key, cfg: ModelConfig, n: int) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    vd = cfg.v_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wdq": L.stack_init(ks[0], n, (d, cfg.q_lora_rank)),
+        "wuq": L.stack_init(ks[1], n, (cfg.q_lora_rank, h * (nope + rope))),
+        "wdkv": L.stack_init(ks[2], n, (d, cfg.kv_lora_rank)),
+        "wkr": L.stack_init(ks[3], n, (d, rope)),
+        "wukv": L.stack_init(ks[4], n, (cfg.kv_lora_rank, h * (nope + vd))),
+        "wo": L.stack_init(ks[5], n, (h * vd, d)),
+        "lnq": jnp.ones((n, cfg.q_lora_rank), jnp.float32),
+        "lnkv": jnp.ones((n, cfg.kv_lora_rank), jnp.float32),
+    }
+
+
+def mla_train(p: dict, x: jax.Array, cfg: ModelConfig, pos: jax.Array) -> jax.Array:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    cq = L.rmsnorm(p["lnq"], x @ p["wdq"].astype(x.dtype), cfg.norm_eps)
+    q = L.shard_heads((cq @ p["wuq"].astype(x.dtype)).reshape(b, s, h, nope + rope))
+    qn, qr = q[..., :nope], q[..., nope:]
+    qr = L.apply_rope(qr, pos, cfg.rope_theta)
+    ckv = L.rmsnorm(p["lnkv"], x @ p["wdkv"].astype(x.dtype), cfg.norm_eps)
+    kr = L.apply_rope(
+        (x @ p["wkr"].astype(x.dtype))[:, :, None, :], pos, cfg.rope_theta
+    )                                                     # [B,S,1,rope]
+    kv = L.shard_heads((ckv @ p["wukv"].astype(x.dtype)).reshape(b, s, h, nope + vd))
+    kn, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate([kn, jnp.broadcast_to(kr, (b, s, h, rope))], axis=-1)
+    q_full = jnp.concatenate([qn, qr], axis=-1)
+    out = L.gqa_attention(q_full, k, v, causal=True,
+                          use_flash=cfg.use_flash_attention)
+    return out.reshape(b, s, h * vd) @ p["wo"].astype(x.dtype)
+
+
+def mla_decode(p, x, cfg, cache, pos):
+    """Absorbed MLA decode.  cache = (ckv [B,S,lora], kr [B,S,rope])."""
+    b, l, d = x.shape  # l == 1
+    h = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lora = cfg.kv_lora_rank
+    cq = L.rmsnorm(p["lnq"], x @ p["wdq"].astype(x.dtype), cfg.norm_eps)
+    q = (cq @ p["wuq"].astype(x.dtype)).reshape(b, h, nope + rope)
+    qn, qr = q[..., :nope], q[..., nope:]
+    qr = L.apply_rope(
+        qr[:, None], jnp.broadcast_to(pos[None, None], (b, 1)), cfg.rope_theta
+    )[:, 0]
+    # update cache
+    ckv_t = L.rmsnorm(p["lnkv"], x @ p["wdkv"].astype(x.dtype), cfg.norm_eps)
+    kr_t = L.apply_rope(
+        (x @ p["wkr"].astype(x.dtype))[:, :, None, :],
+        jnp.broadcast_to(pos[None, None], (b, 1)), cfg.rope_theta,
+    )[:, :, 0, :]
+    ckv_c, kr_c = cache
+    ckv_c = lax.dynamic_update_slice_in_dim(ckv_c, ckv_t.astype(ckv_c.dtype), pos, 1)
+    kr_c = lax.dynamic_update_slice_in_dim(kr_c, kr_t.astype(kr_c.dtype), pos, 1)
+    s = ckv_c.shape[1]
+    # absorb: q_nope into latent space via w_uk
+    wukv = p["wukv"].astype(x.dtype).reshape(lora, h, nope + vd)
+    wuk = wukv[..., :nope]                               # [lora, H, nope]
+    wuv = wukv[..., nope:]                               # [lora, H, vd]
+    q_lat = jnp.einsum("bhn,lhn->bhl", qn, wuk)          # [B, H, lora]
+    scores = (
+        jnp.einsum("bhl,bsl->bhs", q_lat, ckv_c.astype(x.dtype))
+        + jnp.einsum("bhr,bsr->bhs", qr, kr_c.astype(x.dtype))
+    ).astype(jnp.float32) / ((nope + rope) ** 0.5)
+    valid = jnp.arange(s)[None, None, :] < (pos + 1)
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhs,bsl->bhl", w, ckv_c.astype(x.dtype))
+    out = jnp.einsum("bhl,lhv->bhv", o_lat, wuv).reshape(b, h * vd)
+    out = out[:, None, :] @ p["wo"].astype(x.dtype)
+    return out, (ckv_c, kr_c)
+
+
+# ---------------------------------------------------------------- model ---
+def init_deepseek(cfg: ModelConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 5)
+    n_moe = cfg.n_layers - cfg.first_dense_layers
+    params = {
+        "embed": L.init_embed(ks[0], cfg),
+        "dense": {
+            "attn": init_mla_stack(ks[1], cfg, cfg.first_dense_layers),
+            "mlp": L.init_mlp_stack(ks[2], cfg.first_dense_layers,
+                                    cfg.d_model, cfg.d_ff),
+            "ln1": jnp.ones((cfg.first_dense_layers, cfg.d_model), jnp.float32),
+            "ln2": jnp.ones((cfg.first_dense_layers, cfg.d_model), jnp.float32),
+        },
+        "layers": {
+            "attn": init_mla_stack(ks[3], cfg, n_moe),
+            "moe": init_moe_mlp(ks[4], cfg, n_moe),
+            "ln1": jnp.ones((n_moe, cfg.d_model), jnp.float32),
+            "ln2": jnp.ones((n_moe, cfg.d_model), jnp.float32),
+        },
+    }
+    return params
+
+
+def _block_train(cfg, x, layer, pos, moe: bool):
+    h = mla_train(layer["attn"], L.rmsnorm(layer["ln1"], x, cfg.norm_eps), cfg, pos)
+    x = x + h
+    z = L.rmsnorm(layer["ln2"], x, cfg.norm_eps)
+    if moe:
+        x = x + moe_forward(layer["moe"], z, cfg)
+    else:
+        x = x + L.mlp_forward(layer["mlp"], z)
+    return L.shard_batch(x)
+
+
+def forward_train(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens)
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def dense_body(x, layer):
+        return L.maybe_remat(
+            lambda x, l: _block_train(cfg, x, l, pos, moe=False), cfg
+        )(x, layer), None
+
+    def moe_body(x, layer):
+        return L.maybe_remat(
+            lambda x, l: _block_train(cfg, x, l, pos, moe=True), cfg
+        )(x, layer), None
+
+    x, _ = lax.scan(dense_body, x, params["dense"])
+    x, _ = lax.scan(moe_body, x, params["layers"])
+    return L.lm_head(params["embed"], x, cfg)
+
+
+def loss_fn(cfg, params, batch):
+    return L.lm_loss(forward_train(cfg, params, batch["tokens"]), batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    return {
+        "ckv_dense": jnp.zeros(
+            (cfg.first_dense_layers, batch, seq, cfg.kv_lora_rank), jnp.bfloat16),
+        "kr_dense": jnp.zeros(
+            (cfg.first_dense_layers, batch, seq, cfg.qk_rope_head_dim), jnp.bfloat16),
+        "ckv": jnp.zeros(
+            (cfg.n_layers - cfg.first_dense_layers, batch, seq, cfg.kv_lora_rank),
+            jnp.bfloat16),
+        "kr": jnp.zeros(
+            (cfg.n_layers - cfg.first_dense_layers, batch, seq, cfg.qk_rope_head_dim),
+            jnp.bfloat16),
+    }
+
+
+def forward_decode(cfg, params, cache, tokens, pos):
+    b = tokens.shape[0]
+    x = L.embed_tokens(params["embed"], tokens)
+
+    def make_body(moe: bool):
+        def body(x, xs):
+            layer, ckv, kr = xs
+            h, (ckv, kr) = mla_decode(
+                layer["attn"], L.rmsnorm(layer["ln1"], x, cfg.norm_eps),
+                cfg, (ckv, kr), pos,
+            )
+            x = x + h
+            z = L.rmsnorm(layer["ln2"], x, cfg.norm_eps)
+            if moe:
+                x = x + moe_forward(layer["moe"], z, cfg)
+            else:
+                x = x + L.mlp_forward(layer["mlp"], z)
+            return x, (ckv, kr)
+        return body
+
+    x, (ckv_d, kr_d) = lax.scan(
+        make_body(False), x, (params["dense"], cache["ckv_dense"], cache["kr_dense"])
+    )
+    x, (ckv_m, kr_m) = lax.scan(
+        make_body(True), x, (params["layers"], cache["ckv"], cache["kr"])
+    )
+    logits = L.lm_head(params["embed"], x, cfg)[:, 0]
+    return logits, {"ckv_dense": ckv_d, "kr_dense": kr_d, "ckv": ckv_m, "kr": kr_m}

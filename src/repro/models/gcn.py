@@ -1,0 +1,74 @@
+"""GCN (Kipf & Welling) over fixed-fanout padded subgraph trees — the
+paper's training model (§3: mini-batch GCN on 2-hop (40, 20) subgraphs).
+
+Aggregation on a padded fanout tree is a masked mean over the fanout axis
+followed by a dense transform — the masked mean is the `gather_reduce`
+Pallas kernel's job on TPU (kernels/gather_reduce.py); here we route through
+``kernels.ops.fanout_mean`` which picks kernel vs reference implementation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.config import ModelConfig
+from ..graph.subgraph import SubgraphBatch
+from ..kernels import ops as kops
+
+
+class GCNParams(NamedTuple):
+    w1_self: jax.Array
+    w1_nbr: jax.Array
+    b1: jax.Array
+    w2_self: jax.Array
+    w2_nbr: jax.Array
+    b2: jax.Array
+    w_out: jax.Array
+    b_out: jax.Array
+
+
+def init_gcn(cfg: ModelConfig, rng: jax.Array) -> GCNParams:
+    d, h, c = cfg.gcn_in_dim, cfg.gcn_hidden, cfg.n_classes
+    ks = jax.random.split(rng, 5)
+    gl = jax.nn.initializers.glorot_uniform()
+    return GCNParams(
+        w1_self=gl(ks[0], (d, h)),
+        w1_nbr=gl(ks[1], (d, h)),
+        b1=jnp.zeros((h,)),
+        w2_self=gl(ks[2], (h, h)),
+        w2_nbr=gl(ks[3], (h, h)),
+        b2=jnp.zeros((h,)),
+        w_out=gl(ks[4], (h, c)),
+        b_out=jnp.zeros((c,)),
+    )
+
+
+def gcn_forward(params: GCNParams, batch: SubgraphBatch, use_kernel: bool = False):
+    """Bottom-up tree aggregation: hop2 -> hop1 -> seed."""
+    b, k1 = batch.hop1.shape
+    k2 = batch.hop2.shape[-1]
+    # layer 1 at hop-1 nodes: aggregate their (hop-2) neighbors
+    agg1 = kops.fanout_mean(
+        batch.x_hop2.reshape(b * k1, k2, -1),
+        batch.mask2.reshape(b * k1, k2),
+        use_kernel=use_kernel,
+    ).reshape(b, k1, -1)
+    h1 = jax.nn.relu(
+        batch.x_hop1 @ params.w1_self + agg1 @ params.w1_nbr + params.b1
+    )  # [b, k1, h]
+    # layer 2 at seeds: aggregate hop-1 hidden states
+    agg0 = kops.fanout_mean(h1, batch.mask1, use_kernel=use_kernel)  # [b, h]
+    h0_self = jax.nn.relu(
+        (batch.x_seed @ params.w1_self + params.b1)
+    )
+    h0 = jax.nn.relu(h0_self @ params.w2_self + agg0 @ params.w2_nbr + params.b2)
+    return h0 @ params.w_out + params.b_out  # [b, n_classes]
+
+
+def gcn_loss(params: GCNParams, batch: SubgraphBatch, use_kernel: bool = False):
+    logits = gcn_forward(params, batch, use_kernel=use_kernel)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, batch.labels[:, None], axis=1)[:, 0]
+    return nll.mean()

@@ -1,0 +1,143 @@
+"""Zamba2-1.2b hybrid: Mamba2 backbone (38 layers) + ONE shared GQA
+attention block (arXiv:2411.15242) applied after every ``attn_every``-th
+mamba layer — the same parameters at every application site (6 sites here),
+each site with its own KV cache.
+
+Train path: lax.scan over 6 groups of (6 mamba layers + shared attn), plus
+the 2 tail mamba layers.  The shared block's params are closure captures of
+the scan body — scanned-over xs carry only the mamba stacks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.config import ModelConfig
+from . import layers as L
+from .ssm import init_mamba_stack, mamba_train, mamba_decode, _dims
+
+
+def _n_sites(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def _grouped(cfg: ModelConfig):
+    sites = _n_sites(cfg)
+    return sites, cfg.n_layers - sites * cfg.attn_every
+
+
+def init_zamba2(cfg: ModelConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 5)
+    return {
+        "embed": L.init_embed(ks[0], cfg),
+        "mamba": init_mamba_stack(ks[1], cfg, cfg.n_layers),
+        "shared": {
+            "attn": L.init_attn(ks[2], cfg),
+            "mlp": L.init_mlp(ks[3], cfg.d_model, cfg.d_ff),
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        },
+    }
+
+
+def _shared_attn_train(cfg, shared, x, pos):
+    h, _ = L.attn_forward(
+        shared["attn"], L.rmsnorm(shared["ln1"], x, cfg.norm_eps), cfg, pos=pos
+    )
+    x = x + h
+    x = x + L.mlp_forward(shared["mlp"], L.rmsnorm(shared["ln2"], x, cfg.norm_eps))
+    return L.shard_batch(x)
+
+
+def forward_train(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens)
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    sites, tail = _grouped(cfg)
+    ae = cfg.attn_every
+    head = jax.tree.map(
+        lambda a: a[: sites * ae].reshape((sites, ae) + a.shape[1:]), params["mamba"]
+    )
+    tail_p = jax.tree.map(lambda a: a[sites * ae:], params["mamba"])
+    shared = params["shared"]
+
+    def mamba_body(x, layer):
+        out = x + mamba_train(layer, L.rmsnorm(layer["ln"], x, cfg.norm_eps), cfg)
+        return L.shard_batch(out), None
+
+    mamba_body = L.maybe_remat(mamba_body, cfg)
+
+    def group_body(x, group):
+        x, _ = lax.scan(mamba_body, x, group)
+        x = _shared_attn_train(cfg, shared, x, pos)
+        return x, None
+
+    x, _ = lax.scan(group_body, x, head)
+    x, _ = lax.scan(mamba_body, x, tail_p)
+    return L.lm_head(params["embed"], x, cfg)
+
+
+def loss_fn(cfg, params, batch):
+    return L.lm_loss(forward_train(cfg, params, batch["tokens"]), batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Mamba states are O(1); the shared attn sites keep per-site KV caches
+    of length ``seq`` (this is the part that scales with long_500k)."""
+    d_in, h, p, n = _dims(cfg)
+    ch = d_in + 2 * n
+    sites = _n_sites(cfg)
+    kvd = cfg.n_kv_heads * cfg.resolved_head_dim
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1, ch), jnp.bfloat16),
+        "k": jnp.zeros((sites, batch, seq, kvd), jnp.bfloat16),
+        "v": jnp.zeros((sites, batch, seq, kvd), jnp.bfloat16),
+    }
+
+
+def forward_decode(cfg, params, cache, tokens, pos):
+    b = tokens.shape[0]
+    x = L.embed_tokens(params["embed"], tokens)
+    qpos = jnp.broadcast_to(pos[None, None], (b, 1))
+    sites, tail = _grouped(cfg)
+    ae = cfg.attn_every
+    shared = params["shared"]
+
+    def mamba_step(x, xs):
+        layer, ssm, conv = xs
+        h, new = mamba_decode(
+            layer, L.rmsnorm(layer["ln"], x, cfg.norm_eps), cfg,
+            {"ssm": ssm, "conv": conv.astype(x.dtype)},
+        )
+        return x + h, (new["ssm"], new["conv"].astype(jnp.bfloat16))
+
+    def group_body(x, xs):
+        group, ssm, conv, kc, vc = xs
+        x, (ssm_n, conv_n) = lax.scan(mamba_step, x, (group, ssm, conv))
+        h, (kc, vc) = L.attn_forward(
+            shared["attn"], L.rmsnorm(shared["ln1"], x, cfg.norm_eps), cfg,
+            pos=qpos, cache=(kc, vc), cache_pos=pos,
+        )
+        x = x + h
+        x = x + L.mlp_forward(shared["mlp"], L.rmsnorm(shared["ln2"], x, cfg.norm_eps))
+        return x, (ssm_n, conv_n, kc, vc)
+
+    grp = lambda a: a[: sites * ae].reshape((sites, ae) + a.shape[1:])
+    head = jax.tree.map(grp, params["mamba"])
+    ssm_h, conv_h = grp(cache["ssm"]), grp(cache["conv"])
+    x, (ssm_n, conv_n, k_n, v_n) = lax.scan(
+        group_body, x, (head, ssm_h, conv_h, cache["k"], cache["v"])
+    )
+    tail_p = jax.tree.map(lambda a: a[sites * ae:], params["mamba"])
+    x, (ssm_t, conv_t) = lax.scan(
+        mamba_step, x, (tail_p, cache["ssm"][sites * ae:], cache["conv"][sites * ae:])
+    )
+    new_cache = {
+        "ssm": jnp.concatenate([ssm_n.reshape((-1,) + ssm_n.shape[2:]), ssm_t]),
+        "conv": jnp.concatenate([conv_n.reshape((-1,) + conv_n.shape[2:]), conv_t]),
+        "k": k_n,
+        "v": v_n,
+    }
+    return L.lm_head(params["embed"], x, cfg)[:, 0], new_cache

@@ -1,0 +1,350 @@
+"""Shared building blocks for the architecture zoo.
+
+Conventions:
+  * params are plain nested dicts of jnp arrays (pytrees) — no framework.
+  * per-layer params are STACKED on a leading [L] axis and consumed with
+    ``lax.scan`` (keeps HLO size O(1) in depth; MaxText-style).
+  * compute runs in bf16 (TPU MXU native), accumulation and softmax in f32;
+    master params stay f32.
+  * ``shard(x, spec)`` applies a sharding constraint when a mesh context is
+    installed (launch code calls ``set_mesh``); it is a no-op in unit tests.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core.config import ModelConfig
+from ..kernels import ops as kops
+
+_MESH = None
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+def dp_axes():
+    """Data-parallel axes: ('pod', 'data') on a multi-pod mesh."""
+    if _MESH is not None and "pod" in _MESH.axis_names:
+        return ("pod", "data")
+    return ("data",)
+
+
+def shard(x: jax.Array, *spec) -> jax.Array:
+    if _MESH is None:
+        return x
+    return lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*spec)))
+
+
+SEQ_PARALLEL = False   # shard the residual stream's seq axis over 'model'
+
+
+def set_seq_parallel(on: bool) -> None:
+    global SEQ_PARALLEL
+    SEQ_PARALLEL = on
+
+
+def shard_batch(x: jax.Array) -> jax.Array:
+    """Constrain leading axis to the data-parallel axes; with sequence
+    parallelism on (Megatron-SP style, perf variant) the sequence axis of
+    the [B, S, D] residual stream additionally shards over 'model', turning
+    per-block activation all-gathers into reduce-scatter/all-gather pairs
+    of 1/model_axis the volume."""
+    if _MESH is None:
+        return x
+    if (SEQ_PARALLEL and x.ndim >= 3
+            and x.shape[1] % _MESH.shape.get("model", 1) == 0):
+        return shard(x, dp_axes(), "model", *(None,) * (x.ndim - 2))
+    rest = (None,) * (x.ndim - 1)
+    return shard(x, dp_axes(), *rest)
+
+
+SHARD_HEADS = False   # tensor-parallel attention activations (perf variant)
+
+
+def set_shard_heads(on: bool) -> None:
+    global SHARD_HEADS
+    SHARD_HEADS = on
+
+
+def shard_heads(x: jax.Array, head_axis: int = 2) -> jax.Array:
+    """Megatron-style TP: keep [B, S, H, Dh] activations sharded on the
+    head axis over 'model' so per-head attention runs without gathering the
+    full head dimension on every device.  No-op when heads don't divide the
+    model axis or the variant is off."""
+    if _MESH is None or not SHARD_HEADS:
+        return x
+    m = _MESH.shape.get("model", 1)
+    if x.shape[head_axis] % m:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = dp_axes()
+    spec[head_axis] = "model"
+    return shard(x, *spec)
+
+
+# ---------------------------------------------------------------- init ----
+def dense_init(key, shape, scale: Optional[float] = None):
+    scale = scale if scale is not None else 0.02
+    return (jax.random.normal(key, shape) * scale).astype(jnp.float32)
+
+
+def stack_init(key, n: int, shape, scale=None):
+    return dense_init(key, (n,) + tuple(shape), scale)
+
+
+# ------------------------------------------------------------- norm/rope --
+def rmsnorm(w: jax.Array, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (w * (xf * lax.rsqrt(var + eps))).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x [..., L, H, Dh]; pos [..., L] (broadcastable int positions)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                     # [Dh/2]
+    angles = pos[..., None].astype(jnp.float32) * freqs  # [..., L, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]               # [..., L, 1, Dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention -
+def init_attn(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    kv_src = cfg.d_audio if (cross and cfg.family == "audio") else d
+    return {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd)),
+        "wk": dense_init(ks[1], (kv_src if cross else d, cfg.n_kv_heads * hd)),
+        "wv": dense_init(ks[2], (kv_src if cross else d, cfg.n_kv_heads * hd)),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d), scale=0.02 / max(cfg.n_layers, 1) ** 0.5),
+    }
+
+
+def init_attn_stack(key, cfg: ModelConfig, n: int) -> dict:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": stack_init(ks[0], n, (d, cfg.n_heads * hd)),
+        "wk": stack_init(ks[1], n, (d, cfg.n_kv_heads * hd)),
+        "wv": stack_init(ks[2], n, (d, cfg.n_kv_heads * hd)),
+        "wo": stack_init(ks[3], n, (cfg.n_heads * hd, d)),
+    }
+
+
+ATTN_IMPL = "naive"   # "naive" | "chunked" — set by perf configs / dryrun
+
+
+def set_attn_impl(impl: str) -> None:
+    global ATTN_IMPL
+    ATTN_IMPL = impl
+
+
+def chunked_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
+    block: int = 512,
+) -> jax.Array:
+    """Flash-style attention in pure jnp: iterate over query blocks so the
+    [B, H, Lq, Lk] score matrix never materializes (peak activation
+    [B, H, block, Lk] — Lq/block x smaller).  XLA-visible FLOPs, shards
+    like the naive path; the Pallas `flash_attention` kernel is the TPU
+    hot-path twin.  The loop body is rematerialized in the backward pass."""
+    b, lq, hq, dh = q.shape
+    hkv, lk = k.shape[2], k.shape[1]
+    group = hq // hkv
+    blk = min(block, lq)
+    if lq % blk:
+        blk = lq  # fallback: irregular sizes use one block
+    nb = lq // blk
+    qb = q.reshape(b, nb, blk, hkv, group, dh)
+    scale = 1.0 / (dh ** 0.5)
+
+    @jax.checkpoint
+    def one_block(args):
+        qi, start = args
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qi, k).astype(jnp.float32)
+        logits *= scale
+        if causal:
+            rows = start + jnp.arange(blk)[:, None] + (lk - lq)
+            cols = jnp.arange(lk)[None, :]
+            logits = jnp.where(rows >= cols, logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+
+    starts = jnp.arange(nb) * blk
+    out = lax.map(one_block, (jnp.moveaxis(qb, 1, 0), starts))  # [nb, b, blk, ...]
+    out = jnp.moveaxis(out, 0, 1).reshape(b, lq, hq, v.shape[-1])
+    return out
+
+
+def gqa_attention(
+    q: jax.Array,   # [B, Lq, Hq, Dh]
+    k: jax.Array,   # [B, Lk, Hkv, Dh]
+    v: jax.Array,
+    causal: bool,
+    use_flash: bool = False,
+    kv_valid_len: Optional[jax.Array] = None,   # decode: valid cache length
+) -> jax.Array:
+    b, lq, hq, dh = q.shape
+    hkv = k.shape[2]
+    if use_flash and kv_valid_len is None and lq % 128 == 0 and k.shape[1] % 128 == 0:
+        out = kops.flash_attention(
+            q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+            causal=causal, use_kernel=True,
+        )
+        return out.swapaxes(1, 2)
+    if ATTN_IMPL == "chunked" and kv_valid_len is None and lq > 512:
+        return chunked_attention(q, k, v, causal)
+    group = hq // hkv
+    qg = q.reshape(b, lq, hkv, group, dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    logits *= 1.0 / (dh ** 0.5)
+    lk = k.shape[1]
+    if causal and lq > 1:
+        qi = jnp.arange(lq)[:, None] + (lk - lq)
+        ki = jnp.arange(lk)[None, :]
+        logits = jnp.where(qi >= ki, logits, -1e30)
+    if kv_valid_len is not None:
+        ki = jnp.arange(lk)
+        mask = ki[None, :] < kv_valid_len
+        logits = jnp.where(mask[:, None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return out.reshape(b, lq, hq, v.shape[-1])
+
+
+def attn_forward(
+    p: dict, x: jax.Array, cfg: ModelConfig, *,
+    pos: jax.Array, causal: bool = True, rope: bool = True,
+    kv_x: Optional[jax.Array] = None,
+    cache: Optional[tuple] = None,         # (k_cache, v_cache) [B, S, Hkv*Dh]
+    cache_pos: Optional[jax.Array] = None, # scalar write position
+):
+    """Self- or cross-attention with optional KV cache (decode).
+
+    Returns (out, new_cache)."""
+    b, l, d = x.shape
+    hd = cfg.resolved_head_dim
+    src = x if kv_x is None else kv_x
+    q = shard_heads((x @ p["wq"].astype(x.dtype)).reshape(b, l, cfg.n_heads, hd))
+    k = shard_heads((src @ p["wk"].astype(x.dtype)).reshape(b, src.shape[1], cfg.n_kv_heads, hd))
+    v = shard_heads((src @ p["wv"].astype(x.dtype)).reshape(b, src.shape[1], cfg.n_kv_heads, hd))
+    if rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        kpos = pos if cache is None else cache_pos[None, None]
+        k = apply_rope(k, jnp.broadcast_to(kpos, (b, k.shape[1])), cfg.rope_theta)
+    new_cache = None
+    kv_valid = None
+    if cache is not None:
+        kc, vc = cache                                  # [B, S, Hkv*Dh]
+        s = kc.shape[1]
+        kc = lax.dynamic_update_slice_in_dim(
+            kc, k.reshape(b, l, -1).astype(kc.dtype), cache_pos, axis=1
+        )
+        vc = lax.dynamic_update_slice_in_dim(
+            vc, v.reshape(b, l, -1).astype(vc.dtype), cache_pos, axis=1
+        )
+        new_cache = (kc, vc)
+        k = kc.reshape(b, s, cfg.n_kv_heads, hd).astype(x.dtype)
+        v = vc.reshape(b, s, cfg.n_kv_heads, hd).astype(x.dtype)
+        kv_valid = cache_pos + l
+    out = gqa_attention(
+        q, k, v, causal=causal and cache is None,
+        use_flash=cfg.use_flash_attention, kv_valid_len=kv_valid,
+    )
+    out = out.reshape(b, l, cfg.n_heads * hd) @ p["wo"].astype(x.dtype)
+    return out, new_cache
+
+
+# ------------------------------------------------------------------ mlp ---
+def init_mlp(key, d: int, f: int) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(ks[0], (d, f)),
+        "wu": dense_init(ks[1], (d, f)),
+        "wd": dense_init(ks[2], (f, d)),
+    }
+
+
+def init_mlp_stack(key, n: int, d: int, f: int) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": stack_init(ks[0], n, (d, f)),
+        "wu": stack_init(ks[1], n, (d, f)),
+        "wd": stack_init(ks[2], n, (f, d)),
+    }
+
+
+def mlp_forward(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * (x @ p["wu"].astype(x.dtype))
+    return h @ p["wd"].astype(x.dtype)
+
+
+# ------------------------------------------------------------- embedding --
+def padded_vocab(cfg: ModelConfig, multiple: int = 256) -> int:
+    return -(-cfg.vocab_size // multiple) * multiple
+
+
+def init_embed(key, cfg: ModelConfig) -> dict:
+    v = padded_vocab(cfg)
+    ks = jax.random.split(key, 3)
+    out = {
+        "tok": dense_init(ks[0], (v, cfg.d_model), scale=0.01),
+        "norm_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        out["head"] = dense_init(ks[1], (cfg.d_model, v), scale=0.01)
+    return out
+
+
+def embed_tokens(params: dict, tokens: jax.Array) -> jax.Array:
+    x = params["tok"].astype(COMPUTE_DTYPE)[tokens]
+    return shard_batch(x)
+
+
+def lm_head(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = rmsnorm(params["norm_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["tok"].astype(x.dtype).T
+    else:
+        logits = x @ params["head"].astype(x.dtype)
+    rest = (None,) * (logits.ndim - 2)
+    return shard(logits.astype(jnp.float32), dp_axes(), *rest, "model")
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Cross entropy over the PADDED vocab (labels are < true vocab)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn

@@ -1,0 +1,193 @@
+"""Mamba-2 (SSD — state-space duality) backbone: mamba2-1.3b, and the block
+reused by the zamba2 hybrid.
+
+Train path uses the CHUNKED SSD form in pure jnp (XLA-visible FLOPs, shards
+over the mesh; the Pallas `ssd_scan` kernel is the TPU hot-path variant,
+selected with cfg.use_flash_attention? no — with use_kernel at the op site).
+Decode path is the O(1)-state recurrence — this is why mamba2/zamba2 are the
+two archs that RUN long_500k (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.config import ModelConfig
+from . import layers as L
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    p = cfg.ssm_head_dim or 64
+    h = cfg.ssm_heads or d_in // p
+    return d_in, h, p, cfg.ssm_state
+
+
+def init_mamba_stack(key, cfg: ModelConfig, n: int) -> dict:
+    d = cfg.d_model
+    d_in, h, p, nstate = _dims(cfg)
+    ch = d_in + 2 * nstate
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": L.stack_init(ks[0], n, (d, 2 * d_in + 2 * nstate + h)),
+        "conv_k": L.stack_init(ks[1], n, (cfg.conv_width, ch), scale=0.5),
+        "a_log": jnp.zeros((n, h), jnp.float32),          # a = -exp(a_log) = -1
+        "d_skip": jnp.ones((n, h), jnp.float32),
+        "dt_bias": jnp.zeros((n, h), jnp.float32),
+        "w_out": L.stack_init(ks[2], n, (d_in, d)),
+        "ln": jnp.ones((n, d), jnp.float32),
+    }
+
+
+def ssd_chunked(x, dt, a, bm, cm, chunk: int):
+    """Chunked SSD, pure jnp (same math as kernels/ssd_scan.py).
+
+    x [B,L,H,P], dt [B,L,H] (>0), a [H] (<0), bm/cm [B,L,N] -> y [B,L,H,P]."""
+    bsz, l, h, p = x.shape
+    n = bm.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0
+    nc = l // q
+    xr = x.reshape(bsz, nc, q, h, p)
+    dtr = dt.reshape(bsz, nc, q, h)
+    br = bm.reshape(bsz, nc, q, n)
+    cr = cm.reshape(bsz, nc, q, n)
+
+    adt = a[None, None, None, :] * dtr                     # [B,NC,Q,H]
+    cum = jnp.cumsum(adt, axis=2)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # [B,NC,Q,Q,H]
+    ii = jnp.arange(q)
+    tri = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    l_mat = jnp.where(tri, jnp.exp(seg) * dtr[:, :, None, :, :], 0.0)
+    scores = jnp.einsum("bnqc,bnkc->bnqk", cr, br)[..., None] * l_mat
+    y = jnp.einsum("bnqkh,bnkhp->bnqhp", scores, xr)
+    # chunk state summaries and inter-chunk associative scan
+    w = dtr * jnp.exp(cum[:, :, -1:, :] - cum)             # [B,NC,Q,H]
+    s_c = jnp.einsum("bnqhp,bnqk,bnqh->bnhpk", xr, br, w)  # [B,NC,H,P,N]
+    total = jnp.exp(cum[:, :, -1, :])                      # [B,NC,H]
+
+    def compose(u, v):
+        (t1, s1), (t2, s2) = u, v
+        return t1 * t2, s1 * t2[..., None, None] + s2
+
+    _, st_sc = lax.associative_scan(compose, (total, s_c), axis=1)
+    # state BEFORE chunk c = scan result of chunk c-1 (exclusive shift)
+    st_prev = jnp.concatenate(
+        [jnp.zeros_like(st_sc[:, :1]), st_sc[:, :-1]], axis=1
+    )
+    y = y + jnp.einsum(
+        "bnqk,bnqh,bnhpk->bnqhp", cr, jnp.exp(cum), st_prev
+    )
+    return y.reshape(bsz, l, h, p)
+
+
+def _causal_conv(x: jax.Array, k: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x [B,L,C], k [W,C]."""
+    w = k.shape[0]
+    out = x * k[-1]
+    for i in range(1, w):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * k[-1 - i]
+    return out
+
+
+def mamba_train(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """One mamba2 block over a full sequence.  x [B,L,D]."""
+    bsz, l, d = x.shape
+    d_in, h, pdim, n = _dims(cfg)
+    z_all = x @ p["w_in"].astype(x.dtype)                   # [B,L,2d_in+2N+H]
+    z, xc, bmat, cmat, dt = jnp.split(
+        z_all, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_k"].astype(x.dtype)))
+    xc, bmat, cmat = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xc.reshape(bsz, l, h, pdim)
+    y = ssd_chunked(
+        xh.astype(jnp.float32), dt, a,
+        bmat.astype(jnp.float32), cmat.astype(jnp.float32), cfg.ssm_chunk,
+    ).astype(x.dtype)
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = (y.reshape(bsz, l, d_in) * jax.nn.silu(z))
+    return y @ p["w_out"].astype(x.dtype)
+
+
+def mamba_decode(p: dict, x: jax.Array, cfg: ModelConfig, state: dict):
+    """One-token recurrent step.  x [B,1,D]; state = {"ssm" [B,H,P,N],
+    "conv" [B,W-1,C]}.  Cost independent of history length."""
+    bsz, _, d = x.shape
+    d_in, h, pdim, n = _dims(cfg)
+    z_all = (x[:, 0] @ p["w_in"].astype(x.dtype))
+    z, xc, bmat, cmat, dt = jnp.split(
+        z_all, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)     # [B, C]
+    hist = jnp.concatenate([state["conv"], conv_in[:, None]], axis=1)  # [B,W,C]
+    k = p["conv_k"].astype(x.dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, k))
+    new_conv = hist[:, 1:]
+    xc, bmat, cmat = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])          # [B,H]
+    a = -jnp.exp(p["a_log"])
+    xh = xc.reshape(bsz, h, pdim).astype(jnp.float32)
+    decay = jnp.exp(a[None] * dt)                                        # [B,H]
+    upd = dt[..., None, None] * (xh[..., None] * bmat.astype(jnp.float32)[:, None, None, :])
+    ssm = state["ssm"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm, cmat.astype(jnp.float32)).astype(x.dtype)
+    y = y + xh.astype(x.dtype) * p["d_skip"].astype(x.dtype)[None, :, None]
+    y = (y.reshape(bsz, d_in) * jax.nn.silu(z)) @ p["w_out"].astype(x.dtype)
+    return y[:, None], {"ssm": ssm, "conv": new_conv}
+
+
+# ---------------------------------------------------------------- model ---
+def init_mamba2(cfg: ModelConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "embed": L.init_embed(ks[0], cfg),
+        "layers": init_mamba_stack(ks[1], cfg, cfg.n_layers),
+    }
+
+
+def forward_train(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    x = L.embed_tokens(params["embed"], tokens)
+
+    def body(x, layer):
+        out = x + mamba_train(layer, L.rmsnorm(layer["ln"], x, cfg.norm_eps), cfg)
+        return L.shard_batch(out), None
+
+    body = L.maybe_remat(body, cfg)
+    x, _ = lax.scan(body, x, params["layers"])
+    return L.lm_head(params["embed"], x, cfg)
+
+
+def loss_fn(cfg, params, batch):
+    return L.lm_loss(forward_train(cfg, params, batch["tokens"]), batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Recurrent state: O(1) in seq — `seq` is accepted for interface parity
+    and ignored (the long_500k story)."""
+    d_in, h, p, n = _dims(cfg)
+    ch = d_in + 2 * n
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1, ch), jnp.bfloat16),
+    }
+
+
+def forward_decode(cfg, params, cache, tokens, pos):
+    x = L.embed_tokens(params["embed"], tokens)
+
+    def body(x, xs):
+        layer, ssm, conv = xs
+        h, new = mamba_decode(
+            layer, L.rmsnorm(layer["ln"], x, cfg.norm_eps), cfg,
+            {"ssm": ssm, "conv": conv.astype(x.dtype)},
+        )
+        return x + h, (new["ssm"], new["conv"].astype(jnp.bfloat16))
+
+    x, (ssm_n, conv_n) = lax.scan(body, x, (params["layers"], cache["ssm"], cache["conv"]))
+    return L.lm_head(params["embed"], x, cfg)[:, 0], {"ssm": ssm_n, "conv": conv_n}

@@ -1,0 +1,94 @@
+"""Dense decoder-only LM (llama family: smollm-135m/360m, stablelm-12b,
+llama3-405b).  Layer params are stacked [L, ...] and scanned."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.config import ModelConfig
+from . import layers as L
+
+
+def init_lm(cfg: ModelConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 4)
+    n = cfg.n_layers
+    return {
+        "embed": L.init_embed(ks[0], cfg),
+        "layers": {
+            "attn": L.init_attn_stack(ks[1], cfg, n),
+            "mlp": L.init_mlp_stack(ks[2], n, cfg.d_model, cfg.d_ff),
+            "ln1": jnp.ones((n, cfg.d_model), jnp.float32),
+            "ln2": jnp.ones((n, cfg.d_model), jnp.float32),
+        },
+    }
+
+
+def _block(cfg: ModelConfig, x, layer, pos, cache=None, cache_pos=None):
+    h, new_cache = L.attn_forward(
+        layer["attn"], L.rmsnorm(layer["ln1"], x, cfg.norm_eps), cfg,
+        pos=pos, cache=cache, cache_pos=cache_pos,
+    )
+    x = x + h
+    x = x + L.mlp_forward(layer["mlp"], L.rmsnorm(layer["ln2"], x, cfg.norm_eps))
+    return L.shard_batch(x), new_cache
+
+
+def forward_train(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens)
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(x, layer):
+        out, _ = _block(cfg, x, layer, pos)
+        return out, None
+
+    body = L.maybe_remat(body, cfg)
+    if cfg.scan_layers:
+        x, _ = lax.scan(body, x, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            layer = jax.tree.map(lambda a: a[i], params["layers"])
+            x, _ = body(x, layer)
+    return L.lm_head(params["embed"], x, cfg)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    logits = forward_train(cfg, params, batch["tokens"])
+    return L.lm_loss(logits, batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    kvd = cfg.n_kv_heads * cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, seq, kvd)
+    return {
+        "k": jnp.zeros(shape, jnp.bfloat16),
+        "v": jnp.zeros(shape, jnp.bfloat16),
+    }
+
+
+def forward_decode(
+    cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array, pos: jax.Array
+):
+    """One decode step.  tokens [B, 1]; pos scalar (current length).
+    Returns (logits [B, V], new_cache)."""
+    b = tokens.shape[0]
+    x = L.embed_tokens(params["embed"], tokens)
+    qpos = jnp.broadcast_to(pos[None, None], (b, 1))
+
+    def body(x, xs):
+        layer, kc, vc = xs
+        out, new_cache = _block(cfg, x, layer, qpos, cache=(kc, vc), cache_pos=pos)
+        return out, new_cache
+
+    if cfg.scan_layers:
+        x, (k_new, v_new) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            xs = jax.tree.map(lambda a: a[i], (params["layers"], cache["k"], cache["v"]))
+            x, (kn, vn) = body(x, xs)
+            ks.append(kn); vs.append(vn)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+    logits = L.lm_head(params["embed"], x, cfg)[:, 0]
+    return logits, {"k": k_new, "v": v_new}

@@ -1,0 +1,52 @@
+"""Int8 gradient compression with error feedback — for the cross-pod (DCN)
+AllReduce, where link bandwidth is ~20x below ICI.
+
+Per-tensor symmetric quantization; the residual (quantization error) is
+carried in f32 on the local worker and added back before the next step's
+quantization (error feedback guarantees the compression bias telescopes
+rather than accumulates — Karimireddy et al. 2019).
+
+Wire format cost: 1 byte/param + 1 f32 scale per tensor -> 4x less DCN
+traffic than f32, 2x less than bf16.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, error):
+    """-> (quantized tree of (q, scale) pairs, new error-feedback tree)."""
+    flat, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    out_q, out_e = [], []
+    for g, e in zip(flat, flat_e):
+        gf = g.astype(jnp.float32) + e
+        q, s = quantize(gf)
+        out_q.append((q, s))
+        out_e.append(gf - dequantize(q, s))
+    return jax.tree.unflatten(treedef, out_q), jax.tree.unflatten(treedef, out_e)
+
+
+def decompress_grads(packed):
+    return jax.tree.map(
+        lambda t: dequantize(*t),
+        packed,
+        is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2,
+    )

@@ -1,0 +1,87 @@
+"""Node-failure and straggler handling for the generation+training fleet.
+
+MapReduce (the paper's substrate) re-executes failed tasks transparently;
+an SPMD TPU job cannot — a lost worker means the job restarts on the
+surviving topology from the last checkpoint.  This module provides the
+orchestration for that story:
+
+  * ``FailureInjector``     — deterministic fault simulation for tests and
+    benchmarks (worker death at step k, transient slowdowns).
+  * ``recover_assignment``  — re-runs Algorithm 1's balance table over the
+    survivors so every remaining worker gets an equal seed share.
+  * ``run_with_recovery``   — the supervision loop: run -> on failure,
+    rebalance + restore latest checkpoint -> continue.  Paired with
+    ``checkpoint.py``'s elastic reshard, this covers shrink (node loss)
+    and grow (node return) without re-partitioning the graph.
+
+Straggler mitigation for *generation* is speculative re-execution in
+``data.loader.PrefetchLoader``; for the jitted SPMD step, stragglers are
+a hardware concern (there is no per-step reassignment inside a collective)
+— the knobs here are checkpoint cadence and backup pods.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..core.balance import BalanceTable, balance_table
+
+
+class WorkerFailure(RuntimeError):
+    def __init__(self, worker: int, step: int):
+        super().__init__(f"worker {worker} failed at step {step}")
+        self.worker = worker
+        self.step = step
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    fail_worker: Optional[int] = None
+    fail_at_step: Optional[int] = None
+    _tripped: bool = False
+
+    def check(self, step: int) -> None:
+        if (
+            not self._tripped
+            and self.fail_at_step is not None
+            and step >= self.fail_at_step
+        ):
+            self._tripped = True
+            raise WorkerFailure(self.fail_worker or 0, step)
+
+
+def recover_assignment(
+    table: BalanceTable, failed: list[int], seed: int = 1
+) -> BalanceTable:
+    """Rebuild the balance table over survivors (Algorithm 1 with |W|-f)."""
+    survivors = [w for w in range(table.n_workers) if w not in set(failed)]
+    if not survivors:
+        raise RuntimeError("no surviving workers")
+    pool = table.per_worker.reshape(-1)
+    return balance_table(pool, len(survivors), seed=seed)
+
+
+def run_with_recovery(
+    run_steps: Callable[[int, int, BalanceTable], int],
+    table: BalanceTable,
+    total_steps: int,
+    restore_step: Callable[[], int],
+    max_failures: int = 3,
+):
+    """Supervision loop.  ``run_steps(start, end, table)`` trains and may
+    raise WorkerFailure; ``restore_step()`` returns the last durable step.
+    Returns (completed_steps, failures_handled, final_table)."""
+    failures = 0
+    step = 0
+    while step < total_steps:
+        try:
+            step = run_steps(step, total_steps, table)
+        except WorkerFailure as f:
+            failures += 1
+            if failures > max_failures:
+                raise
+            table = recover_assignment(table, [f.worker], seed=failures)
+            step = restore_step()
+    return step, failures, table

@@ -1,0 +1,59 @@
+"""Load-Balanced Subgraph Mapping (Algorithm 1 lines 4-13)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balance import balance_table, load_skew, rebalance_on_failure
+
+
+def test_round_robin_exact_shares():
+    t = balance_table(np.arange(103), 4, seed=0)
+    assert t.per_worker.shape == (4, 25)      # floor(103/4) = 25
+    assert t.n_discarded == 3                 # 103 mod 4 discarded (Alg.1 l.6)
+
+
+def test_assignment_is_round_robin_over_shuffle():
+    t = balance_table(np.arange(40), 4, seed=1)
+    # seed_order[i] must be assigned to worker i mod W (Alg.1 l.11)
+    for i, s in enumerate(t.seed_order):
+        w = i % 4
+        assert s in t.per_worker[w]
+
+
+def test_no_duplicates_no_invention():
+    seeds = np.arange(1000, 1200)
+    t = balance_table(seeds, 7, seed=3)
+    flat = t.per_worker.reshape(-1)
+    assert len(np.unique(flat)) == len(flat)
+    assert set(flat).issubset(set(seeds.tolist()))
+
+
+def test_shuffle_avoids_sequential_bias():
+    t = balance_table(np.arange(64), 8, seed=0)
+    assert not np.array_equal(t.per_worker[0], np.arange(0, 64, 8))
+
+
+@settings(max_examples=50, deadline=None)
+@given(n_seeds=st.integers(1, 500), n_workers=st.integers(1, 32),
+       seed=st.integers(0, 10))
+def test_balance_invariants(n_seeds, n_workers, seed):
+    t = balance_table(np.arange(n_seeds), n_workers, seed=seed)
+    per = n_seeds // n_workers
+    assert t.per_worker.shape == (n_workers, per)
+    assert t.n_discarded == n_seeds - per * n_workers
+    assert load_skew(np.array([per] * n_workers)) == pytest.approx(1.0) or per == 0
+
+
+def test_rebalance_on_failure_preserves_seed_pool():
+    t = balance_table(np.arange(120), 6, seed=0)
+    t2 = rebalance_on_failure(t, failed=[2, 4])
+    assert t2.n_workers == 4
+    # survivors re-deal the full original pool (minus new remainder)
+    assert set(t2.per_worker.reshape(-1)).issubset(set(t.per_worker.reshape(-1)))
+    assert t2.per_worker.shape == (4, 120 // 4)
+
+
+def test_all_failed_raises():
+    t = balance_table(np.arange(10), 2, seed=0)
+    with pytest.raises(RuntimeError):
+        rebalance_on_failure(t, failed=[0, 1])

@@ -1,0 +1,90 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gather_reduce import fanout_mean_pallas, gather_reduce_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+@pytest.mark.parametrize("m,k,d", [(8, 4, 16), (37, 9, 130), (128, 20, 128), (5, 40, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fanout_mean(m, k, d, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k, d)).astype(dtype)
+    mask = jax.random.bernoulli(jax.random.PRNGKey(1), 0.7, (m, k))
+    got = fanout_mean_pallas(x, mask)
+    want = ref.fanout_mean_ref(x, mask)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,d,m,k", [(100, 64, 13, 5), (64, 128, 32, 20), (257, 96, 8, 40)])
+def test_gather_reduce(n, d, m, k):
+    table = jax.random.normal(jax.random.PRNGKey(2), (n, d))
+    idx = jax.random.randint(jax.random.PRNGKey(3), (m, k), 0, n)
+    mask = jax.random.bernoulli(jax.random.PRNGKey(4), 0.8, (m, k))
+    got = gather_reduce_pallas(table, idx, mask)
+    want = ref.gather_reduce_ref(table, idx, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,hq,hkv,lq,lk,dh", [
+    (1, 2, 2, 128, 128, 32),     # MHA square
+    (2, 4, 2, 128, 256, 64),     # GQA, decode-style longer k
+    (1, 8, 1, 256, 256, 64),     # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(b, hq, hkv, lq, lk, dh, causal):
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (b, hq, lq, dh))
+    k = jax.random.normal(ks[1], (b, hkv, lk, dh))
+    v = jax.random.normal(ks[2], (b, hkv, lk, dh))
+    got = flash_attention_pallas(q, k, v, causal=causal, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64)).astype(jnp.bfloat16)
+    got = flash_attention_pallas(q, k, v, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("b,l,h,p,n,chunk", [
+    (1, 32, 2, 8, 4, 8),
+    (2, 64, 3, 16, 8, 16),
+    (1, 128, 1, 32, 16, 128),    # single chunk == full quadratic path
+])
+def test_ssd_scan(b, l, h, p, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, l, n))
+    cm = jax.random.normal(ks[4], (b, l, n))
+    got = ssd_scan_pallas(x, dt, a, bm, cm, chunk=chunk)
+    want = ref.ssd_scan_ref(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_chunk_invariance():
+    """Output must not depend on the chunk size (the SSD identity)."""
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    x = jax.random.normal(ks[0], (1, 64, 2, 8))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 64, 2)))
+    a = -jnp.exp(jax.random.normal(ks[2], (2,)))
+    bm = jax.random.normal(ks[3], (1, 64, 4))
+    cm = jax.random.normal(ks[4], (1, 64, 4))
+    outs = [np.asarray(ssd_scan_pallas(x, dt, a, bm, cm, chunk=c))
+            for c in (8, 16, 32, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-4, atol=1e-4)

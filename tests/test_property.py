@@ -1,0 +1,89 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.generation import Candidates, merge_topk
+from repro.kernels import ref
+from repro.launch.hlo_analysis import shape_bytes
+from repro.models.ssm import ssd_chunked
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6))
+def test_merge_equals_global_topk(seed, k):
+    """Merging per-worker candidate sets == global min-k over the union —
+    the exact invariant the butterfly tree reduction relies on."""
+    rng = np.random.default_rng(seed)
+    parts = []
+    for _ in range(4):
+        parts.append(Candidates(
+            ids=jnp.asarray(rng.integers(0, 1000, (3, k), dtype=np.int32)),
+            keys=jnp.asarray(rng.uniform(0, 100, (3, k)).astype(np.float32)),
+        ))
+    merged = parts[0]
+    for p in parts[1:]:
+        merged = merge_topk(merged, p)
+    all_keys = np.concatenate([np.asarray(p.keys) for p in parts], axis=1)
+    want = np.sort(all_keys, axis=1)[:, :k]
+    np.testing.assert_allclose(np.sort(np.asarray(merged.keys), axis=1), want,
+                               rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fanout_mean_bounds(seed):
+    """Masked mean stays inside [min, max] of the contributing rows."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((5, 7, 9)).astype(np.float32))
+    mask = jnp.asarray(rng.random((5, 7)) < 0.8)
+    out = np.asarray(ref.fanout_mean_ref(x, mask))
+    xm = np.asarray(x)
+    for i in range(5):
+        sel = np.asarray(mask)[i]
+        if sel.any():
+            lo = xm[i][sel].min(axis=0) - 1e-5
+            hi = xm[i][sel].max(axis=0) + 1e-5
+            assert (out[i] >= lo).all() and (out[i] <= hi).all()
+        else:
+            np.testing.assert_array_equal(out[i], 0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from([4, 8, 16, 32]))
+def test_ssd_chunk_size_invariance(seed, chunk):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, 32, 2, 4)).astype(np.float32))
+    dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((1, 32, 2)).astype(np.float32)))
+    a = -jnp.exp(jnp.asarray(rng.standard_normal(2).astype(np.float32)))
+    bm = jnp.asarray(rng.standard_normal((1, 32, 3)).astype(np.float32))
+    cm = jnp.asarray(rng.standard_normal((1, 32, 3)).astype(np.float32))
+    got = ssd_chunked(x, dt, a, bm, cm, chunk)
+    want = ref.ssd_scan_ref(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@given(st.lists(st.integers(1, 64), min_size=1, max_size=4),
+       st.sampled_from(["f32", "bf16", "s32", "u8", "pred"]))
+def test_shape_bytes_parser(dims, dtype):
+    nbytes = {"f32": 4, "bf16": 2, "s32": 4, "u8": 1, "pred": 1}[dtype]
+    s = f"{dtype}[{','.join(map(str, dims))}]{{{','.join('0' * len(dims))}}}"
+    want = nbytes * int(np.prod(dims))
+    assert shape_bytes(s) == want
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_softmax_attention_rows_are_convex_combos(seed):
+    """flash-attention output rows are convex combinations of V rows."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, 1, 4, 8)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 1, 6, 8)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((1, 1, 6, 8)).astype(np.float32))
+    out = np.asarray(ref.flash_attention_ref(q, k, v, causal=False))
+    vm = np.asarray(v)[0, 0]
+    lo, hi = vm.min(axis=0) - 1e-5, vm.max(axis=0) + 1e-5
+    assert (out[0, 0] >= lo).all() and (out[0, 0] <= hi).all()

@@ -1,0 +1,149 @@
+"""Optimizer, checkpointing, compression, fault handling."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balance import balance_table
+from repro.core.config import TrainConfig
+from repro.train import checkpoint as ckpt
+from repro.train import compression
+from repro.train.fault import (FailureInjector, WorkerFailure,
+                               recover_assignment, run_with_recovery)
+from repro.train.optimizer import (adam_update, clip_by_global_norm,
+                                   init_adam, lr_schedule)
+
+
+# ------------------------------------------------------------- optimizer --
+def test_adam_converges_on_quadratic():
+    tcfg = TrainConfig(learning_rate=0.1, warmup_steps=0, total_steps=200,
+                       weight_decay=0.0, grad_clip=1e9)
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = init_adam(params)
+
+    @jax.jit
+    def step(params, state):
+        loss, g = jax.value_and_grad(
+            lambda p: jnp.sum((p["w"] - target) ** 2)
+        )(params)
+        params, state, _ = adam_update(tcfg, params, g, state)
+        return params, state, loss
+
+    for _ in range(200):
+        params, state, loss = step(params, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_lr_schedule_warmup_and_decay():
+    tcfg = TrainConfig(learning_rate=1.0, warmup_steps=10, total_steps=100)
+    assert float(lr_schedule(tcfg, jnp.int32(0))) == 0.0
+    assert float(lr_schedule(tcfg, jnp.int32(10))) == pytest.approx(1.0)
+    assert float(lr_schedule(tcfg, jnp.int32(100))) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(clipped["a"])), 1.0, rtol=1e-5
+    )
+
+
+# ------------------------------------------------------------ checkpoint --
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    d = str(tmp_path)
+    tree = {"w": jnp.arange(6.0).reshape(2, 3), "opt": {"m": jnp.ones(4)}}
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(d, s, tree, keep=2)
+    assert ckpt.latest_step(d) == 5
+    kept = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert len(kept) == 2                      # keep-last-k enforced
+    restored = ckpt.restore(d, 5, tree)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, {"x": jnp.zeros(2)})
+    assert not any(f.startswith("tmp.") for f in os.listdir(d))
+
+
+def test_checkpoint_restores_dtype(tmp_path):
+    d = str(tmp_path)
+    tree = {"x": jnp.ones(3, jnp.bfloat16)}
+    ckpt.save(d, 1, tree)
+    out = ckpt.restore(d, 1, tree)
+    assert out["x"].dtype == jnp.bfloat16
+
+
+# ----------------------------------------------------------- compression --
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_quantize_error_bound(seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(64).astype(np.float32) * 10)
+    q, s = compression.quantize(g)
+    err = np.abs(np.asarray(compression.dequantize(q, s)) - np.asarray(g))
+    assert err.max() <= float(s) / 2 + 1e-6
+
+
+def test_error_feedback_telescopes():
+    """Sum of compressed grads ~= sum of true grads (bias telescopes)."""
+    rng = np.random.default_rng(0)
+    grads = [{"w": jnp.asarray(rng.standard_normal(32).astype(np.float32))}
+             for _ in range(50)]
+    err = compression.init_error(grads[0])
+    total_c = np.zeros(32)
+    for g in grads:
+        packed, err = compression.compress_grads(g, err)
+        total_c += np.asarray(compression.decompress_grads(packed)["w"])
+    total = sum(np.asarray(g["w"]) for g in grads)
+    resid = np.abs(total_c - total).max()
+    # residual bounded by one quantization step, NOT growing with steps
+    assert resid < 0.2, resid
+
+
+# ----------------------------------------------------------------- fault --
+def test_failure_injector_and_recovery_loop():
+    table = balance_table(np.arange(96), 8, seed=0)
+    injector = FailureInjector(fail_worker=3, fail_at_step=7)
+    checkpoints = {"step": 0}
+
+    def run_steps(start, end, tbl):
+        for s in range(start, end):
+            injector.check(s)
+            if s % 5 == 0:
+                checkpoints["step"] = s
+        return end
+
+    done, failures, final = run_with_recovery(
+        run_steps, table, 20, restore_step=lambda: checkpoints["step"]
+    )
+    assert done == 20
+    assert failures == 1
+    assert final.n_workers == 7                      # rebuilt over survivors
+
+
+def test_recover_assignment_equal_shares():
+    table = balance_table(np.arange(100), 10, seed=1)
+    t2 = recover_assignment(table, failed=[0, 9])
+    assert t2.n_workers == 8
+    assert t2.per_worker.shape[1] == 100 // 10 * 10 // 8  # pool re-dealt
+
+
+def test_recovery_gives_up_after_max_failures():
+    table = balance_table(np.arange(8), 4, seed=0)
+
+    def always_fail(start, end, tbl):
+        raise WorkerFailure(1, start)
+
+    with pytest.raises(WorkerFailure):
+        run_with_recovery(always_fail, table, 10,
+                          restore_step=lambda: 0, max_failures=2)
