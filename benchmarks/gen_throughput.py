@@ -1,7 +1,8 @@
 """Paper §3 headline: subgraph-generation throughput.
 
-Compares the three generation strategies on the same graph and 2-hop
-(40, 20) sampling task:
+Compares the three generation strategies on the same graph and sampling
+task (default: the paper's 2-hop (40, 20) fanouts; the driver is
+depth-generic):
 
   * GraphGen+ edge-centric (parallel gather over the edge array)
   * traditional SQL-like  (per-hop JOIN against the full edge table)  — 27x
@@ -20,21 +21,27 @@ from repro.core.baselines import (edge_centric_sample, node_centric_sample,
                                   sql_like_sample)
 from repro.graph.synthetic import powerlaw_graph
 
+from repro.graph.subgraph import slots_per_seed
+
 from .common import time_fn
 
 
-def _two_hop(sampler, indptr, indices, seeds, k1, k2, rng):
-    r1, r2 = jax.random.split(rng)
-    ids1, m1 = sampler(indptr, indices, seeds, k1, r1)
-    frontier2 = ids1.reshape(-1)
-    ids2, m2 = sampler(indptr, indices, frontier2, k2, r2)
-    return ids1, m1, ids2, m2
+def _multi_hop(sampler, indptr, indices, seeds, fanouts, rng):
+    """L-hop expansion: each hop samples from the previous hop's flattened
+    ids (depth-generic version of the paper's 2-hop task)."""
+    rngs = jax.random.split(rng, max(len(fanouts), 2))
+    frontier = seeds
+    out = []
+    for level, k in enumerate(fanouts):
+        ids, m = sampler(indptr, indices, frontier, k, rngs[level])
+        out.append((ids, m))
+        frontier = ids.reshape(-1)
+    return out
 
 
-def bench(scale: bool = False) -> list[tuple]:
+def bench(scale: bool = False, fanouts: tuple = (40, 20)) -> list[tuple]:
     n_nodes = 20_000 if not scale else 60_000
     n_seeds = 256 if not scale else 1_189           # 1189*(1+40+800) > 1M
-    k1, k2 = 40, 20
     g = powerlaw_graph(n_nodes, avg_degree=10, n_hot=n_nodes // 500,
                        hot_degree=2_000, seed=0)
     indptr = jnp.asarray(g.indptr)
@@ -43,11 +50,11 @@ def bench(scale: bool = False) -> list[tuple]:
     src_j, dst_j = jnp.asarray(src), jnp.asarray(dst)
     seeds = jnp.arange(n_seeds, dtype=jnp.int32)
     rng = jax.random.PRNGKey(0)
-    nodes_per_iter = n_seeds * (1 + k1 + k1 * k2)
+    nodes_per_iter = n_seeds * slots_per_seed(fanouts)
 
-    edge = jax.jit(lambda s, r: _two_hop(
+    edge = jax.jit(lambda s, r: _multi_hop(
         lambda ip, ix, f, k, rr: edge_centric_sample(indptr, indices, f, k, rr),
-        indptr, indices, s, k1, k2, r))
+        indptr, indices, s, fanouts, r))
     t_edge = time_fn(edge, seeds, rng)
 
     rows = [
@@ -61,18 +68,18 @@ def bench(scale: bool = False) -> list[tuple]:
         return rows
 
     max_deg = int(g.degrees().max())
-    node = jax.jit(lambda s, r: _two_hop(
+    node = jax.jit(lambda s, r: _multi_hop(
         lambda ip, ix, f, k, rr: node_centric_sample(
             indptr, indices, f, k, rr, max_degree=max_deg),
-        indptr, indices, s, k1, k2, r))
+        indptr, indices, s, fanouts, r))
     t_node = time_fn(node, seeds, rng, warmup=1, iters=3)
     rows.append(
         ("gen_node_centric_agl", t_node,
          f"speedup_edge_vs_agl={t_node / t_edge:.1f}x(maxdeg={max_deg})"))
     if not scale:
-        sql = jax.jit(lambda s, r: _two_hop(
+        sql = jax.jit(lambda s, r: _multi_hop(
             lambda ip, ix, f, k, rr: sql_like_sample(src_j, dst_j, f, k, rr),
-            indptr, indices, s, k1, k2, r))
+            indptr, indices, s, fanouts, r))
         t_sql = time_fn(sql, seeds, rng, warmup=1, iters=3)
         rows.append(("gen_sql_like", t_sql,
                      f"speedup_edge_vs_sql={t_sql / t_edge:.1f}x(paper=27x)"))

@@ -33,7 +33,8 @@ def bench() -> list[tuple]:
     part = partition_edges(g, 1)
     feats = node_features(n, dim)
     labels = node_labels(n, classes)
-    gen, dev = make_distributed_generator(mesh, part, feats, labels, k1=k1, k2=k2)
+    gen, dev = make_distributed_generator(mesh, part, feats, labels,
+                                          fanouts=(k1, k2))
     cfg = dataclasses.replace(REGISTRY["graphgen-gcn"],
                               gcn_in_dim=dim, n_classes=classes,
                               gcn_hidden=256, fanouts=(k1, k2))

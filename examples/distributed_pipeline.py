@@ -31,7 +31,8 @@ from repro.train import checkpoint as ckpt               # noqa: E402
 from repro.train.fault import recover_assignment         # noqa: E402
 from repro.train.optimizer import adam_update, init_adam  # noqa: E402
 
-N, DIM, CLASSES, K1, K2, B = 20_000, 64, 8, 8, 4, 16
+N, DIM, CLASSES, B = 20_000, 64, 8, 16
+FANOUTS = (8, 4)
 ckpt_dir = tempfile.mkdtemp(prefix="graphgen_ckpt_")
 
 
@@ -41,7 +42,7 @@ def build(workers: int):
     mesh = make_mesh((workers,), ("data",))
     part = partition_edges(graph, workers)
     gen_fn, dev = make_distributed_generator(mesh, part, feats, labels,
-                                             k1=K1, k2=K2)
+                                             fanouts=FANOUTS)
     table = balance_table(np.arange(N), workers, seed=0)
     step = jax.jit(make_pipelined_step(gen_fn, train_fn))
     return gen_fn, dev, table, step
@@ -53,7 +54,7 @@ feats = node_features(N, DIM)
 labels = np.argmax(feats @ rng0.standard_normal((DIM, CLASSES)), 1).astype(np.int32)
 
 cfg = dataclasses.replace(get_config("graphgen-gcn"), gcn_in_dim=DIM,
-                          n_classes=CLASSES, gcn_hidden=128, fanouts=(K1, K2))
+                          n_classes=CLASSES, gcn_hidden=128, fanouts=FANOUTS)
 tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=0, total_steps=60)
 
 

@@ -23,7 +23,8 @@ from repro.models import gcn
 from repro.train.optimizer import adam_update, init_adam
 
 N_NODES, N_CLASSES, DIM = 5_000, 8, 64
-K1, K2 = 10, 5          # 2-hop fanouts (paper uses 40, 20 at cluster scale)
+FANOUTS = (10, 5)       # 2-hop fanouts (paper uses 40, 20 at cluster scale);
+                        # any depth works, e.g. (8,) or (15, 10, 5)
 STEPS, BATCH = 30, 64
 
 # ---- Step 1: Graph Partitioning (coordinator) -----------------------------
@@ -46,13 +47,13 @@ print(f"balance table: {table.seeds_per_worker} seeds/worker, "
 
 # ---- Step 3: Distributed (edge-centric) Subgraph Generation ---------------
 gen_fn, device_args = make_distributed_generator(
-    mesh, part, feats, labels, k1=K1, k2=K2)
+    mesh, part, feats, labels, fanouts=FANOUTS)
 
 # ---- Step 4: In-Memory Graph Learning (synchronized pipeline) --------------
 import dataclasses
 cfg = dataclasses.replace(get_config("graphgen-gcn"),
                           gcn_in_dim=DIM, n_classes=N_CLASSES,
-                          gcn_hidden=128, fanouts=(K1, K2))
+                          gcn_hidden=128, fanouts=FANOUTS)
 tcfg = TrainConfig(learning_rate=3e-3, total_steps=STEPS, warmup_steps=0)
 params = gcn.init_gcn(cfg, jax.random.PRNGKey(0))
 opt = init_adam(params)

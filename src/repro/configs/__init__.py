@@ -7,6 +7,8 @@ from ..core.config import ModelConfig, SHAPES, ShapeConfig
 from . import (
     deepseek_v2_236b,
     graphgen_gcn,
+    graphgen_gcn_deep,
+    graphgen_sage,
     llama32_vision_11b,
     llama3_405b,
     mamba2_1p3b,
@@ -24,10 +26,11 @@ REGISTRY: dict[str, ModelConfig] = {
         smollm_135m, smollm_360m, stablelm_12b, llama3_405b,
         qwen3_moe_30b_a3b, deepseek_v2_236b, llama32_vision_11b,
         whisper_small, mamba2_1p3b, zamba2_1p2b, graphgen_gcn,
+        graphgen_sage, graphgen_gcn_deep,
     )
 }
 
-ASSIGNED_ARCHS = [n for n in REGISTRY if n != "graphgen-gcn"]
+ASSIGNED_ARCHS = [n for n, c in REGISTRY.items() if c.family != "gcn"]
 
 # archs whose attention is quadratic-only: long_500k is skipped for them
 # (DESIGN.md §4); SSM/hybrid run it.
@@ -41,8 +44,11 @@ def get_config(name: str) -> ModelConfig:
 def smoke_config(cfg: ModelConfig) -> ModelConfig:
     """Reduced same-family config for CPU smoke tests."""
     if cfg.family == "gcn":
+        # shrink fanouts but keep the configured sampling depth
+        depth = max(len(cfg.fanouts), 1)
+        small = ((4, 3) + (2,) * depth)[:depth]
         return dataclasses.replace(cfg, gcn_in_dim=16, gcn_hidden=32, n_classes=5,
-                                   fanouts=(4, 3))
+                                   fanouts=small)
     hd = 16
     heads = max(cfg.n_heads // 4, 2) if cfg.n_heads else 0
     kv = max(cfg.n_kv_heads // 4, 1) if cfg.n_kv_heads else 0

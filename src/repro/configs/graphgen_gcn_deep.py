@@ -1,0 +1,9 @@
+"""3-hop deep-GCN workload: fanouts (15, 10, 5) — same padded-node budget
+order as the paper's (40, 20) but one more level of receptive field.
+Exercises the depth-3 path of the L-hop generation engine."""
+from ..core.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="graphgen-gcn-deep", family="gcn",
+    gcn_in_dim=128, gcn_hidden=256, n_classes=64, fanouts=(15, 10, 5),
+)

@@ -1,0 +1,8 @@
+"""1-hop GraphSAGE-style workload: single fanout (8,) — shallow sampling,
+wide batches.  Exercises the depth-1 path of the L-hop generation engine."""
+from ..core.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="graphgen-sage", family="gcn",
+    gcn_in_dim=128, gcn_hidden=256, n_classes=64, fanouts=(8,),
+)

@@ -76,7 +76,10 @@ class ModelConfig:
         """Analytic parameter count (used for 6ND roofline, not allocation)."""
         if self.family == "gcn":
             d, h = self.gcn_in_dim, self.gcn_hidden
-            return d * h + h + h * h + h + h * self.n_classes + self.n_classes
+            depth = max(len(self.fanouts), 1)
+            # per conv layer: self + neighbor transforms + bias
+            total = 2 * d * h + h + (depth - 1) * (2 * h * h + h)
+            return total + h * self.n_classes + self.n_classes
         hd = self.resolved_head_dim
         emb = self.vocab_size * self.d_model
         out = 0 if self.tie_embeddings else self.vocab_size * self.d_model

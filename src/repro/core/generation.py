@@ -6,23 +6,40 @@ nodes parallelize because their edge lists are split across partitions),
 then partial per-seed subgraphs are aggregated through a **tree reduction**
 to the seed's owner.
 
-TPU-native mapping (DESIGN.md §2):
+TPU-native mapping (DESIGN.md §2), generalized to arbitrary-depth fanout
+trees driven by ``fanouts = (k_1, ..., k_L)``:
 
-  1. frontier broadcast     — ``lax.all_gather`` of owned seeds.
-  2. local edge scan        — each worker samples ``k`` candidate neighbors
-                              per frontier node from its local CSR (a pure
-                              gather over the local edge array: fully
-                              parallel, no hot-node serialization).
+  1. frontier broadcast     — ``lax.all_gather`` of owned seeds; after each
+                              hop the merged sample becomes the next global
+                              frontier (every worker scans its local edges
+                              against ALL frontier nodes — edge-centric).
+  2. local edge scan        — each worker samples ``k_l`` candidate
+                              neighbors per frontier node from its local CSR
+                              (a pure gather over the local edge array:
+                              fully parallel, no hot-node serialization).
+                              Padded parents carry ``+inf`` keys, so they
+                              never spawn children — masks chain down the
+                              tree.
   3. tree aggregation       — candidates carry *weighted reservoir keys*
                               (exponential race, A-ES scheme): the merge
                               "keep the k smallest keys" is associative, so
-                              the butterfly ``tree_allreduce`` yields, at
-                              every worker, a weighted sample of the UNION
-                              of all workers' local edges — i.e. a uniform
-                              fanout sample of the global neighborhood.
+                              the butterfly ``tree_allreduce`` (or the
+                              recursive-halving ``tree_reduce_scatter``)
+                              yields a weighted sample of the UNION of all
+                              workers' local edges — i.e. a uniform fanout
+                              sample of the global neighborhood.
   4. feature shuffle        — dense node features are fetched from their
                               owner workers with a routed ``all_to_all``
-                              exchange (the MapReduce shuffle).
+                              exchange (the MapReduce shuffle).  The tree
+                              contains the same node id many times (hot
+                              neighbors, with-replacement sampling), so the
+                              shuffle is **request-deduplicated**: each
+                              distinct id crosses the interconnect once and
+                              the fetched row is scattered back to every
+                              slot that asked for it.  Requests beyond the
+                              per-destination capacity are *counted*
+                              (``SubgraphBatch.n_dropped``), never silently
+                              zero-filled.
 
 Edges sampled for several seeds are *replicated* into each seed's subgraph
 (paper step 3), which falls out of sampling per frontier slot.
@@ -30,7 +47,7 @@ Edges sampled for several seeds are *replicated* into each seed's subgraph
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,12 +58,21 @@ from jax.experimental.shard_map import shard_map
 
 from ..graph.subgraph import SubgraphBatch
 from .partition import PartitionedGraph
-from .tree_reduce import tree_allreduce, tree_reduce_scatter
+from .tree_reduce import axis_size, tree_allreduce, tree_reduce_scatter
 
 
 class Candidates(NamedTuple):
     ids: jax.Array    # [F, k] neighbor node ids
     keys: jax.Array   # [F, k] reservoir keys (+inf = invalid)
+
+
+class FetchStats(NamedTuple):
+    """Telemetry from one ``fetch_rows`` shuffle (per-worker scalars)."""
+    n_requests: jax.Array   # request slots presented (incl. duplicates)
+    n_unique: jax.Array     # distinct ids actually routed over the wire
+    n_dropped: jax.Array    # request SLOTS zero-filled by the capacity
+                            # bound (a dropped unique id counts once per
+                            # duplicate slot it would have served)
 
 
 def local_candidates(
@@ -87,37 +113,56 @@ def merge_topk(a: Candidates, b: Candidates) -> Candidates:
     return Candidates(ids=jnp.take_along_axis(ids, idx, axis=-1), keys=-neg)
 
 
-def fetch_rows(
+def dedup_requests(ids: jax.Array):
+    """Static-shape sort+segment unique (``jnp.unique`` needs dynamic sizes).
+
+    Returns ``(uniq, inverse, valid, n_unique)`` where ``uniq`` is a [R]
+    array whose first ``n_unique`` slots hold the distinct ids (the tail is
+    unspecified padding), ``inverse`` maps each original slot to its unique
+    slot (``uniq[inverse] == ids``), and ``valid[i] = i < n_unique``.
+    """
+    r = ids.shape[0]
+    order = jnp.argsort(ids)
+    s = ids[order]
+    is_first = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), s[1:] != s[:-1]])
+    group = (jnp.cumsum(is_first) - 1).astype(jnp.int32)     # [R], sorted
+    n_unique = group[-1] + 1
+    uniq = jnp.zeros((r,), ids.dtype).at[group].set(s)
+    inverse = jnp.zeros((r,), jnp.int32).at[order].set(group)
+    valid = jnp.arange(r, dtype=jnp.int32) < n_unique
+    return uniq, inverse, valid, n_unique
+
+
+def _routed_fetch(
     table_local: jax.Array,
     ids: jax.Array,
+    valid: jax.Array,
     axis_name: str,
-    capacity_slack: float = 2.0,
-) -> jax.Array:
-    """Routed remote row fetch (the MapReduce shuffle, as ``all_to_all``).
+    cap: int,
+    w: int,
+    rows: int,
+):
+    """One routed all_to_all round trip serving ``ids[valid]`` requests.
 
-    ``table_local`` is this worker's [rows, D] block of a row-sharded table;
-    global row ``i`` lives on worker ``i // rows``.  Every worker requests
-    ``ids`` [R] and receives the corresponding rows [R, D].
-
-    Per-destination capacity is ``ceil(R/W) * slack``; with shuffled seeds
-    the request load is near-multinomial so slack=2 virtually never drops —
-    dropped requests (beyond capacity) return zeros and are counted in
-    tests.  For W == 1 this degenerates to a local gather.
+    Returns ``(rows [R, D], served [R])`` — invalid slots return zero rows
+    with ``served=False``; valid slots beyond the per-destination capacity
+    ``cap`` also return zero rows with ``served=False`` (the caller decides
+    what counts as a drop).
     """
-    w = lax.axis_size(axis_name)
-    rows = table_local.shape[0]
     r = ids.shape[0]
-    if w == 1:
-        return table_local[jnp.clip(ids, 0, rows - 1)]
-    cap = int(min(r, -(-r // w) * capacity_slack + 8))
     owner = jnp.clip(ids // rows, 0, w - 1)
+    # invalid slots route to a sentinel bucket past the last worker so they
+    # neither consume capacity nor cross the interconnect
+    owner = jnp.where(valid, owner, w)
     order = jnp.argsort(owner)
     sorted_owner = owner[order]
     first = jnp.searchsorted(sorted_owner, sorted_owner, side="left")
     slot = jnp.arange(r, dtype=jnp.int32) - first
-    ok = slot < cap
-    # overflow requests go OUT OF BOUNDS so mode="drop" discards them
-    # (clipping would overwrite the request already in the last slot)
+    sorted_valid = sorted_owner < w
+    ok = jnp.logical_and(slot < cap, sorted_valid)
+    # overflow + sentinel requests go OUT OF BOUNDS so mode="drop" discards
+    # them (clipping would overwrite the request already in the last slot)
     slot_c = jnp.where(ok, slot, cap)
     send = jnp.zeros((w, cap), dtype=jnp.int32)
     send = send.at[sorted_owner, slot_c].set(ids[order], mode="drop")
@@ -126,10 +171,76 @@ def fetch_rows(
     local = jnp.clip(recv - me * rows, 0, rows - 1)
     served = table_local[local]                      # [w, cap, D]
     resp = lax.all_to_all(served, axis_name, split_axis=0, concat_axis=0, tiled=True)
-    got = resp[sorted_owner, jnp.clip(slot_c, 0, cap - 1)]   # [R, D] (sorted)
+    got = resp[jnp.clip(sorted_owner, 0, w - 1), jnp.clip(slot_c, 0, cap - 1)]
     got = jnp.where(ok[:, None], got, 0)
     out = jnp.zeros((r, table_local.shape[1]), table_local.dtype)
-    return out.at[order].set(got)
+    served = jnp.zeros((r,), jnp.bool_).at[order].set(ok)
+    return out.at[order].set(got), served
+
+
+def fetch_rows(
+    table_local: jax.Array,
+    ids: jax.Array,
+    axis_name: str,
+    capacity_slack: float = 2.0,
+    dedup: bool = True,
+    capacity: Optional[int] = None,
+    return_stats: bool = False,
+):
+    """Routed remote row fetch (the MapReduce shuffle, as ``all_to_all``).
+
+    ``table_local`` is this worker's [rows, D] block of a row-sharded table;
+    global row ``i`` lives on worker ``i // rows``.  Every worker requests
+    ``ids`` [R] and receives the corresponding rows [R, D].
+
+    With ``dedup=True`` (default) duplicate ids are collapsed before
+    routing: each distinct id occupies at most one wire slot and its row is
+    scattered back to every requesting slot.  A fanout tree's request list
+    is massively duplicated (hot neighbors, with-replacement sampling), so
+    at a given per-destination capacity this slashes the drop rate — and
+    because distinct requests per destination can never exceed the
+    destination's ``rows``, the default capacity is clamped to ``rows``
+    (shrinking the static exchange buffers).  Pass a smaller ``capacity``
+    sized to the expected unique count to shrink wire traffic further.
+
+    Per-destination capacity defaults to ``ceil(R/W) * slack`` (clamped as
+    above when dedup is on); requests beyond it return zero rows and are
+    counted per request slot — pass ``return_stats=True`` to receive
+    ``(out, FetchStats)`` instead of silently zero-filled rows.  For W == 1
+    this degenerates to a local gather (no routing, so ``n_unique`` is
+    reported as ``R``).
+    """
+    w = axis_size(axis_name)
+    rows = table_local.shape[0]
+    r = ids.shape[0]
+    if w == 1:
+        out = table_local[jnp.clip(ids, 0, rows - 1)]
+        if return_stats:
+            return out, FetchStats(jnp.int32(r), jnp.int32(r), jnp.int32(0))
+        return out
+    cap = capacity
+    if cap is None:
+        cap = int(min(r, -(-r // w) * capacity_slack + 8))
+        if dedup:
+            cap = min(cap, rows)    # ≤ rows distinct ids per destination
+    if dedup:
+        uniq, inverse, valid, n_unique = dedup_requests(ids)
+        rows_u, served_u = _routed_fetch(
+            table_local, uniq, valid, axis_name, cap, w, rows)
+        out = rows_u[inverse]
+        # a dropped unique id zero-fills EVERY duplicate slot it backed —
+        # count affected request slots, not wire slots
+        dropped = jnp.sum(~served_u[inverse])
+    else:
+        valid = jnp.ones((r,), jnp.bool_)
+        out, served = _routed_fetch(
+            table_local, ids, valid, axis_name, cap, w, rows)
+        dropped = jnp.sum(~served)
+        n_unique = jnp.int32(r)
+    if return_stats:
+        return out, FetchStats(jnp.int32(r), n_unique,
+                               dropped.astype(jnp.int32))
+    return out
 
 
 def _worker_generate(
@@ -140,76 +251,92 @@ def _worker_generate(
     seeds: jax.Array,        # [b] seeds owned by this worker (balance table row)
     rng: jax.Array,
     *,
-    k1: int,
-    k2: int,
+    fanouts: Tuple[int, ...],
     axis_name: str,
     merge_mode: str = "butterfly",
 ) -> SubgraphBatch:
+    """One worker's slice of an L-hop generation round (runs in shard_map).
+
+    Per hop: broadcast frontier -> ``local_candidates`` scan -> tree merge
+    (butterfly allreduce or recursive-halving reduce-scatter); the merged
+    global sample becomes the next frontier.  Masks chain so a padded
+    parent's subtree stays padded.  Then one deduplicated feature shuffle
+    fetches every node's row.
+    """
     b = seeds.shape[0]
     me = lax.axis_index(axis_name)
     rng = jax.random.fold_in(rng, me)
-    r1, r2 = jax.random.split(rng)
+    hop_rngs = jax.random.split(rng, max(len(fanouts), 2))
 
-    # --- hop 1: broadcast frontier, local edge scan, tree aggregation ---
-    frontier1 = lax.all_gather(seeds, axis_name, tiled=True)          # [B]
-    cand1 = local_candidates(indptr, indices, frontier1, k1, r1)
-    if merge_mode == "reduce_scatter":
-        # beyond-paper: recursive-halving merge — each worker materializes
-        # only ITS segment of the frontier (tree_reduce.py); ~4x less ICI
-        # traffic than the butterfly at W=16.
-        seg1 = tree_reduce_scatter(cand1, merge_topk, axis_name)      # [b, k1]
-        mask1 = jnp.isfinite(seg1.keys)
-        hop1 = jnp.where(mask1, seg1.ids, 0)
-        # hop-2 frontier must still be GLOBAL (edge-centric: every worker
-        # scans its local edges against all hop-1 nodes)
-        hop1_all = lax.all_gather(hop1, axis_name, tiled=True)        # [B, k1]
-        mask1_all = lax.all_gather(mask1, axis_name, tiled=True)
-    else:
-        cand1 = tree_allreduce(cand1, merge_topk, axis_name)          # [B, k1]
-        mask1_all = jnp.isfinite(cand1.keys)
-        hop1_all = jnp.where(mask1_all, cand1.ids, 0)
-        hop1 = lax.dynamic_slice_in_dim(hop1_all, me * b, b, 0)       # [b, k1]
-        mask1 = lax.dynamic_slice_in_dim(mask1_all, me * b, b, 0)
+    frontier = lax.all_gather(seeds, axis_name, tiled=True)   # [B] global
+    parent_mask = jnp.ones(frontier.shape, jnp.bool_)
+    hops, masks = [], []
+    shape = (b,)                # local tree shape accumulator
+    local_rows = b              # b * k_1 * ... * k_l (this worker's rows)
+    for level, k in enumerate(fanouts):
+        cand = local_candidates(indptr, indices, frontier, k, hop_rngs[level])
+        # padding must not spawn children:
+        cand = Candidates(
+            ids=cand.ids,
+            keys=jnp.where(parent_mask[:, None], cand.keys, jnp.inf),
+        )
+        if merge_mode == "reduce_scatter":
+            # beyond-paper: recursive-halving merge — each worker
+            # materializes only ITS segment of the frontier
+            # (tree_reduce.py); ~4x less ICI traffic than the butterfly
+            # at W=16.
+            seg = tree_reduce_scatter(cand, merge_topk, axis_name)
+            m = jnp.isfinite(seg.keys)                        # [rows_l, k]
+            h = jnp.where(m, seg.ids, 0)
+            # the next frontier must still be GLOBAL (edge-centric: every
+            # worker scans its local edges against all hop-l nodes)
+            h_all = lax.all_gather(h, axis_name, tiled=True)
+            m_all = lax.all_gather(m, axis_name, tiled=True)
+        else:
+            merged = tree_allreduce(cand, merge_topk, axis_name)  # [F, k]
+            m_all = jnp.isfinite(merged.keys)
+            h_all = jnp.where(m_all, merged.ids, 0)
+            h = lax.dynamic_slice_in_dim(h_all, me * local_rows, local_rows, 0)
+            m = lax.dynamic_slice_in_dim(m_all, me * local_rows, local_rows, 0)
+        shape = shape + (k,)
+        hops.append(h.reshape(shape))
+        masks.append(m.reshape(shape))
+        frontier = h_all.reshape(-1)                          # [F * k]
+        parent_mask = m_all.reshape(-1)
+        local_rows *= k
 
-    frontier2 = hop1_all.reshape(-1)                                  # [B*k1]
-    cand2 = local_candidates(indptr, indices, frontier2, k2, r2)
-    # hop-1 padding must not spawn hop-2 samples:
-    cand2 = Candidates(
-        ids=cand2.ids,
-        keys=jnp.where(mask1_all.reshape(-1)[:, None], cand2.keys, jnp.inf),
-    )
-    if merge_mode == "reduce_scatter":
-        seg2 = tree_reduce_scatter(cand2, merge_topk, axis_name)      # [b*k1, k2]
-        mask2 = jnp.isfinite(seg2.keys).reshape(b, k1, k2)
-        hop2 = jnp.where(jnp.isfinite(seg2.keys), seg2.ids, 0).reshape(b, k1, k2)
-    else:
-        cand2 = tree_allreduce(cand2, merge_topk, axis_name)          # [B*k1, k2]
-        mask2_all = jnp.isfinite(cand2.keys)
-        hop2_all = jnp.where(mask2_all, cand2.ids, 0)
-        hop2 = lax.dynamic_slice_in_dim(hop2_all, me * b * k1, b * k1, 0)
-        hop2 = hop2.reshape(b, k1, k2)
-        mask2 = lax.dynamic_slice_in_dim(mask2_all, me * b * k1, b * k1, 0)
-        mask2 = mask2.reshape(b, k1, k2)
+    # chain masks explicitly (the +inf-key propagation already implies this;
+    # keep the invariant structural, not sampler-dependent)
+    for level in range(1, len(masks)):
+        masks[level] = jnp.logical_and(masks[level], masks[level - 1][..., None])
 
-    # --- feature shuffle: fetch rows for every node in my subgraphs ---
-    need = jnp.concatenate([seeds, hop1.reshape(-1), hop2.reshape(-1)])
-    feats = fetch_rows(x_local, need, axis_name)
+    # --- feature shuffle: one deduplicated fetch for every node slot ---
+    need = jnp.concatenate([seeds] + [h.reshape(-1) for h in hops])
+    feats, fstats = fetch_rows(x_local, need, axis_name, return_stats=True)
     d = x_local.shape[1]
     x_seed = feats[:b]
-    x_hop1 = feats[b : b + b * k1].reshape(b, k1, d)
-    x_hop2 = feats[b + b * k1 :].reshape(b, k1, k2, d)
-    labels = fetch_rows(y_local, seeds, axis_name)[:, 0].astype(jnp.int32)
+    x_hops = []
+    off = b
+    n = b
+    for level, k in enumerate(fanouts):
+        n *= k
+        x = feats[off:off + n].reshape(masks[level].shape + (d,))
+        x_hops.append(x * masks[level][..., None])
+        off += n
+    # balance-table seeds are already distinct per worker — skip the dedup
+    # front end for the label fetch
+    ys, ystats = fetch_rows(y_local, seeds, axis_name, dedup=False,
+                            return_stats=True)
+    labels = ys[:, 0].astype(jnp.int32)
 
     return SubgraphBatch(
         seeds=seeds,
-        hop1=hop1,
-        mask1=mask1,
-        hop2=hop2,
-        mask2=jnp.logical_and(mask2, mask1[..., None]),
+        hops=tuple(hops),
+        masks=tuple(masks),
         x_seed=x_seed,
-        x_hop1=x_hop1 * mask1[..., None],
-        x_hop2=x_hop2 * mask2[..., None] * mask1[..., None, None],
+        x_hops=tuple(x_hops),
         labels=labels,
+        n_dropped=(fstats.n_dropped + ystats.n_dropped)[None],
     )
 
 
@@ -226,8 +353,7 @@ def shard_rows(table: np.ndarray, n_workers: int) -> np.ndarray:
 def make_generator_fn(
     mesh: Mesh,
     *,
-    k1: int = 40,
-    k2: int = 20,
+    fanouts: Tuple[int, ...] = (40, 20),
     axis_name: str = "data",
     merge_mode: str = "butterfly",
 ):
@@ -236,6 +362,8 @@ def make_generator_fn(
     ``gen_fn(device_args, seeds [W, b], rng) -> SubgraphBatch`` where
     ``device_args = (indptr [W,N+1], indices [W,E_pad], x [W*rows,D],
     y [W*rows,1])`` sharded on their leading axis."""
+    if not fanouts:
+        raise ValueError("fanouts must name at least one hop, got ()")
     graph_spec = P(axis_name)
     row_spec = P(axis_name)
     repl = P()
@@ -251,8 +379,8 @@ def make_generator_fn(
         return wrapped
 
     worker_fn = _squeeze_worker_axis(
-        functools.partial(_worker_generate, k1=k1, k2=k2, axis_name=axis_name,
-                          merge_mode=merge_mode)
+        functools.partial(_worker_generate, fanouts=tuple(fanouts),
+                          axis_name=axis_name, merge_mode=merge_mode)
     )
 
     def gen_fn(device_args, seeds, rng):
@@ -274,8 +402,7 @@ def make_distributed_generator(
     features: np.ndarray,
     labels: np.ndarray,
     *,
-    k1: int = 40,
-    k2: int = 20,
+    fanouts: Tuple[int, ...] = (40, 20),
     axis_name: str = "data",
     merge_mode: str = "butterfly",
 ):
@@ -287,7 +414,7 @@ def make_distributed_generator(
     assert part.n_workers == w, (part.n_workers, w)
     x = shard_rows(features.astype(np.float32), w)
     y = shard_rows(labels.reshape(-1, 1).astype(np.float32), w)
-    gen_fn = make_generator_fn(mesh, k1=k1, k2=k2, axis_name=axis_name,
+    gen_fn = make_generator_fn(mesh, fanouts=fanouts, axis_name=axis_name,
                                merge_mode=merge_mode)
     spec = NamedSharding(mesh, P(axis_name))
     device_args = (

@@ -95,7 +95,9 @@ def offline_loop(
     """GraphGen baseline: precompute-all -> store -> read -> train."""
     if train_step is None:
         train_step = jax.jit(train_fn)
-    rngs = jax.random.split(rng, len(seed_schedule))
+    # split one extra key exactly like pipelined_loop so batch t is generated
+    # from the SAME rngs[t] in both loops (split(k, n)[i] depends on n)
+    rngs = jax.random.split(rng, len(seed_schedule) + 1)
     t0 = time.perf_counter()
     storage = []
     for t, seeds in enumerate(seed_schedule):

@@ -69,7 +69,15 @@ class PrefetchLoader:
                 self._done[shard] = batch
                 self._inflight.pop(shard, None)
                 self._times.append(dt)
-            self._q.put((shard, batch))
+            # bounded put that keeps observing the stop flag — a plain
+            # blocking put() would deadlock a producer forever if the
+            # consumer goes away while the queue is full
+            while not self._stop.is_set():
+                try:
+                    self._q.put((shard, batch), timeout=0.05)
+                    break
+                except queue.Full:
+                    continue
 
     def _watch(self) -> None:
         """Speculative re-execution of stragglers."""
@@ -96,15 +104,36 @@ class PrefetchLoader:
             t.start()
         self._watchdog.start()
         served = 0
-        while served < self._n_shards:
-            shard, batch = self._q.get()
-            served += 1
-            yield batch
-        self._stop.set()
+        try:
+            while served < self._n_shards:
+                shard, batch = self._q.get()
+                served += 1
+                yield batch
+        finally:
+            # normal exhaustion AND early generator close both land here
+            self.stop()
 
     @property
     def backups_issued(self) -> int:
         return self._backups_issued
 
-    def stop(self) -> None:
+    def stop(self, join_timeout: float = 2.0) -> None:
+        """Shut down producers and the watchdog.
+
+        Drains the bounded queue so any producer blocked on a full queue can
+        observe the stop flag, then joins all threads.  Idempotent; safe to
+        call before iteration started (threads never started -> no join)."""
         self._stop.set()
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        me = threading.current_thread()
+        for t in self._threads + [self._watchdog]:
+            if t is not me and t.is_alive():
+                t.join(timeout=join_timeout)
+
+    def live_threads(self) -> list[threading.Thread]:
+        """Worker/watchdog threads still running (diagnostics + tests)."""
+        return [t for t in self._threads + [self._watchdog] if t.is_alive()]

@@ -1,3 +1,3 @@
 from .csr import CSRGraph
 from .synthetic import powerlaw_graph, node_features, node_labels
-from .subgraph import SubgraphBatch, batch_specs
+from .subgraph import SubgraphBatch, batch_specs, slots_per_seed

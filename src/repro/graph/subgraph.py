@@ -1,24 +1,30 @@
-"""Fixed-fanout padded subgraph batches.
+"""Fixed-fanout padded subgraph batches of arbitrary depth.
 
 MapReduce GraphGen+ emits ragged subgraphs; XLA needs static shapes, so we
-adopt the paper's own sampling configuration — 2-hop expansion with fanout
-(40, 20) — as a *fixed-fanout padded tree* with validity masks (DESIGN.md §2,
-"changed assumptions").
+represent an L-hop expansion with fanouts ``(k_1, ..., k_L)`` as a
+*fixed-fanout padded tree* with validity masks (DESIGN.md §2, "changed
+assumptions").  The paper's benchmark configuration is the 2-hop special
+case ``(40, 20)``; the layout below is depth-generic so 1-hop
+(GraphSAGE-style) and deep (3+ hop) sampling share the same engine.
 
-A batch of B seeds with fanouts (k1, k2) is:
-    seeds   [B]          int32
-    hop1    [B, k1]      int32 sampled 1-hop neighbor ids
-    mask1   [B, k1]      bool
-    hop2    [B, k1, k2]  int32 sampled 2-hop neighbor ids
-    mask2   [B, k1, k2]  bool
-    x_seed  [B, D]       float  features (collected during generation —
-    x_hop1  [B, k1, D]          the paper routes subgraph *data*, not ids,
-    x_hop2  [B, k1, k2, D]      through the tree reduction)
-    labels  [B]          int32
+A batch of B seeds with fanouts ``(k_1, ..., k_L)`` is:
+    seeds      [B]                      int32
+    hops[l]    [B, k_1, ..., k_{l+1}]   int32 sampled hop-(l+1) neighbor ids
+    masks[l]   [B, k_1, ..., k_{l+1}]   bool, chained: a padded parent's
+                                        whole subtree is masked out
+    x_seed     [B, D]                   float features (collected during
+    x_hops[l]  [B, k_1, .., k_{l+1}, D] generation — the paper routes
+                                        subgraph *data*, not ids, through
+                                        the tree reduction); padded slots
+                                        are zeroed
+    labels     [B]                      int32
+    n_dropped  [W]                      int32 per-worker count of feature-
+                                        shuffle requests dropped by the
+                                        capacity bound (0 in healthy runs)
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,39 +32,83 @@ import jax.numpy as jnp
 
 class SubgraphBatch(NamedTuple):
     seeds: jax.Array
-    hop1: jax.Array
-    mask1: jax.Array
-    hop2: jax.Array
-    mask2: jax.Array
+    hops: Tuple[jax.Array, ...]
+    masks: Tuple[jax.Array, ...]
     x_seed: jax.Array
-    x_hop1: jax.Array
-    x_hop2: jax.Array
+    x_hops: Tuple[jax.Array, ...]
     labels: jax.Array
+    n_dropped: jax.Array
 
     @property
     def batch_size(self) -> int:
         return self.seeds.shape[0]
 
+    @property
+    def depth(self) -> int:
+        return len(self.hops)
+
+    @property
+    def fanouts(self) -> Tuple[int, ...]:
+        return tuple(h.shape[-1] for h in self.hops)
+
+    # ---- 2-hop conveniences (the paper's benchmark layout) ----------------
+    @property
+    def hop1(self) -> jax.Array:
+        return self.hops[0]
+
+    @property
+    def mask1(self) -> jax.Array:
+        return self.masks[0]
+
+    @property
+    def x_hop1(self) -> jax.Array:
+        return self.x_hops[0]
+
+    @property
+    def hop2(self) -> jax.Array:
+        return self.hops[1]
+
+    @property
+    def mask2(self) -> jax.Array:
+        return self.masks[1]
+
+    @property
+    def x_hop2(self) -> jax.Array:
+        return self.x_hops[1]
+
     def nodes_per_iteration(self) -> int:
         """Total (padded) node slots materialized per iteration — the paper's
         '1M nodes per iteration' metric counts these."""
-        b, k1 = self.hop1.shape
-        k2 = self.hop2.shape[-1]
-        return b * (1 + k1 + k1 * k2)
+        return self.batch_size * slots_per_seed(self.fanouts)
 
 
-def batch_specs(batch: int, k1: int, k2: int, dim: int):
+def slots_per_seed(fanouts: Tuple[int, ...]) -> int:
+    """Padded node slots per seed: 1 + k1 + k1*k2 + ... (tree size)."""
+    total, level = 1, 1
+    for k in fanouts:
+        level *= k
+        total += level
+    return total
+
+
+def batch_specs(batch: int, fanouts: Tuple[int, ...], dim: int,
+                n_workers: int = 1):
     """ShapeDtypeStruct stand-ins for a SubgraphBatch (dry-run input)."""
     f32, i32 = jnp.float32, jnp.int32
     s = jax.ShapeDtypeStruct
+    shape = (batch,)
+    hops, masks, x_hops = [], [], []
+    for k in fanouts:
+        shape = shape + (k,)
+        hops.append(s(shape, i32))
+        masks.append(s(shape, jnp.bool_))
+        x_hops.append(s(shape + (dim,), f32))
     return SubgraphBatch(
         seeds=s((batch,), i32),
-        hop1=s((batch, k1), i32),
-        mask1=s((batch, k1), jnp.bool_),
-        hop2=s((batch, k1, k2), i32),
-        mask2=s((batch, k1, k2), jnp.bool_),
+        hops=tuple(hops),
+        masks=tuple(masks),
         x_seed=s((batch, dim), f32),
-        x_hop1=s((batch, k1, dim), f32),
-        x_hop2=s((batch, k1, k2, dim), f32),
+        x_hops=tuple(x_hops),
         labels=s((batch,), i32),
+        n_dropped=s((n_workers,), i32),
     )

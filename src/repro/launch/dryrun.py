@@ -32,12 +32,12 @@ from ..core.config import SHAPES, TrainConfig              # noqa: E402
 from ..models import layers as L                           # noqa: E402
 from ..models import zoo                                   # noqa: E402
 from ..train.train_loop import init_state, make_train_step # noqa: E402
-from .hlo_analysis import collective_bytes, trip_weighted_cost  # noqa: E402
+from .hlo_analysis import collective_bytes, trip_weighted_cost, xla_cost  # noqa: E402
 from .mesh import make_production_mesh                     # noqa: E402
 
 
 def _artifact_stats(compiled, chips: int, t_lower: float, t_compile: float) -> dict:
-    cost = compiled.cost_analysis() or {}
+    cost = xla_cost(compiled)
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     out = dict(
@@ -62,24 +62,27 @@ def _artifact_stats(compiled, chips: int, t_lower: float, t_compile: float) -> d
     return out
 
 
-def lower_gcn_cell(rec: dict, multi_pod: bool, merge_mode: str = "butterfly") -> dict:
+def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
+                   merge_mode: str = "butterfly") -> dict:
     """The paper's own workload at production scale: one synchronized
     generation+training step on a 530M-node / 5B-edge graph (the paper's
-    evaluation graph), 2-hop (40, 20) sampling, ~1.7M padded nodes per
-    iteration.  Generation shards over 'data' (the worker axis); the small
-    GCN replicates over 'model'."""
+    evaluation graph).  The sampling depth comes from the arch config —
+    2-hop (40, 20) for the paper cell, 1-hop for graphgen-sage, 3-hop for
+    graphgen-gcn-deep (~1.7M padded nodes per iteration at (40, 20)).
+    Generation shards over 'data' (the worker axis); the small GCN
+    replicates over 'model'."""
     from ..core.generation import make_generator_fn
     from ..core.pipeline import make_pipelined_step
-    from ..graph.subgraph import batch_specs
+    from ..graph.subgraph import batch_specs, slots_per_seed
     from ..models import gcn as gcn_mod
     from ..train.optimizer import adam_update, init_adam
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     axis = "data"
     w = mesh.shape[axis]
-    cfg = dataclasses.replace(get_config("graphgen-gcn"), gcn_in_dim=128,
+    cfg = dataclasses.replace(get_config(arch), gcn_in_dim=128,
                               gcn_hidden=256, n_classes=64)
-    k1, k2 = cfg.fanouts
+    fanouts = cfg.fanouts
     n_nodes = 530_000_000
     n_edges = 5_000_000_000
     b = 128                                  # seeds per worker
@@ -95,7 +98,7 @@ def lower_gcn_cell(rec: dict, multi_pod: bool, merge_mode: str = "butterfly") ->
     )
     seeds = s((w, b), i32)
     rng = jax.eval_shape(lambda: jax.random.PRNGKey(0))
-    gen_fn = make_generator_fn(mesh, k1=k1, k2=k2, axis_name=axis,
+    gen_fn = make_generator_fn(mesh, fanouts=fanouts, axis_name=axis,
                                merge_mode=merge_mode)
     tcfg = TrainConfig()
 
@@ -106,7 +109,7 @@ def lower_gcn_cell(rec: dict, multi_pod: bool, merge_mode: str = "butterfly") ->
 
     params = jax.eval_shape(lambda: gcn_mod.init_gcn(cfg, jax.random.PRNGKey(0)))
     opt = jax.eval_shape(lambda: init_adam(params))
-    batch0 = batch_specs(w * b, k1, k2, cfg.gcn_in_dim)
+    batch0 = batch_specs(w * b, fanouts, cfg.gcn_in_dim, n_workers=w)
     step = make_pipelined_step(gen_fn, train_fn)
     t0 = time.time()
     lowered = jax.jit(step).lower((params, opt, batch0), device_args, seeds, rng)
@@ -118,7 +121,7 @@ def lower_gcn_cell(rec: dict, multi_pod: bool, merge_mode: str = "butterfly") ->
         status="ok",
         params=cfg.param_count(),
         active_params=cfg.param_count(),
-        tokens=w * b * (1 + k1 + k1 * k2),   # padded node slots per iteration
+        tokens=w * b * slots_per_seed(fanouts),   # padded node slots per iter
     )
     return rec
 
@@ -134,9 +137,9 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "variant": variant,
     }
-    if arch == "graphgen-gcn":
+    if cfg.family == "gcn":
         rec["kind"] = "train"
-        return lower_gcn_cell(rec, multi_pod, merge_mode=gen_merge)
+        return lower_gcn_cell(rec, arch, multi_pod, merge_mode=gen_merge)
     shape = SHAPES[shape_name]
     rec["kind"] = shape.kind
     if shape_name == "long_500k" and arch not in SUBQUADRATIC:

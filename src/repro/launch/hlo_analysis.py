@@ -68,6 +68,16 @@ def _split_computations(hlo: str) -> dict[str, list[str]]:
     return comps
 
 
+def xla_cost(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: newer
+    versions return a dict, older ones a one-element list of dicts (or None
+    on some backends)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def _entry_name(hlo: str) -> str | None:
     m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
     return m.group(1) if m else None
@@ -144,7 +154,10 @@ def _symbols(lines: list[str]) -> dict[str, str]:
 
 def _dot_flops(line: str, table: dict[str, str], out_shape: str) -> float:
     """FLOPs of a dot: 2 * prod(output dims) * prod(lhs contracting dims)."""
-    ops = re.search(r"dot\(\s*%?([\w\.\-]+)\s*,", line)
+    # operands may carry inline types: ``dot(f32[128,256]{1,0} %lhs, ...)``
+    ops = re.search(
+        r"dot\(\s*(?:[a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})?\s+)?%?([\w\.\-]+)\s*,",
+        line)
     cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
     out_elems = 1
     for dt, dims in _SHAPE_RE.findall(out_shape):
@@ -213,8 +226,12 @@ def trip_weighted_cost(hlo: str) -> dict[str, float]:
                 opnds = []
                 args = re.search(rf"{op}\(([^)]*)\)", line)
                 if args:
-                    for a in args.group(1).split(","):
-                        a = a.strip().lstrip("%")
+                    # operand lists may carry inline types whose dims contain
+                    # commas — pull %names first, fall back to a bare split
+                    names = re.findall(r"%([\w\.\-]+)", args.group(1))
+                    if not names:
+                        names = [a.strip() for a in args.group(1).split(",")]
+                    for a in names:
                         if a in table:
                             opnds.append(shape_bytes(table[a]))
                 if op in ("gather", "dynamic-slice"):

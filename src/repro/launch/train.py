@@ -48,10 +48,21 @@ from .mesh import make_mesh                             # noqa: E402
 def train_gcn(args) -> dict:
     w = args.workers
     mesh = make_mesh((w,), ("data",))
-    cfg = get_config("graphgen-gcn")
+    cfg = get_config(args.arch)
+    if args.fanouts:
+        import dataclasses
+        try:
+            fo = tuple(int(k) for k in args.fanouts.split(","))
+        except ValueError:
+            raise SystemExit(
+                f"--fanouts expects comma-separated ints (e.g. 15,10,5), "
+                f"got {args.fanouts!r}")
+        if not fo or any(k < 1 for k in fo):
+            raise SystemExit(f"--fanouts entries must be >= 1, got {fo}")
+        cfg = dataclasses.replace(cfg, fanouts=fo)
     if args.smoke:
         cfg = smoke_config(cfg)
-    k1, k2 = cfg.fanouts
+    fanouts = cfg.fanouts
 
     graph = powerlaw_graph(args.nodes, avg_degree=args.avg_degree,
                            n_hot=max(args.nodes // 1000, 1), seed=args.seed)
@@ -61,7 +72,7 @@ def train_gcn(args) -> dict:
     table = balance_table(np.arange(graph.n_nodes), w, args.seed)  # step 2
 
     gen_fn, device_args = make_distributed_generator(     # step 3
-        mesh, part, feats, labels, k1=k1, k2=k2
+        mesh, part, feats, labels, fanouts=fanouts
     )
     tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                        checkpoint_every=args.ckpt_every)
@@ -157,6 +168,8 @@ def train_lm(args) -> dict:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="graphgen-gcn")
+    ap.add_argument("--fanouts", default=None,
+                    help="comma-separated per-hop fanouts override, e.g. 15,10,5")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--nodes", type=int, default=20_000)
@@ -173,7 +186,7 @@ def main() -> None:
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
-    if args.arch == "graphgen-gcn":
+    if get_config(args.arch).family == "gcn":
         train_gcn(args)
     else:
         train_lm(args)

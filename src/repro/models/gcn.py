@@ -1,5 +1,13 @@
 """GCN (Kipf & Welling) over fixed-fanout padded subgraph trees — the
-paper's training model (§3: mini-batch GCN on 2-hop (40, 20) subgraphs).
+paper's training model (§3: mini-batch GCN, benchmarked at 2-hop (40, 20)).
+
+Depth-generic bottom-up aggregation: an L-hop batch is consumed by L graph
+convolutions.  Layer ``i`` (1-based) updates every tree level that still
+matters (levels ``0 .. L-i``) from its own representation plus the masked
+mean of its children — so the seed level gets the SAME self+neighbor
+treatment as interior levels at every layer (the seed repo dropped the
+neighbor term at the seed's first layer).  After layer L only the seed
+level remains.
 
 Aggregation on a padded fanout tree is a masked mean over the fanout axis
 followed by a dense transform — the masked mean is the `gather_reduce`
@@ -8,7 +16,7 @@ Pallas kernel's job on TPU (kernels/gather_reduce.py); here we route through
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,53 +26,60 @@ from ..graph.subgraph import SubgraphBatch
 from ..kernels import ops as kops
 
 
+class GCNLayerParams(NamedTuple):
+    w_self: jax.Array
+    w_nbr: jax.Array
+    b: jax.Array
+
+
 class GCNParams(NamedTuple):
-    w1_self: jax.Array
-    w1_nbr: jax.Array
-    b1: jax.Array
-    w2_self: jax.Array
-    w2_nbr: jax.Array
-    b2: jax.Array
+    layers: Tuple[GCNLayerParams, ...]   # one per hop, deepest first applied
     w_out: jax.Array
     b_out: jax.Array
 
 
 def init_gcn(cfg: ModelConfig, rng: jax.Array) -> GCNParams:
     d, h, c = cfg.gcn_in_dim, cfg.gcn_hidden, cfg.n_classes
-    ks = jax.random.split(rng, 5)
+    depth = max(len(cfg.fanouts), 1)
+    ks = jax.random.split(rng, 2 * depth + 1)
     gl = jax.nn.initializers.glorot_uniform()
-    return GCNParams(
-        w1_self=gl(ks[0], (d, h)),
-        w1_nbr=gl(ks[1], (d, h)),
-        b1=jnp.zeros((h,)),
-        w2_self=gl(ks[2], (h, h)),
-        w2_nbr=gl(ks[3], (h, h)),
-        b2=jnp.zeros((h,)),
-        w_out=gl(ks[4], (h, c)),
-        b_out=jnp.zeros((c,)),
+    layers = []
+    din = d
+    for i in range(depth):
+        layers.append(GCNLayerParams(
+            w_self=gl(ks[2 * i], (din, h)),
+            w_nbr=gl(ks[2 * i + 1], (din, h)),
+            b=jnp.zeros((h,)),
+        ))
+        din = h
+    return GCNParams(layers=tuple(layers), w_out=gl(ks[-1], (h, c)),
+                     b_out=jnp.zeros((c,)))
+
+
+def _child_mean(child: jax.Array, mask: jax.Array, use_kernel: bool) -> jax.Array:
+    """Masked mean over the last fanout axis: [..., k, D] -> [..., D]."""
+    k, d = child.shape[-2], child.shape[-1]
+    agg = kops.fanout_mean(
+        child.reshape(-1, k, d), mask.reshape(-1, k), use_kernel=use_kernel
     )
+    return agg.reshape(child.shape[:-2] + (d,))
 
 
 def gcn_forward(params: GCNParams, batch: SubgraphBatch, use_kernel: bool = False):
-    """Bottom-up tree aggregation: hop2 -> hop1 -> seed."""
-    b, k1 = batch.hop1.shape
-    k2 = batch.hop2.shape[-1]
-    # layer 1 at hop-1 nodes: aggregate their (hop-2) neighbors
-    agg1 = kops.fanout_mean(
-        batch.x_hop2.reshape(b * k1, k2, -1),
-        batch.mask2.reshape(b * k1, k2),
-        use_kernel=use_kernel,
-    ).reshape(b, k1, -1)
-    h1 = jax.nn.relu(
-        batch.x_hop1 @ params.w1_self + agg1 @ params.w1_nbr + params.b1
-    )  # [b, k1, h]
-    # layer 2 at seeds: aggregate hop-1 hidden states
-    agg0 = kops.fanout_mean(h1, batch.mask1, use_kernel=use_kernel)  # [b, h]
-    h0_self = jax.nn.relu(
-        (batch.x_seed @ params.w1_self + params.b1)
-    )
-    h0 = jax.nn.relu(h0_self @ params.w2_self + agg0 @ params.w2_nbr + params.b2)
-    return h0 @ params.w_out + params.b_out  # [b, n_classes]
+    """Bottom-up tree aggregation over an L-hop batch: hop L -> ... -> seed."""
+    depth = batch.depth
+    assert len(params.layers) == depth, (
+        f"params built for {len(params.layers)} hops, batch has {depth}")
+    # reps[v] = current representation of tree level v (0 = seeds)
+    reps = [batch.x_seed] + list(batch.x_hops)
+    for i, lyr in enumerate(params.layers):
+        new_reps = []
+        for v in range(depth - i):
+            agg = _child_mean(reps[v + 1], batch.masks[v], use_kernel)
+            new_reps.append(jax.nn.relu(
+                reps[v] @ lyr.w_self + agg @ lyr.w_nbr + lyr.b))
+        reps = new_reps
+    return reps[0] @ params.w_out + params.b_out  # [b, n_classes]
 
 
 def gcn_loss(params: GCNParams, batch: SubgraphBatch, use_kernel: bool = False):

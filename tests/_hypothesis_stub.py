@@ -1,0 +1,106 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The tier-1 container does not ship hypothesis; ``conftest.py`` registers this
+module under ``sys.modules["hypothesis"]`` so the property-based test modules
+still collect and run.  The stub draws a fixed number of pseudo-random
+examples from a seed derived from the test name — deterministic across runs,
+no shrinking, no database.  Install the real thing with ``pip install -e
+'.[dev]'`` to get full property-based testing.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import types
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _integers(min_value=0, max_value=2**31 - 1):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _sampled_from(options):
+    opts = list(options)
+    return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def _floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers,
+    sampled_from=_sampled_from,
+    booleans=_booleans,
+    floats=_floats,
+    lists=_lists,
+)
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Applied on top of ``given`` — records the example budget."""
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*gargs, **gkwargs):
+    """Run the test body over N deterministic examples.
+
+    Mirrors hypothesis' parameter mapping: positional strategies fill the
+    test function's RIGHTMOST parameters, keyword strategies fill their
+    named parameters, and any leftover parameters stay visible through
+    ``__signature__`` so pytest injects fixtures for them — same as the
+    real library.
+    """
+
+    def deco(fn):
+        params = list(inspect.signature(fn).parameters.values())
+        if gargs:
+            strat_names = [p.name for p in params[len(params) - len(gargs):]]
+            fixture_params = params[:len(params) - len(gargs)]
+        else:
+            strat_names = []
+            fixture_params = [p for p in params if p.name not in gkwargs]
+
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                kw = dict(zip(strat_names, (s.draw(rng) for s in gargs)))
+                kw.update({k: s.draw(rng) for k, s in gkwargs.items()})
+                fn(*args, **kwargs, **kw)
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner.__signature__ = inspect.Signature(fixture_params)
+        runner._stub_max_examples = _DEFAULT_MAX_EXAMPLES
+        return runner
+
+    return deco

@@ -1,0 +1,18 @@
+"""Test-suite bootstrap.
+
+``hypothesis`` is a dev-only dependency (see pyproject ``[dev]`` extra); when
+absent, a deterministic stub stands in so the property-based modules still
+collect and exercise their invariants on a fixed example budget.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies

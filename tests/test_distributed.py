@@ -45,7 +45,7 @@ def test_distributed_generation_validity():
         X = node_features(2000, 32); Y = node_labels(2000, 7)
         table = balance_table(np.arange(2000), W, seed=0)
         seeds = table.per_worker[:, :16]
-        gen, dev = make_distributed_generator(mesh, part, X, Y, k1=8, k2=4)
+        gen, dev = make_distributed_generator(mesh, part, X, Y, fanouts=(8, 4))
         b = jax.tree.map(np.asarray, gen(dev, jnp.asarray(seeds), jax.random.PRNGKey(0)))
         adj = {v: set(g.indices[g.indptr[v]:g.indptr[v+1]]) for v in b.seeds}
         for i, s in enumerate(b.seeds):
@@ -79,7 +79,7 @@ def test_hot_node_sampling_is_unbiased_across_partitions():
         part = partition_edges(g, W)   # edge-hash splits the hot edge list
         X = np.zeros((801, 4), np.float32); Y = np.zeros(801, np.int32)
         mesh = make_mesh((W,), ("data",))
-        gen, dev = make_distributed_generator(mesh, part, X, Y, k1=16, k2=2)
+        gen, dev = make_distributed_generator(mesh, part, X, Y, fanouts=(16, 2))
         seeds = np.zeros((W, 4), np.int32)   # every worker asks about node 0
         seen = set()
         for t in range(16):
@@ -135,6 +135,98 @@ def test_fetch_rows_multiworker_routes_correctly():
         print("FETCH_OK")
     """)
     assert "FETCH_OK" in out
+
+
+def test_fetch_rows_skew_reports_drops_and_dedup_avoids_them():
+    """Capacity overflow: a fully-skewed request pattern (every id owned by
+    worker 0, heavily duplicated) must REPORT drops through FetchStats, not
+    silently zero-fill; the dedup front end collapses the duplicates so at
+    most n_unique ids cross the all_to_all and nothing drops at
+    capacity == n_unique."""
+    out = run_forced("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.core.generation import fetch_rows
+        from repro.launch.mesh import make_mesh
+
+        W, rows, d = 8, 16, 3
+        mesh = make_mesh((W,), ("data",))
+        table = np.arange(W * rows * d, dtype=np.float32).reshape(W * rows, d)
+        rng = np.random.default_rng(0)
+        # 256 requests over the 16 rows of worker 0 -> n_unique == 16
+        ids = rng.integers(0, rows, size=256).astype(np.int32)
+
+        def run(dedup, capacity):
+            return shard_map(
+                lambda t, i: fetch_rows(t, i, "data", dedup=dedup,
+                                        capacity=capacity, return_stats=True),
+                mesh=mesh, in_specs=(P("data"), P()), out_specs=P(),
+                check_rep=False)(jnp.asarray(table), jnp.asarray(ids))
+
+        n_unique = len(np.unique(ids))
+        assert n_unique == 16
+        # naive path at the dedup-sized capacity: massive drops, all counted
+        out_n, st_n = run(False, n_unique)
+        assert int(st_n.n_dropped) == 256 - n_unique, st_n
+        # dedup path: every distinct id crosses once -> zero drops, and the
+        # zero-filled naive result differs from the correct dedup result
+        out_d, st_d = run(True, n_unique)
+        assert int(st_d.n_unique) == n_unique
+        assert int(st_d.n_dropped) == 0
+        np.testing.assert_array_equal(np.asarray(out_d), table[ids])
+        # naive path with the same wire budget lost rows
+        assert np.abs(np.asarray(out_n) - table[ids]).max() > 0
+        # under-capacity dedup: n_dropped counts zero-filled request SLOTS
+        # (every duplicate of a dropped unique id), not wire slots
+        out_p, st_p = run(True, 8)
+        zero_filled = (np.asarray(out_p) != table[ids]).any(axis=1).sum()
+        assert int(st_p.n_dropped) == zero_filled > 0, (st_p, zero_filled)
+        print("DEDUP_OK")
+    """)
+    assert "DEDUP_OK" in out
+
+
+def test_generation_three_hop_multiworker():
+    """The depth-3 engine on 8 workers: chained masks, valid neighbors,
+    correct features at every level."""
+    out = run_forced("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.graph.synthetic import powerlaw_graph, node_features, node_labels
+        from repro.core.partition import partition_edges
+        from repro.core.balance import balance_table
+        from repro.core.generation import make_distributed_generator
+        from repro.launch.mesh import make_mesh
+
+        W = 8
+        mesh = make_mesh((W,), ("data",))
+        g = powerlaw_graph(1500, avg_degree=8, n_hot=3, hot_degree=300, seed=1)
+        part = partition_edges(g, W)
+        X = node_features(1500, 8); Y = node_labels(1500, 5)
+        table = balance_table(np.arange(1500), W, seed=0)
+        seeds = table.per_worker[:, :8]
+        gen, dev = make_distributed_generator(mesh, part, X, Y,
+                                              fanouts=(5, 4, 3))
+        b = jax.tree.map(np.asarray,
+                         gen(dev, jnp.asarray(seeds), jax.random.PRNGKey(0)))
+        assert [h.shape[1:] for h in b.hops] == [(5,), (5, 4), (5, 4, 3)]
+        adj = {v: set(g.indices[g.indptr[v]:g.indptr[v+1]]) for v in range(1500)}
+        for i, s in enumerate(b.seeds):
+            for j in range(5):
+                if b.masks[0][i, j]:
+                    assert b.hops[0][i, j] in adj[s]
+        for l in range(1, 3):
+            assert not (b.masks[l] & ~b.masks[l-1][..., None]).any()
+            ml = b.masks[l]
+            if ml.any():
+                assert np.abs(b.x_hops[l][ml] - X[b.hops[l][ml]]).max() == 0
+            if (~ml).any():
+                assert np.abs(b.x_hops[l][~ml]).max() == 0
+        assert (b.labels == Y[b.seeds]).all()
+        assert b.n_dropped.shape == (W,)
+        print("THREE_HOP_OK")
+    """)
+    assert "THREE_HOP_OK" in out
 
 
 def test_elastic_checkpoint_reshard():

@@ -8,7 +8,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.baselines import (edge_centric_sample, node_centric_sample,
                                   sql_like_sample)
-from repro.core.generation import Candidates, fetch_rows, local_candidates, merge_topk
+from repro.core.generation import (Candidates, dedup_requests, fetch_rows,
+                                   local_candidates, merge_topk)
 from repro.graph.synthetic import powerlaw_graph
 
 
@@ -74,6 +75,99 @@ def test_fetch_rows_single_worker_is_gather():
         mesh=mesh, in_specs=(P(), P()), out_specs=P(), check_rep=False,
     )(table, ids)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(table)[np.asarray(ids)])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_dedup_requests_invariants(seed):
+    """The static-shape unique front end: each distinct id occupies exactly
+    one wire slot (this is what bounds all_to_all traffic by n_unique
+    instead of b*(1+k1+k1*k2))."""
+    rng = np.random.default_rng(seed)
+    r = int(rng.integers(1, 200))
+    ids = jnp.asarray(rng.integers(0, 40, r, dtype=np.int32))
+    uniq, inverse, valid, n_unique = jax.jit(dedup_requests)(ids)
+    uniq, inverse, valid = np.asarray(uniq), np.asarray(inverse), np.asarray(valid)
+    n_unique = int(n_unique)
+    assert n_unique == len(np.unique(np.asarray(ids)))
+    assert valid.sum() == n_unique          # wire slots == distinct ids
+    np.testing.assert_array_equal(uniq[inverse], np.asarray(ids))
+    assert inverse.max() < n_unique
+
+
+def test_fetch_rows_dedup_matches_naive_single_worker():
+    """Shuffled duplicate ids must fetch identical rows via the dedup path
+    and the naive path."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_local_mesh
+
+    mesh = make_local_mesh(1, 1)
+    table = jnp.arange(60, dtype=jnp.float32).reshape(20, 3)
+    rng = np.random.default_rng(4)
+    ids = jnp.asarray(rng.integers(0, 20, 64, dtype=np.int32))  # duplicated
+
+    def run(dedup):
+        return shard_map(
+            lambda t, i: fetch_rows(t, i, "data", dedup=dedup),
+            mesh=mesh, in_specs=(P(), P()), out_specs=P(), check_rep=False,
+        )(table, ids)
+
+    np.testing.assert_array_equal(np.asarray(run(True)), np.asarray(run(False)))
+    np.testing.assert_array_equal(
+        np.asarray(run(True)), np.asarray(table)[np.asarray(ids)])
+
+
+def test_two_hop_semantics_match_seed_layout():
+    """Regression: the (40, 20) path through the L-hop engine must keep the
+    seed repo's SubgraphBatch node/mask semantics — shapes [B,40]/[B,40,20],
+    chained masks, features equal to the table rows wherever masked and
+    zeroed wherever padded."""
+    from jax.sharding import Mesh
+    from repro.core.partition import partition_edges
+    from repro.core.generation import make_distributed_generator
+    from repro.graph.synthetic import node_features, node_labels
+
+    n, dim, classes, b = 600, 8, 5, 16
+    g = powerlaw_graph(n, avg_degree=5, n_hot=2, hot_degree=100, seed=2)
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    part = partition_edges(g, 1)
+    X = node_features(n, dim)
+    Y = node_labels(n, classes)
+    gen, dev = make_distributed_generator(mesh, part, X, Y, fanouts=(40, 20))
+    batch = jax.tree.map(
+        np.asarray,
+        gen(dev, jnp.arange(b, dtype=jnp.int32).reshape(1, b),
+            jax.random.PRNGKey(0)))
+    assert batch.depth == 2 and batch.fanouts == (40, 20)
+    # 2-hop convenience views alias the per-hop lists
+    assert batch.hop1.shape == (b, 40) and batch.hop2.shape == (b, 40, 20)
+    assert batch.mask1.shape == (b, 40) and batch.mask2.shape == (b, 40, 20)
+    assert batch.x_hop1.shape == (b, 40, dim)
+    assert batch.x_hop2.shape == (b, 40, 20, dim)
+    assert batch.nodes_per_iteration() == b * (1 + 40 + 40 * 20)
+    # padded parents never spawn children (chained masks)
+    assert not (batch.mask2 & ~batch.mask1[..., None]).any()
+    # masked hop-1 ids are real neighbors of their seeds
+    adj = {v: set(g.indices[g.indptr[v]:g.indptr[v + 1]].tolist())
+           for v in batch.seeds}
+    for i, s in enumerate(batch.seeds):
+        for j in range(40):
+            if batch.mask1[i, j]:
+                assert batch.hop1[i, j] in adj[s]
+    # features: table rows where masked, zeros where padded
+    np.testing.assert_array_equal(batch.x_seed, X[batch.seeds])
+    m1, m2 = batch.mask1, batch.mask2
+    if m1.any():
+        np.testing.assert_array_equal(batch.x_hop1[m1], X[batch.hop1[m1]])
+    if (~m1).any():
+        assert np.abs(batch.x_hop1[~m1]).max() == 0
+    if m2.any():
+        np.testing.assert_array_equal(batch.x_hop2[m2], X[batch.hop2[m2]])
+    if (~m2).any():
+        assert np.abs(batch.x_hop2[~m2]).max() == 0
+    np.testing.assert_array_equal(batch.labels, Y[batch.seeds])
+    assert batch.n_dropped.sum() == 0
 
 
 def test_baselines_agree_on_sampled_set_validity(graph):

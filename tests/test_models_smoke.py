@@ -105,24 +105,40 @@ def test_decode_matches_train_forward(arch):
     assert max(errs) < 0.15, errs   # bf16 cache round-trip tolerance
 
 
-def test_gcn_smoke():
+def _random_subgraph_batch(fanouts, b, d, n_classes, seed=0):
     from repro.graph.subgraph import SubgraphBatch
-    from repro.models import gcn
-    cfg = smoke_config(REGISTRY["graphgen-gcn"])
-    params = gcn.init_gcn(cfg, jax.random.PRNGKey(0))
-    b, k1, k2, d = 6, *cfg.fanouts, cfg.gcn_in_dim
-    rng = np.random.default_rng(0)
-    batch = SubgraphBatch(
+    rng = np.random.default_rng(seed)
+    shape = (b,)
+    hops, masks, x_hops = [], [], []
+    for k in fanouts:
+        shape = shape + (k,)
+        hops.append(jnp.asarray(rng.integers(0, 50, shape, dtype=np.int32)))
+        m = rng.random(shape) < 0.9
+        if masks:
+            m = m & np.asarray(masks[-1])[..., None]   # chained masks
+        masks.append(jnp.asarray(m))
+        x_hops.append(jnp.asarray(
+            rng.standard_normal(shape + (d,), dtype=np.float32)) * m[..., None])
+    return SubgraphBatch(
         seeds=jnp.arange(b, dtype=jnp.int32),
-        hop1=jnp.asarray(rng.integers(0, 50, (b, k1), dtype=np.int32)),
-        mask1=jnp.asarray(rng.random((b, k1)) < 0.9),
-        hop2=jnp.asarray(rng.integers(0, 50, (b, k1, k2), dtype=np.int32)),
-        mask2=jnp.asarray(rng.random((b, k1, k2)) < 0.9),
+        hops=tuple(hops),
+        masks=tuple(masks),
         x_seed=jnp.asarray(rng.standard_normal((b, d), dtype=np.float32)),
-        x_hop1=jnp.asarray(rng.standard_normal((b, k1, d), dtype=np.float32)),
-        x_hop2=jnp.asarray(rng.standard_normal((b, k1, k2, d), dtype=np.float32)),
-        labels=jnp.asarray(rng.integers(0, cfg.n_classes, b, dtype=np.int32)),
+        x_hops=tuple(x_hops),
+        labels=jnp.asarray(rng.integers(0, n_classes, b, dtype=np.int32)),
+        n_dropped=jnp.zeros((1,), jnp.int32),
     )
+
+
+@pytest.mark.parametrize("arch", ["graphgen-sage", "graphgen-gcn",
+                                  "graphgen-gcn-deep"])
+def test_gcn_smoke(arch):
+    from repro.models import gcn
+    cfg = smoke_config(REGISTRY[arch])
+    params = gcn.init_gcn(cfg, jax.random.PRNGKey(0))
+    assert len(params.layers) == len(cfg.fanouts)
+    b, d = 6, cfg.gcn_in_dim
+    batch = _random_subgraph_batch(cfg.fanouts, b, d, cfg.n_classes)
     logits = gcn.gcn_forward(params, batch)
     assert logits.shape == (b, cfg.n_classes)
     loss = gcn.gcn_loss(params, batch)
@@ -131,6 +147,57 @@ def test_gcn_smoke():
     logits_k = gcn.gcn_forward(params, batch, use_kernel=True)
     np.testing.assert_allclose(np.asarray(logits_k), np.asarray(logits),
                                rtol=1e-4, atol=1e-4)
+
+
+def test_gcn_seed_layer_keeps_neighbor_term():
+    """Regression for the seed repo bug: the first conv at the SEED level
+    ignored its hop-1 neighbors (x_seed @ w_self only).  With the second
+    layer's neighbor path switched off, perturbing hop-1 features must
+    still change the logits — it flows through layer 1's w_nbr at the seed
+    level."""
+    import dataclasses
+    from repro.models import gcn
+    from repro.models.gcn import GCNLayerParams, GCNParams
+    cfg = dataclasses.replace(smoke_config(REGISTRY["graphgen-gcn"]),
+                              fanouts=(3, 2))
+    base = gcn.init_gcn(cfg, jax.random.PRNGKey(0))
+    h = cfg.gcn_hidden
+    # layer 2: identity-ish self path, ZERO neighbor path
+    l2 = GCNLayerParams(w_self=jnp.eye(h), w_nbr=jnp.zeros((h, h)),
+                        b=jnp.zeros((h,)))
+    params = GCNParams(layers=(base.layers[0], l2), w_out=base.w_out,
+                       b_out=base.b_out)
+    batch = _random_subgraph_batch(cfg.fanouts, 4, cfg.gcn_in_dim,
+                                   cfg.n_classes, seed=1)
+    bumped = batch._replace(
+        x_hops=(batch.x_hops[0] + batch.masks[0][..., None].astype(jnp.float32),
+                batch.x_hops[1]))
+    out0 = np.asarray(gcn.gcn_forward(params, batch))
+    out1 = np.asarray(gcn.gcn_forward(params, bumped))
+    assert np.abs(out1 - out0).max() > 1e-4, (
+        "seed-level layer 1 dropped its neighbor aggregation term")
+
+
+def test_gcn_depth1_matches_manual_formula():
+    """Depth-1 forward is analytically checkable: one self+neighbor conv at
+    the seed level, then the output head."""
+    import dataclasses
+    from repro.models import gcn
+    cfg = dataclasses.replace(smoke_config(REGISTRY["graphgen-sage"]),
+                              fanouts=(4,))
+    params = gcn.init_gcn(cfg, jax.random.PRNGKey(2))
+    batch = _random_subgraph_batch(cfg.fanouts, 5, cfg.gcn_in_dim,
+                                   cfg.n_classes, seed=3)
+    m = np.asarray(batch.masks[0]).astype(np.float32)
+    agg = (np.asarray(batch.x_hops[0]) * m[..., None]).sum(1) / np.maximum(
+        m.sum(1, keepdims=True), 1.0)
+    lyr = params.layers[0]
+    h = np.maximum(
+        np.asarray(batch.x_seed) @ np.asarray(lyr.w_self)
+        + agg @ np.asarray(lyr.w_nbr) + np.asarray(lyr.b), 0.0)
+    want = h @ np.asarray(params.w_out) + np.asarray(params.b_out)
+    got = np.asarray(gcn.gcn_forward(params, batch))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
 def test_param_counts_match_advertised_size():

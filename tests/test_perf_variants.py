@@ -95,8 +95,8 @@ def test_reduce_scatter_generation_matches_butterfly():
         part = partition_edges(g, W)
         X = node_features(2000, 16); Y = node_labels(2000, 7)
         seeds = np.arange(W * 16, dtype=np.int32).reshape(W, 16)
-        gb, db = make_distributed_generator(mesh, part, X, Y, k1=8, k2=4)
-        gr, dr = make_distributed_generator(mesh, part, X, Y, k1=8, k2=4,
+        gb, db = make_distributed_generator(mesh, part, X, Y, fanouts=(8, 4))
+        gr, dr = make_distributed_generator(mesh, part, X, Y, fanouts=(8, 4),
                                             merge_mode="reduce_scatter")
         bb = jax.tree.map(np.asarray, gb(db, jnp.asarray(seeds), jax.random.PRNGKey(3)))
         br = jax.tree.map(np.asarray, gr(dr, jnp.asarray(seeds), jax.random.PRNGKey(3)))

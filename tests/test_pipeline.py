@@ -5,6 +5,7 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.balance import balance_table
 from repro.core.config import TrainConfig
@@ -18,7 +19,7 @@ from repro.models import gcn as gcn_mod
 from repro.train.optimizer import adam_update, init_adam
 
 
-def _setup(n=800, w=1, k1=5, k2=3, dim=16, classes=5):
+def _setup(n=800, w=1, fanouts=(5, 3), dim=16, classes=5):
     mesh = make_local_mesh(w, 1)
     from jax.sharding import Mesh
     import numpy as _np
@@ -27,12 +28,13 @@ def _setup(n=800, w=1, k1=5, k2=3, dim=16, classes=5):
     part = partition_edges(g, w)
     feats = node_features(n, dim)
     labels = node_labels(n, classes)
-    gen, dev = make_distributed_generator(mesh, part, feats, labels, k1=k1, k2=k2)
+    gen, dev = make_distributed_generator(mesh, part, feats, labels,
+                                          fanouts=fanouts)
     from repro.configs import REGISTRY, smoke_config
     import dataclasses
     cfg = dataclasses.replace(
         smoke_config(REGISTRY["graphgen-gcn"]),
-        gcn_in_dim=dim, n_classes=classes, fanouts=(k1, k2),
+        gcn_in_dim=dim, n_classes=classes, fanouts=fanouts,
     )
     params = gcn_mod.init_gcn(cfg, jax.random.PRNGKey(0))
     opt = init_adam(params)
@@ -68,6 +70,19 @@ def test_pipelined_equals_offline_losses():
     assert stats["t_gen"] > 0 and stats["t_train"] > 0
 
 
+@pytest.mark.parametrize("fanouts", [(8,), (40, 20), (15, 10, 5)])
+def test_pipelined_loop_all_depths(fanouts):
+    """1-hop (GraphSAGE-style), the paper's 2-hop (40, 20), and a 3-hop
+    deep-GCN configuration all run end-to-end: generator -> pipelined_loop
+    -> GCN loss (acceptance criterion for the L-hop engine)."""
+    gen, dev, params, opt, train_fn, sched = _setup(fanouts=fanouts)
+    rng = jax.random.PRNGKey(7)
+    params, opt, losses = pipelined_loop(
+        gen, train_fn, dev, sched[:3], params, opt, rng)
+    assert losses.shape == (3,)
+    assert np.isfinite(np.asarray(losses)).all()
+
+
 def test_loader_prefetches_all_shards():
     def produce(shard):
         time.sleep(0.01)
@@ -94,3 +109,24 @@ def test_loader_speculative_backup_on_straggler():
     got = sorted(loader)
     assert got == list(range(8))
     assert loader.backups_issued >= 1
+
+
+def test_loader_stop_leaves_no_live_threads():
+    """A stopped loader must not leak producer/watchdog threads, even when
+    the bounded queue is full and producers are blocked on put()."""
+    def produce(shard):
+        time.sleep(0.005)
+        return shard
+
+    # depth=1 so producers pile up behind a full queue
+    loader = PrefetchLoader(produce, n_shards=32, depth=1, n_threads=3)
+    it = iter(loader)
+    assert next(it) is not None
+    loader.stop()
+    assert loader.live_threads() == []
+
+
+def test_loader_exhaustion_joins_threads():
+    loader = PrefetchLoader(lambda s: s, n_shards=6, depth=2, n_threads=2)
+    assert sorted(loader) == list(range(6))
+    assert loader.live_threads() == []

@@ -32,7 +32,7 @@ def test_gcn_pipeline_learns_feature_rule():
 
     mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
     part = partition_edges(g, 1)
-    gen, dev = make_distributed_generator(mesh, part, feats, labels, k1=4, k2=3)
+    gen, dev = make_distributed_generator(mesh, part, feats, labels, fanouts=(4, 3))
     cfg = dataclasses.replace(
         smoke_config(REGISTRY["graphgen-gcn"]),
         gcn_in_dim=dim, n_classes=classes, gcn_hidden=32, fanouts=(4, 3),
