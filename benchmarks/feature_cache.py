@@ -1,0 +1,215 @@
+"""Hot-node feature cache: wire-slot reduction vs cache size on Zipf skew.
+
+Industrial graphs are power-law; a Zipf(1.1) request stream is the
+canonical stand-in for the id mix a fanout sampler presents to the feature
+shuffle.  PR 1's dedup already collapses duplicates *within* an iteration;
+this benchmark measures what the cross-iteration cache tier removes on top:
+the number of distinct ids that still cross the all_to_all
+(``FetchStats.n_unique`` summed over the run) as a function of
+``cache_rows``, plus the steady-state hit rate and bytes saved.
+
+    PYTHONPATH=src python -m benchmarks.feature_cache [--smoke] \
+        [--out BENCH_feature_cache.json] [--workers N] [--iters K]
+
+Emits the ``name,us_per_call,derived`` CSV rows the benchmark harness
+expects and (with ``--out``) a JSON artifact so CI can accumulate the perf
+trajectory.  Acceptance anchor: at ``cache_rows=4096`` on Zipf(1.1) over
+>= 20 iterations the routed-unique reduction vs cache-off is >= 30%.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+CACHE_SIZES = (1024, 4096, 16384)
+SMOKE_SIZES = (1024, 4096)
+
+
+_ZIPF_P = {}
+
+
+def zipf_requests(rng, n_nodes: int, size: int, a: float = 1.1):
+    """Bounded Zipf(a) ids over [0, n_nodes) (rank 0 = hottest node).
+
+    Proper truncated-zeta sampling — folding ``rng.zipf`` mod n would
+    redistribute the unbounded tail *uniformly*, burying the cacheable
+    head under synthetic noise no real power-law graph has."""
+    import numpy as np
+    key = (n_nodes, a)
+    if key not in _ZIPF_P:
+        p = np.arange(1, n_nodes + 1, dtype=np.float64) ** -a
+        _ZIPF_P[key] = p / p.sum()
+    return rng.choice(n_nodes, size=size, p=_ZIPF_P[key]).astype(np.int32)
+
+
+def measure(n_nodes: int, dim: int, requests: int, iters: int,
+            cache_rows: int, *, admit: int = 2, zipf_a: float = 1.1,
+            seed: int = 0, workers: int = 1, time_it: bool = False) -> dict:
+    """Run ``iters`` cached fetches over a Zipf stream; count routed uniques.
+
+    Runs the REAL ``fetch_rows`` path under shard_map (the all_to_all
+    routes between ``workers`` devices when more than one is forced), so
+    ``FetchStats.n_unique`` is the number of ids that genuinely crossed —
+    or, at W=1, would cross — the wire.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.feature_cache import init_worker_caches
+    from repro.core.generation import fetch_rows
+    from repro.launch.mesh import make_mesh
+    from .common import time_fn
+
+    mesh = make_mesh((workers,), ("data",))
+    rows_pw = -(-n_nodes // workers)
+    rng = np.random.default_rng(seed)
+    table = rng.standard_normal((workers * rows_pw, dim)).astype(np.float32)
+    cached = cache_rows > 0
+
+    if cached:
+        def worker(t, i, c):
+            c = jax.tree.map(lambda a: a[0], c)
+            out, c, fs, cs = fetch_rows(t, i, "data", cache=c,
+                                        cache_admit=admit)
+            c = jax.tree.map(lambda a: a[None], c)
+            stats = jax.tree.map(lambda a: a[None], (fs, cs))
+            return out, c, stats
+
+        run = jax.jit(shard_map(
+            worker, mesh=mesh, in_specs=(P("data"), P(), P("data")),
+            out_specs=(P(), P("data"), P("data")), check_rep=False))
+        state = jax.device_put(
+            init_worker_caches(cache_rows, dim, workers),
+            NamedSharding(mesh, P("data")))
+    else:
+        def worker_nc(t, i):
+            out, fs = fetch_rows(t, i, "data", return_stats=True)
+            return out, jax.tree.map(lambda a: a[None], fs)
+
+        run = jax.jit(shard_map(
+            worker_nc, mesh=mesh, in_specs=(P("data"), P()),
+            out_specs=(P(), P("data")), check_rep=False))
+        state = None
+
+    table_j = jnp.asarray(table)
+    streams = [jnp.asarray(zipf_requests(rng, n_nodes, requests, zipf_a))
+               for _ in range(iters)]
+    sum_unique = 0
+    sum_hits = 0
+    sum_bytes_saved = 0
+    dropped = 0
+    for ids in streams:
+        if cached:
+            out, state, (fs, cs) = run(table_j, ids, state)
+            sum_hits += int(np.asarray(cs.n_hits)[0])
+            sum_bytes_saved += int(np.asarray(cs.bytes_saved)[0])
+        else:
+            out, fs = run(table_j, ids)
+        sum_unique += int(np.asarray(fs.n_unique)[0])
+        dropped += int(np.asarray(fs.n_dropped).sum())
+    rec = {
+        "cache_rows": cache_rows,
+        "admit": admit,
+        "sum_n_unique": sum_unique,
+        "sum_hits": sum_hits,
+        "sum_bytes_saved": sum_bytes_saved,
+        "dropped": dropped,
+        "hit_rate": sum_hits / max(sum_hits + sum_unique, 1),
+    }
+    if time_it:
+        if cached:
+            rec["us_per_fetch"] = time_fn(
+                lambda: run(table_j, streams[0], state))
+        else:
+            rec["us_per_fetch"] = time_fn(lambda: run(table_j, streams[0]))
+    return rec
+
+
+def sweep(*, smoke: bool = False, workers: int = 1, iters: int = None,
+          seed: int = 0, time_it: bool = False) -> dict:
+    n_nodes = 20_000 if smoke else 200_000
+    dim = 32 if smoke else 128
+    requests = 4_096 if smoke else 16_384
+    iters = iters or (20 if smoke else 50)
+    sizes = SMOKE_SIZES if smoke else CACHE_SIZES
+    base = measure(n_nodes, dim, requests, iters, 0, seed=seed,
+                   workers=workers, time_it=time_it)
+    results = [base]
+    for c in sizes:
+        rec = measure(n_nodes, dim, requests, iters, c, seed=seed,
+                      workers=workers, time_it=time_it)
+        rec["unique_reduction"] = 1.0 - rec["sum_n_unique"] / max(
+            base["sum_n_unique"], 1)
+        results.append(rec)
+    return {
+        "benchmark": "feature_cache",
+        "zipf_a": 1.1,
+        "n_nodes": n_nodes,
+        "dim": dim,
+        "requests_per_iter": requests,
+        "iters": iters,
+        "workers": workers,
+        "results": results,
+    }
+
+
+def bench() -> list:
+    """Harness entry (benchmarks.run): smoke-size sweep, CSV rows."""
+    rec = sweep(smoke=True)
+    rows = []
+    for r in rec["results"]:
+        name = f"feature_cache_rows_{r['cache_rows']}"
+        derived = (f"routed_unique={r['sum_n_unique']}"
+                   f",hit_rate={r['hit_rate']:.3f}")
+        if "unique_reduction" in r:
+            derived += f",unique_reduction={r['unique_reduction']:.3f}"
+        rows.append((name, float(r.get("us_per_fetch", 0.0)), derived))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes (the CI configuration)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="forced host devices; >1 exercises the real "
+                         "all_to_all routing")
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--time", action="store_true",
+                    help="also time each fetch variant")
+    ap.add_argument("--out", default=None, help="write JSON here")
+    args = ap.parse_args()
+    if args.workers > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.workers} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    rec = sweep(smoke=args.smoke, workers=args.workers, iters=args.iters,
+                seed=args.seed, time_it=args.time)
+    print("name,us_per_call,derived")
+    for r in rec["results"]:
+        red = r.get("unique_reduction")
+        print(f"feature_cache_rows_{r['cache_rows']},"
+              f"{r.get('us_per_fetch', 0.0):.1f},"
+              f"routed_unique={r['sum_n_unique']}"
+              f",hit_rate={r['hit_rate']:.3f}"
+              + (f",unique_reduction={red:.3f}" if red is not None else ""))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"wrote {args.out}", file=sys.stderr)
+    at4096 = [r for r in rec["results"] if r["cache_rows"] == 4096]
+    if at4096 and at4096[0].get("unique_reduction", 0.0) < 0.30:
+        print("WARNING: <30% routed-unique reduction at cache_rows=4096",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

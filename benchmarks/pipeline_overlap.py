@@ -58,12 +58,14 @@ def bench() -> list[tuple]:
     from repro.core.pipeline import make_pipelined_step
     step = jax.jit(make_pipelined_step(gen, train_fn))
     train_step = jax.jit(train_fn)
-    pipelined_loop(gen, train_fn, dev, sched[:2], params, opt, rng, step=step)
+    pipelined_loop(gen, train_fn, dev, sched[:2], params, opt, rng, step=step,
+                   train_step=train_step)
     offline_loop(gen, train_fn, dev, sched[:2], params, opt, rng,
                  train_step=train_step)
 
     t0 = time.perf_counter()
-    pipelined_loop(gen, train_fn, dev, sched, params, opt, rng, step=step)
+    pipelined_loop(gen, train_fn, dev, sched, params, opt, rng, step=step,
+                   train_step=train_step)
     t_pipe = time.perf_counter() - t0
 
     t0 = time.perf_counter()

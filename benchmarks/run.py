@@ -20,7 +20,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from . import (gen_throughput, kernel_bench, load_balance,
+    from . import (feature_cache, gen_throughput, kernel_bench, load_balance,
                    padding_and_dropping, pipeline_overlap, tree_reduce_bench)
 
     suites = {
@@ -30,6 +30,7 @@ def main() -> None:
         "tree_reduce": tree_reduce_bench.bench,
         "kernels": kernel_bench.bench,
         "padding_and_dropping": padding_and_dropping.bench,
+        "feature_cache": feature_cache.bench,
     }
     if args.scale:
         suites["gen_throughput_1M"] = lambda: gen_throughput.bench(scale=True)

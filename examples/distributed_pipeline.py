@@ -1,7 +1,9 @@
 """End-to-end multi-worker driver: 8 simulated workers run the full
 GraphGen+ workflow — partitioning, balance table, edge-centric generation
-with tree reduction, synchronized training, checkpointing, a simulated
-worker FAILURE, rebalancing over survivors, and resume from checkpoint.
+with tree reduction, a device-resident hot-node feature cache threaded
+through the pipelined carry, synchronized training, checkpointing, a
+simulated worker FAILURE, rebalancing over survivors (the cache restarts
+cold — row ownership moved), and resume from checkpoint.
 
     python examples/distributed_pipeline.py        (sets its own XLA_FLAGS)
 """
@@ -33,19 +35,23 @@ from repro.train.optimizer import adam_update, init_adam  # noqa: E402
 
 N, DIM, CLASSES, B = 20_000, 64, 8, 16
 FANOUTS = (8, 4)
+CACHE_ROWS = 1024
 ckpt_dir = tempfile.mkdtemp(prefix="graphgen_ckpt_")
 
 
 def build(workers: int):
     """(Re)build the distributed pipeline for a worker count — this is the
-    elastic path used both at startup and after failures."""
+    elastic path used both at startup and after failures.  The hot-node
+    cache starts empty on every (re)build: row ownership follows the new
+    partitioning, so surviving state would be stale."""
     mesh = make_mesh((workers,), ("data",))
     part = partition_edges(graph, workers)
-    gen_fn, dev = make_distributed_generator(mesh, part, feats, labels,
-                                             fanouts=FANOUTS)
+    gen_fn, dev, cache = make_distributed_generator(
+        mesh, part, feats, labels, fanouts=FANOUTS,
+        cache_rows=CACHE_ROWS, cache_admit=2)
     table = balance_table(np.arange(N), workers, seed=0)
-    step = jax.jit(make_pipelined_step(gen_fn, train_fn))
-    return gen_fn, dev, table, step
+    step = jax.jit(make_pipelined_step(gen_fn, train_fn, cached=True))
+    return gen_fn, dev, table, step, cache
 
 
 graph = powerlaw_graph(N, avg_degree=8, n_hot=20, hot_degree=1000, seed=0)
@@ -67,7 +73,7 @@ def train_fn(params, opt, batch):
 params = gcn.init_gcn(cfg, jax.random.PRNGKey(0))
 opt = init_adam(params)
 workers = 8
-gen_fn, dev, table, step = build(workers)
+gen_fn, dev, table, step, cache = build(workers)
 rngs = jax.random.split(jax.random.PRNGKey(1), 200)
 
 
@@ -77,7 +83,8 @@ def seeds_for(table, t):
     return jnp.asarray(per[:, cols])
 
 
-carry = (params, opt, gen_fn(dev, seeds_for(table, 0), rngs[0]))
+batch0, cache = gen_fn(dev, seeds_for(table, 0), rngs[0], cache)
+carry = (params, opt, batch0, cache)
 FAIL_AT, TOTAL = 20, 40
 t = 0
 while t < TOTAL:
@@ -89,11 +96,13 @@ while t < TOTAL:
         workers = table.n_workers  # 6 -> pad down to power-of-2 mesh
         workers = 4 if workers not in (1, 2, 4, 8) else workers
         table = balance_table(np.arange(N), workers, seed=2)
-        gen_fn, dev, _, step = build(workers)
+        gen_fn, dev, _, step, cache = build(workers)
         restore_t = ckpt.latest_step(ckpt_dir)
         params, opt = ckpt.restore(ckpt_dir, restore_t,
                                    (carry[0], carry[1]))
-        carry = (params, opt, gen_fn(dev, seeds_for(table, restore_t), rngs[restore_t]))
+        batch0, cache = gen_fn(dev, seeds_for(table, restore_t),
+                               rngs[restore_t], cache)
+        carry = (params, opt, batch0, cache)
         t = restore_t
         print(f"*** resumed at step {t} on {workers} workers ***\n")
         continue
@@ -101,7 +110,8 @@ while t < TOTAL:
     if (t + 1) % 10 == 0:
         ckpt.save(ckpt_dir, t + 1, (carry[0], carry[1]), keep=3)
         print(f"step {t+1:3d}  loss {float(loss):.4f}  "
-              f"workers={workers}  [checkpointed]")
+              f"workers={workers}  cache_hit={carry[2].cache_hit_rate():.2f}  "
+              f"[checkpointed]")
     t += 1
 
 print(f"\nfinished {TOTAL} steps across a simulated failure; "

@@ -44,11 +44,13 @@ def get_config(name: str) -> ModelConfig:
 def smoke_config(cfg: ModelConfig) -> ModelConfig:
     """Reduced same-family config for CPU smoke tests."""
     if cfg.family == "gcn":
-        # shrink fanouts but keep the configured sampling depth
+        # shrink fanouts but keep the configured sampling depth; keep the
+        # cache tier on (tiny) when the full config enables it
         depth = max(len(cfg.fanouts), 1)
         small = ((4, 3) + (2,) * depth)[:depth]
         return dataclasses.replace(cfg, gcn_in_dim=16, gcn_hidden=32, n_classes=5,
-                                   fanouts=small)
+                                   fanouts=small,
+                                   cache_rows=min(cfg.cache_rows, 256))
     hd = 16
     heads = max(cfg.n_heads // 4, 2) if cfg.n_heads else 0
     kv = max(cfg.n_kv_heads // 4, 1) if cfg.n_kv_heads else 0

@@ -6,4 +6,6 @@ from ..core.config import ModelConfig
 CONFIG = ModelConfig(
     name="graphgen-gcn-deep", family="gcn",
     gcn_in_dim=128, gcn_hidden=256, n_classes=64, fanouts=(15, 10, 5),
+    # deep trees revisit the hot head at every level -> paper-cell cache
+    cache_rows=4096, cache_admit=2,
 )

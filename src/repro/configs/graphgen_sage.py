@@ -5,4 +5,6 @@ from ..core.config import ModelConfig
 CONFIG = ModelConfig(
     name="graphgen-sage", family="gcn",
     gcn_in_dim=128, gcn_hidden=256, n_classes=64, fanouts=(8,),
+    # shallow trees request far fewer rows per iteration -> smaller cache
+    cache_rows=2048, cache_admit=2,
 )

@@ -60,6 +60,14 @@ class ModelConfig:
     gcn_in_dim: int = 0
     n_classes: int = 0
     fanouts: Tuple[int, ...] = ()
+    # --- distributed feature-fetch policy (generation step 4) ---
+    cache_rows: int = 0        # hot-node feature cache slots per worker
+                               # (power of two; 0 disables the cache tier)
+    cache_admit: int = 2       # misses before a candidate id is admitted
+    capacity_slack: Optional[float] = None
+                               # per-destination shuffle capacity slack;
+                               # None = launcher auto-sizes from n_dropped
+                               # (dryrun compiles at the 2.0 default)
     # --- performance knobs (hillclimbed in §Perf) ---
     remat: str = "none"        # none | full | dots
     scan_layers: bool = True   # stack layer params and lax.scan over them

@@ -1,0 +1,220 @@
+"""Device-resident hot-node feature cache (beyond-paper scaling lever).
+
+PR 1's request-deduplicated shuffle collapses duplicate ids *within* one
+iteration; on power-law graphs the same hot nodes recur *across*
+iterations, so their rows cross the interconnect every step anyway.
+DistDGL's locality-aware node placement and GraphScale's feature-store
+caching exploit exactly this recurrence — here it becomes an explicit,
+static-shape cache that sits in front of the routed ``all_to_all`` feature
+shuffle (``generation.fetch_rows``):
+
+  probe  — direct-mapped by multiplicative hash: node ``i`` can only live
+           in slot ``hash(i) mod C``, so a probe is one gather + compare
+           (no associative search, XLA-friendly static shapes).
+  route  — only cache *misses* enter the all_to_all; hits are served from
+           the device-resident copy, bit-identical to the owner's row
+           (rows are immutable node features).
+  insert — frequency admission: a missed id must be seen ``admit`` times
+           at its slot (tracked by a candidate tag + counter, TinyLFU
+           style) before it evicts the resident — one-off tail ids from
+           the Zipf tail never displace hot rows.
+
+The cache is **per-worker replicated state**: every worker keeps its own
+[C] keys + [C, D] rows, threaded *functionally* through the generation
+step (shard_map worker takes and returns it), the pipelined step (the
+carry becomes ``(params, opt_state, batch, cache)``) and the launchers.
+No mutation, no host round-trip: the state lives in device memory across
+iterations exactly like optimizer state.
+
+Invariant the tests pin down: a cached fetch returns **bit-identical**
+rows to an uncached fetch — cached rows are verbatim copies of previously
+fetched table rows, and features are immutable during an epoch.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Knuth multiplicative hash constant (2^32 / phi); with a power-of-two
+# cache we keep the TOP log2(C) bits of id * K, which are the well-mixed
+# ones for multiplicative hashing.
+_HASH_K = np.uint32(2654435761)
+
+
+class CacheConfig(NamedTuple):
+    """Static (python-int) cache policy knobs, safe to close over in jit."""
+    n_rows: int          # cache slots, power of two (0 disables)
+    admit: int = 2       # misses at a slot before a candidate is installed
+
+
+class FeatureCache(NamedTuple):
+    """One worker's cache state — an explicit pytree, threaded functionally.
+
+    keys    [C]     int32  resident node id per slot (-1 = empty)
+    rows    [C, D]  float  resident feature rows (bit-exact table copies)
+    tags    [C]     int32  candidate id awaiting admission (-1 = none)
+    counts  [C]     int32  consecutive-miss count for the candidate
+    """
+    keys: jax.Array
+    rows: jax.Array
+    tags: jax.Array
+    counts: jax.Array
+
+    @property
+    def n_rows(self) -> int:
+        return self.keys.shape[-1]
+
+
+class CacheStats(NamedTuple):
+    """Telemetry from one cached fetch (per-worker scalars)."""
+    n_hits: jax.Array        # unique probes served from the cache
+    n_misses: jax.Array      # unique probes routed over the wire
+    n_inserted: jax.Array    # rows admitted this fetch
+    bytes_saved: jax.Array   # wire bytes the hits did not cross
+
+
+def hash_slots(ids: jax.Array, n_rows: int) -> jax.Array:
+    """Direct-mapped slot of each id: top bits of the multiplicative hash."""
+    if n_rows & (n_rows - 1):
+        raise ValueError(f"cache n_rows must be a power of two, got {n_rows}")
+    shift = 32 - int(n_rows).bit_length() + 1      # keep log2(n_rows) bits
+    h = ids.astype(jnp.uint32) * _HASH_K
+    return jax.lax.shift_right_logical(h, jnp.uint32(shift)).astype(jnp.int32)
+
+
+def init_cache(n_rows: int, dim: int, dtype=jnp.float32) -> FeatureCache:
+    """Empty single-worker cache state."""
+    return FeatureCache(
+        keys=jnp.full((n_rows,), -1, jnp.int32),
+        rows=jnp.zeros((n_rows, dim), dtype),
+        tags=jnp.full((n_rows,), -1, jnp.int32),
+        counts=jnp.zeros((n_rows,), jnp.int32),
+    )
+
+
+def init_worker_caches(n_rows: int, dim: int, n_workers: int,
+                       dtype=np.float32) -> FeatureCache:
+    """Host-side [W, ...] stack of empty per-worker caches (for device_put
+    with a ``P(axis)`` sharding — each worker owns one replica)."""
+    return FeatureCache(
+        keys=np.full((n_workers, n_rows), -1, np.int32),
+        rows=np.zeros((n_workers, n_rows, dim), dtype),
+        tags=np.full((n_workers, n_rows), -1, np.int32),
+        counts=np.zeros((n_workers, n_rows), np.int32),
+    )
+
+
+def cache_specs(n_rows: int, dim: int, n_workers: int = 1,
+                dtype=jnp.float32) -> FeatureCache:
+    """ShapeDtypeStruct stand-ins for a [W, ...] cache (dry-run input)."""
+    s = jax.ShapeDtypeStruct
+    return FeatureCache(
+        keys=s((n_workers, n_rows), jnp.int32),
+        rows=s((n_workers, n_rows, dim), dtype),
+        tags=s((n_workers, n_rows), jnp.int32),
+        counts=s((n_workers, n_rows), jnp.int32),
+    )
+
+
+#: probe implementation every cached fetch uses when the caller does not
+#: pick one explicitly — "jnp" (gather+compare, the XLA path) or "pallas"
+#: (the fused VMEM probe+gather kernel; native on TPU, interpreted here).
+_PROBE_IMPL = "jnp"
+
+
+def set_probe_impl(impl: str) -> None:
+    """Select the probe implementation for cached fetches (launcher knob —
+    e.g. ``train.py --cache-probe-impl pallas``).
+
+    The setting is read at TRACE time: call it before the cached fetch is
+    first jitted — already-compiled executables keep the probe they were
+    traced with (the launchers set it before building any generator)."""
+    global _PROBE_IMPL
+    if impl not in ("jnp", "pallas"):
+        raise ValueError(f"probe impl must be 'jnp' or 'pallas', got {impl!r}")
+    _PROBE_IMPL = impl
+
+
+def cache_probe(
+    cache: FeatureCache,
+    ids: jax.Array,
+    valid: Optional[jax.Array] = None,
+    impl: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Probe [R] ids: ``(hit [R] bool, rows [R, D])`` (zeros where missed).
+
+    ``impl`` defaults to the module setting (``set_probe_impl``);
+    ``"pallas"`` routes through the fused VMEM-tiled probe+gather kernel
+    (kernels/cache_gather.py, platform-dispatched via kernels/ops.py); the
+    ``"jnp"`` path lowers to the same gather+compare.
+    """
+    if (impl or _PROBE_IMPL) == "pallas":
+        from ..kernels.ops import cache_probe_gather
+        hit, rows = cache_probe_gather(cache.keys, cache.rows, ids,
+                                       use_kernel=True)
+    else:
+        slot = hash_slots(ids, cache.n_rows)
+        hit = cache.keys[slot] == ids
+        rows = jnp.where(hit[:, None], cache.rows[slot], 0)
+    if valid is not None:
+        hit = jnp.logical_and(hit, valid)
+        rows = jnp.where(hit[:, None], rows, 0)
+    return hit, rows
+
+
+def cache_insert(
+    cache: FeatureCache,
+    ids: jax.Array,
+    rows: jax.Array,
+    should: jax.Array,
+    admit: int = 2,
+) -> Tuple[FeatureCache, jax.Array]:
+    """Offer [R] fetched rows to the cache; returns (new_cache, n_inserted).
+
+    ``should`` masks the offers (missed AND actually served — a
+    capacity-dropped zero row must never be cached).  Admission: a
+    candidate id is installed once its per-slot counter reaches ``admit``
+    (``admit <= 1`` degrades to always-insert).  Distinct ids colliding on
+    one slot within a single batch are resolved to ONE winner (highest
+    request index) *before* any scatter: the state is four arrays updated
+    by four scatters, and duplicate scatter indices apply in unspecified
+    order per scatter — without a pre-resolved winner, ``keys[s]`` could
+    take id A while ``rows[s]`` takes B's row and every later probe of A
+    would silently return B's features.
+    """
+    c = cache.n_rows
+    r = ids.shape[0]
+    slot = hash_slots(ids, c)
+    # one deterministic winner per slot among the offers (max-combiner
+    # scatter is order-independent); only the winner touches the slot
+    idx = jnp.arange(r, dtype=jnp.int32)
+    win = jnp.full((c,), -1, jnp.int32).at[
+        jnp.where(should, slot, c)].max(idx, mode="drop")
+    offer = jnp.logical_and(should, win[slot] == idx)
+    same_cand = cache.tags[slot] == ids
+    new_count = jnp.where(same_cand, cache.counts[slot] + 1, 1)
+    install = jnp.logical_and(offer, new_count >= admit)
+    # not-selected offers scatter OUT OF BOUNDS so mode="drop" discards them
+    s_track = jnp.where(offer, slot, c)
+    s_install = jnp.where(install, slot, c)
+    new = FeatureCache(
+        keys=cache.keys.at[s_install].set(ids, mode="drop"),
+        rows=cache.rows.at[s_install].set(rows.astype(cache.rows.dtype),
+                                          mode="drop"),
+        tags=cache.tags.at[s_track].set(ids, mode="drop"),
+        counts=cache.counts.at[s_track].set(new_count, mode="drop"),
+    )
+    return new, jnp.sum(install).astype(jnp.int32)
+
+
+def squeeze_worker_axis(cache: FeatureCache) -> FeatureCache:
+    """[1, ...] shard_map block -> per-worker [...] state."""
+    return jax.tree.map(lambda a: a[0], cache)
+
+
+def restore_worker_axis(cache: FeatureCache) -> FeatureCache:
+    """Per-worker [...] state -> [1, ...] shard_map block."""
+    return jax.tree.map(lambda a: a[None], cache)

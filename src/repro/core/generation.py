@@ -36,10 +36,20 @@ trees driven by ``fanouts = (k_1, ..., k_L)``:
                               shuffle is **request-deduplicated**: each
                               distinct id crosses the interconnect once and
                               the fetched row is scattered back to every
-                              slot that asked for it.  Requests beyond the
-                              per-destination capacity are *counted*
+                              slot that asked for it.  In front of the
+                              all_to_all sits an optional **device-resident
+                              hot-node cache** (core/feature_cache.py):
+                              distinct ids are first probed against a
+                              per-worker direct-mapped cache and only the
+                              *misses* are routed — hot rows that recur
+                              across iterations stop crossing the
+                              interconnect entirely, and served misses are
+                              admitted back (frequency admission) so the
+                              cache tracks the workload.  Requests beyond
+                              the per-destination capacity are *counted*
                               (``SubgraphBatch.n_dropped``), never silently
-                              zero-filled.
+                              zero-filled, and cache hits/misses surface as
+                              ``SubgraphBatch.n_cache_hits/n_cache_misses``.
 
 Edges sampled for several seeds are *replicated* into each seed's subgraph
 (paper step 3), which falls out of sampling per frontier slot.
@@ -57,6 +67,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from ..graph.subgraph import SubgraphBatch
+from .feature_cache import (CacheStats, FeatureCache, cache_insert,
+                            cache_probe, init_worker_caches,
+                            restore_worker_axis, squeeze_worker_axis)
 from .partition import PartitionedGraph
 from .tree_reduce import axis_size, tree_allreduce, tree_reduce_scatter
 
@@ -186,6 +199,8 @@ def fetch_rows(
     dedup: bool = True,
     capacity: Optional[int] = None,
     return_stats: bool = False,
+    cache: Optional[FeatureCache] = None,
+    cache_admit: int = 2,
 ):
     """Routed remote row fetch (the MapReduce shuffle, as ``all_to_all``).
 
@@ -203,20 +218,36 @@ def fetch_rows(
     (shrinking the static exchange buffers).  Pass a smaller ``capacity``
     sized to the expected unique count to shrink wire traffic further.
 
+    With ``cache`` (a per-worker ``FeatureCache``, requires dedup) the
+    distinct ids are first probed against the device-resident hot-node
+    cache and only the **misses** enter the all_to_all; served misses are
+    offered back under the frequency-admission policy.  The returned rows
+    are bit-identical to the uncached path (cached rows are verbatim table
+    copies), the return value becomes
+    ``(out, new_cache, FetchStats, CacheStats)``, and ``n_unique`` counts
+    only the ids that actually crossed the wire.
+
     Per-destination capacity defaults to ``ceil(R/W) * slack`` (clamped as
     above when dedup is on); requests beyond it return zero rows and are
     counted per request slot — pass ``return_stats=True`` to receive
     ``(out, FetchStats)`` instead of silently zero-filled rows.  For W == 1
-    this degenerates to a local gather (no routing, so ``n_unique`` is
-    reported as ``R``).
+    the fetch degenerates to a local gather (no routing; ``n_unique``
+    still reports the would-route distinct/miss count so single-device
+    runs measure the same wire-slot telemetry).
     """
+    if cache is not None and not dedup:
+        raise ValueError("the cache front end requires dedup=True")
     w = axis_size(axis_name)
     rows = table_local.shape[0]
     r = ids.shape[0]
-    if w == 1:
+    if w == 1 and cache is None:
         out = table_local[jnp.clip(ids, 0, rows - 1)]
         if return_stats:
-            return out, FetchStats(jnp.int32(r), jnp.int32(r), jnp.int32(0))
+            if dedup:
+                n_unique = dedup_requests(ids)[3].astype(jnp.int32)
+            else:
+                n_unique = jnp.int32(r)
+            return out, FetchStats(jnp.int32(r), n_unique, jnp.int32(0))
         return out
     cap = capacity
     if cap is None:
@@ -224,22 +255,56 @@ def fetch_rows(
         if dedup:
             cap = min(cap, rows)    # ≤ rows distinct ids per destination
     if dedup:
-        uniq, inverse, valid, n_unique = dedup_requests(ids)
-        rows_u, served_u = _routed_fetch(
-            table_local, uniq, valid, axis_name, cap, w, rows)
-        out = rows_u[inverse]
+        req_ids, inverse, req_valid, n_unique = dedup_requests(ids)
+    else:
+        req_ids, inverse = ids, None
+        req_valid = jnp.ones((r,), jnp.bool_)
+        n_unique = jnp.int32(r)
+    # --- cache probe: hits never reach the wire --------------------------
+    if cache is not None:
+        hit, hit_rows = cache_probe(cache, req_ids, req_valid)
+        route_valid = jnp.logical_and(req_valid, ~hit)
+    else:
+        hit = jnp.zeros(req_ids.shape, jnp.bool_)
+        route_valid = req_valid
+    # --- route the (remaining) requests ----------------------------------
+    if w == 1:
+        fetched = table_local[jnp.clip(req_ids, 0, rows - 1)]
+        fetched = jnp.where(route_valid[:, None], fetched, 0)
+        served_r = route_valid
+    else:
+        fetched, served_r = _routed_fetch(
+            table_local, req_ids, route_valid, axis_name, cap, w, rows)
+    n_routed = jnp.sum(route_valid).astype(jnp.int32)
+    # --- merge hits back, offer served misses for admission --------------
+    new_cache = None
+    cstats = None
+    if cache is not None:
+        out_u = jnp.where(hit[:, None], hit_rows, fetched)
+        served_u = jnp.logical_or(hit, served_r)
+        new_cache, n_ins = cache_insert(
+            cache, req_ids, fetched,
+            should=jnp.logical_and(route_valid, served_r), admit=cache_admit)
+        n_hits = jnp.sum(hit).astype(jnp.int32)
+        row_bytes = table_local.shape[1] * jnp.dtype(table_local.dtype).itemsize
+        cstats = CacheStats(n_hits, n_routed, n_ins, n_hits * row_bytes)
+        n_unique = n_routed          # ids that actually crossed the wire
+    else:
+        out_u, served_u = fetched, served_r
+    if dedup:
+        out = out_u[inverse]
         # a dropped unique id zero-fills EVERY duplicate slot it backed —
         # count affected request slots, not wire slots
         dropped = jnp.sum(~served_u[inverse])
     else:
-        valid = jnp.ones((r,), jnp.bool_)
-        out, served = _routed_fetch(
-            table_local, ids, valid, axis_name, cap, w, rows)
-        dropped = jnp.sum(~served)
-        n_unique = jnp.int32(r)
+        out = out_u
+        dropped = jnp.sum(~served_u)
+    stats = FetchStats(jnp.int32(r), jnp.int32(n_unique),
+                       dropped.astype(jnp.int32))
+    if cache is not None:
+        return out, new_cache, stats, cstats
     if return_stats:
-        return out, FetchStats(jnp.int32(r), n_unique,
-                               dropped.astype(jnp.int32))
+        return out, stats
     return out
 
 
@@ -250,18 +315,22 @@ def _worker_generate(
     y_local: jax.Array,      # [rows, 1] labels (row-sharded)
     seeds: jax.Array,        # [b] seeds owned by this worker (balance table row)
     rng: jax.Array,
+    cache: Optional[FeatureCache] = None,   # per-worker hot-node cache state
     *,
     fanouts: Tuple[int, ...],
     axis_name: str,
     merge_mode: str = "butterfly",
-) -> SubgraphBatch:
+    capacity_slack: float = 2.0,
+    cache_admit: int = 2,
+):
     """One worker's slice of an L-hop generation round (runs in shard_map).
 
     Per hop: broadcast frontier -> ``local_candidates`` scan -> tree merge
     (butterfly allreduce or recursive-halving reduce-scatter); the merged
     global sample becomes the next frontier.  Masks chain so a padded
     parent's subtree stays padded.  Then one deduplicated feature shuffle
-    fetches every node's row.
+    fetches every node's row, probing the hot-node cache first when one is
+    threaded in (returns ``(SubgraphBatch, new_cache)`` in that case).
     """
     b = seeds.shape[0]
     me = lax.axis_index(axis_name)
@@ -310,9 +379,19 @@ def _worker_generate(
     for level in range(1, len(masks)):
         masks[level] = jnp.logical_and(masks[level], masks[level - 1][..., None])
 
-    # --- feature shuffle: one deduplicated fetch for every node slot ---
+    # --- feature shuffle: one deduplicated fetch for every node slot,
+    # cache-probed first when a hot-node cache is threaded through ---
     need = jnp.concatenate([seeds] + [h.reshape(-1) for h in hops])
-    feats, fstats = fetch_rows(x_local, need, axis_name, return_stats=True)
+    if cache is not None:
+        feats, cache, fstats, cstats = fetch_rows(
+            x_local, need, axis_name, capacity_slack=capacity_slack,
+            cache=cache, cache_admit=cache_admit)
+        n_hits, n_misses = cstats.n_hits, cstats.n_misses
+    else:
+        feats, fstats = fetch_rows(x_local, need, axis_name,
+                                   capacity_slack=capacity_slack,
+                                   return_stats=True)
+        n_hits, n_misses = jnp.int32(0), fstats.n_unique
     d = x_local.shape[1]
     x_seed = feats[:b]
     x_hops = []
@@ -325,11 +404,12 @@ def _worker_generate(
         off += n
     # balance-table seeds are already distinct per worker — skip the dedup
     # front end for the label fetch
-    ys, ystats = fetch_rows(y_local, seeds, axis_name, dedup=False,
+    ys, ystats = fetch_rows(y_local, seeds, axis_name,
+                            capacity_slack=capacity_slack, dedup=False,
                             return_stats=True)
     labels = ys[:, 0].astype(jnp.int32)
 
-    return SubgraphBatch(
+    batch = SubgraphBatch(
         seeds=seeds,
         hops=tuple(hops),
         masks=tuple(masks),
@@ -337,7 +417,12 @@ def _worker_generate(
         x_hops=tuple(x_hops),
         labels=labels,
         n_dropped=(fstats.n_dropped + ystats.n_dropped)[None],
+        n_cache_hits=n_hits[None],
+        n_cache_misses=n_misses[None],
     )
+    if cache is not None:
+        return batch, cache
+    return batch
 
 
 def shard_rows(table: np.ndarray, n_workers: int) -> np.ndarray:
@@ -356,42 +441,64 @@ def make_generator_fn(
     fanouts: Tuple[int, ...] = (40, 20),
     axis_name: str = "data",
     merge_mode: str = "butterfly",
+    capacity_slack: float = 2.0,
+    cache_rows: int = 0,
+    cache_admit: int = 2,
 ):
     """Pure generator function (no data placement — dry-run lowerable).
 
     ``gen_fn(device_args, seeds [W, b], rng) -> SubgraphBatch`` where
     ``device_args = (indptr [W,N+1], indices [W,E_pad], x [W*rows,D],
-    y [W*rows,1])`` sharded on their leading axis."""
+    y [W*rows,1])`` sharded on their leading axis.
+
+    With ``cache_rows > 0`` the generator becomes stateful-by-threading:
+    ``gen_fn(device_args, seeds, rng, cache) -> (SubgraphBatch, cache)``
+    where ``cache`` is a [W, ...] ``FeatureCache`` pytree sharded
+    ``P(axis_name)`` on its leading axis (one replica per worker)."""
     if not fanouts:
         raise ValueError("fanouts must name at least one hop, got ()")
     graph_spec = P(axis_name)
     row_spec = P(axis_name)
     repl = P()
+    cached = cache_rows > 0
 
-    def _squeeze_worker_axis(fn):
-        # shard_map blocks keep the sharded leading axis of size 1 per worker;
-        # wrap worker fn to drop/restore it.
-        def wrapped(indptr, indices, xs, ys, seeds, rng):
-            batch = fn(
-                indptr[0], indices[0], xs, ys, seeds[0], rng
-            )
-            return batch
-        return wrapped
+    worker_gen = functools.partial(
+        _worker_generate, fanouts=tuple(fanouts), axis_name=axis_name,
+        merge_mode=merge_mode, capacity_slack=capacity_slack,
+        cache_admit=cache_admit)
 
-    worker_fn = _squeeze_worker_axis(
-        functools.partial(_worker_generate, fanouts=tuple(fanouts),
-                          axis_name=axis_name, merge_mode=merge_mode)
-    )
+    # shard_map blocks keep the sharded leading axis of size 1 per worker;
+    # the wrappers drop it on the way in and restore it on the way out.
+    def worker_fn(indptr, indices, xs, ys, seeds, rng):
+        return worker_gen(indptr[0], indices[0], xs, ys, seeds[0], rng)
 
-    def gen_fn(device_args, seeds, rng):
-        indptr, indices, xs, ys = device_args
-        return shard_map(
-            worker_fn,
-            mesh=mesh,
-            in_specs=(graph_spec, graph_spec, row_spec, row_spec, graph_spec, repl),
-            out_specs=P(axis_name),
-            check_rep=False,
-        )(indptr, indices, xs, ys, seeds, rng)
+    def worker_fn_cached(indptr, indices, xs, ys, seeds, rng, cache):
+        batch, cache = worker_gen(indptr[0], indices[0], xs, ys, seeds[0],
+                                  rng, squeeze_worker_axis(cache))
+        return batch, restore_worker_axis(cache)
+
+    if cached:
+        def gen_fn(device_args, seeds, rng, cache):
+            indptr, indices, xs, ys = device_args
+            return shard_map(
+                worker_fn_cached,
+                mesh=mesh,
+                in_specs=(graph_spec, graph_spec, row_spec, row_spec,
+                          graph_spec, repl, P(axis_name)),
+                out_specs=(P(axis_name), P(axis_name)),
+                check_rep=False,
+            )(indptr, indices, xs, ys, seeds, rng, cache)
+    else:
+        def gen_fn(device_args, seeds, rng):
+            indptr, indices, xs, ys = device_args
+            return shard_map(
+                worker_fn,
+                mesh=mesh,
+                in_specs=(graph_spec, graph_spec, row_spec, row_spec,
+                          graph_spec, repl),
+                out_specs=P(axis_name),
+                check_rep=False,
+            )(indptr, indices, xs, ys, seeds, rng)
 
     return gen_fn
 
@@ -405,17 +512,26 @@ def make_distributed_generator(
     fanouts: Tuple[int, ...] = (40, 20),
     axis_name: str = "data",
     merge_mode: str = "butterfly",
+    capacity_slack: float = 2.0,
+    cache_rows: int = 0,
+    cache_admit: int = 2,
 ):
     """Build the jitted distributed generator with data placed on the mesh.
 
     Returns ``(gen_fn, device_args)``; every output leaf is sharded
-    ``P(axis_name)`` on its leading (global-batch) axis."""
+    ``P(axis_name)`` on its leading (global-batch) axis.  With
+    ``cache_rows > 0`` an initial (empty) per-worker ``FeatureCache`` is
+    also placed on the mesh and the return becomes
+    ``(gen_fn, device_args, cache0)`` with
+    ``gen_fn(device_args, seeds, rng, cache) -> (batch, cache)``."""
     w = mesh.shape[axis_name]
     assert part.n_workers == w, (part.n_workers, w)
     x = shard_rows(features.astype(np.float32), w)
     y = shard_rows(labels.reshape(-1, 1).astype(np.float32), w)
     gen_fn = make_generator_fn(mesh, fanouts=fanouts, axis_name=axis_name,
-                               merge_mode=merge_mode)
+                               merge_mode=merge_mode,
+                               capacity_slack=capacity_slack,
+                               cache_rows=cache_rows, cache_admit=cache_admit)
     spec = NamedSharding(mesh, P(axis_name))
     device_args = (
         jax.device_put(part.indptr, spec),
@@ -423,4 +539,8 @@ def make_distributed_generator(
         jax.device_put(x, spec),
         jax.device_put(y, spec),
     )
+    if cache_rows > 0:
+        cache0 = jax.device_put(
+            init_worker_caches(cache_rows, x.shape[1], w), spec)
+        return jax.jit(gen_fn), device_args, cache0
     return jax.jit(gen_fn), device_args

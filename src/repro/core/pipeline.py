@@ -29,18 +29,31 @@ import numpy as np
 def make_pipelined_step(
     gen_fn: Callable[..., Any],
     train_fn: Callable[..., Tuple[Any, Any, jax.Array]],
+    cached: bool = False,
 ):
     """Fuse generation(t+1) with training(t) into one step.
 
     carry = (params, opt_state, next_batch); the returned step consumes the
     pre-generated batch and produces the next one in the same XLA program.
+    With ``cached=True`` the carry grows the hot-node feature-cache state —
+    ``(params, opt_state, next_batch, cache)`` — and ``gen_fn`` must be the
+    stateful form ``gen_fn(device_args, seeds, rng, cache) -> (batch,
+    cache)``; the cache rides across iterations in device memory exactly
+    like optimizer state.
     """
 
-    def step(carry, device_args, seeds, rng):
-        params, opt_state, batch = carry
-        next_batch = gen_fn(device_args, seeds, rng)   # generation of t+1 ...
-        params, opt_state, loss = train_fn(params, opt_state, batch)  # ... overlaps training of t
-        return (params, opt_state, next_batch), loss
+    if cached:
+        def step(carry, device_args, seeds, rng):
+            params, opt_state, batch, cache = carry
+            next_batch, cache = gen_fn(device_args, seeds, rng, cache)
+            params, opt_state, loss = train_fn(params, opt_state, batch)
+            return (params, opt_state, next_batch, cache), loss
+    else:
+        def step(carry, device_args, seeds, rng):
+            params, opt_state, batch = carry
+            next_batch = gen_fn(device_args, seeds, rng)   # generation of t+1 ...
+            params, opt_state, loss = train_fn(params, opt_state, batch)  # ... overlaps training of t
+            return (params, opt_state, next_batch), loss
 
     return step
 
@@ -54,19 +67,43 @@ def pipelined_loop(
     opt_state,
     rng: jax.Array,
     step=None,                   # pass a pre-jitted step to amortize compile
+    cache=None,                  # FeatureCache pytree -> thread it through
+    train_step=None,             # pre-jitted train_fn for the final step
 ):
-    """Run the synchronized pipeline for ``steps`` iterations."""
+    """Run the synchronized pipeline for ``steps`` iterations.
+
+    The final iteration has no batch left to pre-generate, so it runs a
+    train-only step (historically the loop re-generated the last schedule
+    entry just to discard it — pure wasted generation work).  With
+    ``cache`` given, the cache state is threaded through every generation
+    and returned: ``(params, opt_state, losses, cache)``.
+    """
+    cached = cache is not None
     if step is None:
-        step = jax.jit(make_pipelined_step(gen_fn, train_fn))
+        step = jax.jit(make_pipelined_step(gen_fn, train_fn, cached=cached))
+    if train_step is None:
+        train_step = jax.jit(train_fn)
+    # one key per schedule entry plus a tail key: batch t is generated from
+    # rngs[t] (split(k, n)[i] depends on n, so the count must stay aligned
+    # with offline_loop even though rngs[steps] is no longer consumed)
     rngs = jax.random.split(rng, len(seed_schedule) + 1)
-    batch = gen_fn(device_args, jnp.asarray(seed_schedule[0]), rngs[0])
-    carry = (params, opt_state, batch)
+    if cached:
+        batch, cache = gen_fn(device_args, jnp.asarray(seed_schedule[0]),
+                              rngs[0], cache)
+        carry = (params, opt_state, batch, cache)
+    else:
+        batch = gen_fn(device_args, jnp.asarray(seed_schedule[0]), rngs[0])
+        carry = (params, opt_state, batch)
     losses = []
-    for t in range(len(seed_schedule)):
-        nxt = seed_schedule[min(t + 1, len(seed_schedule) - 1)]
+    for t in range(len(seed_schedule) - 1):
+        nxt = seed_schedule[t + 1]
         carry, loss = step(carry, device_args, jnp.asarray(nxt), rngs[t + 1])
         losses.append(loss)
-    params, opt_state, _ = carry
+    params, opt_state, batch = carry[0], carry[1], carry[2]
+    params, opt_state, loss = train_step(params, opt_state, batch)
+    losses.append(loss)
+    if cached:
+        return params, opt_state, jnp.stack(losses), carry[3]
     return params, opt_state, jnp.stack(losses)
 
 
@@ -91,8 +128,15 @@ def offline_loop(
     opt_state,
     rng: jax.Array,
     train_step=None,             # pass a pre-jitted step to amortize compile
+    cache=None,                  # FeatureCache pytree -> thread it through
 ):
-    """GraphGen baseline: precompute-all -> store -> read -> train."""
+    """GraphGen baseline: precompute-all -> store -> read -> train.
+
+    With ``cache`` given, the cache threads through the generation phase
+    (the storage round trip carries batches only, never cache state) and
+    the return grows a trailing cache element.
+    """
+    cached = cache is not None
     if train_step is None:
         train_step = jax.jit(train_fn)
     # split one extra key exactly like pipelined_loop so batch t is generated
@@ -101,7 +145,11 @@ def offline_loop(
     t0 = time.perf_counter()
     storage = []
     for t, seeds in enumerate(seed_schedule):
-        batch = gen_fn(device_args, jnp.asarray(seeds), rngs[t])
+        if cached:
+            batch, cache = gen_fn(device_args, jnp.asarray(seeds), rngs[t],
+                                  cache)
+        else:
+            batch = gen_fn(device_args, jnp.asarray(seeds), rngs[t])
         jax.block_until_ready(batch)
         storage.append(_store_roundtrip(batch))
     t_gen = time.perf_counter() - t0
@@ -113,4 +161,7 @@ def offline_loop(
         losses.append(loss)
     jax.block_until_ready(losses[-1])
     t_train = time.perf_counter() - t0
-    return params, opt_state, jnp.stack(losses), {"t_gen": t_gen, "t_train": t_train}
+    stats = {"t_gen": t_gen, "t_train": t_train}
+    if cached:
+        return params, opt_state, jnp.stack(losses), stats, cache
+    return params, opt_state, jnp.stack(losses), stats

@@ -21,10 +21,15 @@ A batch of B seeds with fanouts ``(k_1, ..., k_L)`` is:
     n_dropped  [W]                      int32 per-worker count of feature-
                                         shuffle requests dropped by the
                                         capacity bound (0 in healthy runs)
+    n_cache_hits   [W]                  int32 per-worker unique feature
+                                        requests served by the hot-node
+                                        cache (0 when the cache is off)
+    n_cache_misses [W]                  int32 per-worker unique feature
+                                        requests routed over the wire
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +43,16 @@ class SubgraphBatch(NamedTuple):
     x_hops: Tuple[jax.Array, ...]
     labels: jax.Array
     n_dropped: jax.Array
+    n_cache_hits: Optional[jax.Array] = None
+    n_cache_misses: Optional[jax.Array] = None
+
+    def cache_hit_rate(self) -> float:
+        """Fraction of unique feature requests served device-locally."""
+        if self.n_cache_hits is None or self.n_cache_misses is None:
+            return 0.0
+        hits = float(jnp.sum(self.n_cache_hits))
+        total = hits + float(jnp.sum(self.n_cache_misses))
+        return hits / total if total else 0.0
 
     @property
     def batch_size(self) -> int:
@@ -111,4 +126,6 @@ def batch_specs(batch: int, fanouts: Tuple[int, ...], dim: int,
         x_hops=tuple(x_hops),
         labels=s((batch,), i32),
         n_dropped=s((n_workers,), i32),
+        n_cache_hits=s((n_workers,), i32),
+        n_cache_misses=s((n_workers,), i32),
     )

@@ -1,0 +1,83 @@
+"""Fused Pallas probe+gather for the hot-node feature cache.
+
+``gather_reduce_pallas`` serves already-sampled rows straight from the HBM
+feature table; this kernel is its cache-tier sibling: it serves *cache
+hits* from VMEM-tiled blocks of the device-resident cache
+(core/feature_cache.py).  One kernel fuses the three steps a jnp probe
+lowers to separately —
+
+  slot    = top-bits multiplicative hash of each id        (VPU)
+  hit     = keys[slot] == id                               (VPU compare)
+  row     = rows[slot] masked by hit                       (VMEM gather)
+
+The cache is small by construction (``cache_rows`` is a few thousand), so
+a whole [C, block_d] column block of the row table fits in VMEM alongside
+the full [C] key vector — the gather never touches HBM, which is the point
+of the cache tier.  Grid: (R blocks, D blocks); the hit vector is written
+once per D block (identical values, same revisiting pattern the other
+kernels in this package use).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# keep the hash bit-compatible with the jnp probe (core/feature_cache.py)
+from ..core.feature_cache import _HASH_K
+
+
+def _probe_gather_kernel(keys_ref, rows_ref, ids_ref, hit_ref, out_ref,
+                         *, shift: int):
+    ids = ids_ref[...]                              # [br] int32
+    h = ids.astype(jnp.uint32) * jnp.uint32(_HASH_K)
+    slot = jax.lax.shift_right_logical(h, jnp.uint32(shift)).astype(jnp.int32)
+    hit = keys_ref[...][slot] == ids                # [br] bool
+    rows = rows_ref[...][slot]                      # [br, bd] VMEM gather
+    hit_ref[...] = hit
+    out_ref[...] = jnp.where(hit[:, None], rows, 0).astype(out_ref.dtype)
+
+
+def cache_probe_gather_pallas(
+    keys: jax.Array,     # [C] int32 resident id per slot (-1 = empty)
+    rows: jax.Array,     # [C, D] resident feature rows
+    ids: jax.Array,      # [R] int32 probe ids
+    *,
+    block_r: int = 256,
+    block_d: int = 128,
+    interpret: bool = True,
+):
+    """Probe ``ids`` against a direct-mapped cache: ``(hit [R], out [R, D])``.
+
+    ``out`` rows are the cached copies where hit, zeros where missed —
+    bit-identical to ``feature_cache.cache_probe`` (the jnp oracle is
+    ``ref.cache_probe_gather_ref``).
+    """
+    c = keys.shape[0]
+    if c & (c - 1):
+        raise ValueError(f"cache size must be a power of two, got {c}")
+    r = ids.shape[0]
+    d = rows.shape[1]
+    br, bd = min(block_r, r), min(block_d, d)
+    shift = 32 - int(c).bit_length() + 1
+    grid = (pl.cdiv(r, br), pl.cdiv(d, bd))
+    return pl.pallas_call(
+        functools.partial(_probe_gather_kernel, shift=shift),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c,), lambda i, j: (0,)),        # full key vector
+            pl.BlockSpec((c, bd), lambda i, j: (0, j)),   # VMEM column block
+            pl.BlockSpec((br,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br,), lambda i, j: (i,)),
+            pl.BlockSpec((br, bd), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r,), jnp.bool_),
+            jax.ShapeDtypeStruct((r, d), rows.dtype),
+        ],
+        interpret=interpret,
+    )(keys, rows, ids)

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .cache_gather import cache_probe_gather_pallas
 from .flash_attention import flash_attention_pallas
 from .gather_reduce import fanout_mean_pallas, gather_reduce_pallas
 from .ssd_scan import ssd_scan_pallas
@@ -34,6 +35,16 @@ def gather_reduce(
     if use_kernel:
         return gather_reduce_pallas(table, idx, mask, interpret=_interpret())
     return ref.gather_reduce_ref(table, idx, mask)
+
+
+def cache_probe_gather(
+    keys: jax.Array, rows: jax.Array, ids: jax.Array, use_kernel: bool = False
+):
+    """Fused hot-node cache probe+gather: (hit [R], rows [R, D])."""
+    if use_kernel:
+        return cache_probe_gather_pallas(keys, rows, ids,
+                                         interpret=_interpret())
+    return ref.cache_probe_gather_ref(keys, rows, ids)
 
 
 def flash_attention(

@@ -30,6 +30,20 @@ def gather_reduce_ref(
     return fanout_mean_ref(rows, mask)
 
 
+def cache_probe_gather_ref(
+    keys: jax.Array, rows: jax.Array, ids: jax.Array
+) -> tuple:
+    """Direct-mapped cache probe: keys [C], rows [C, D], ids [R] ->
+    (hit [R] bool, out [R, D]); out is the cached row where hit, zeros
+    where missed.  Semantic ground truth for the fused probe+gather
+    kernel (and the shape the jnp probe in core/feature_cache.py takes)."""
+    from ..core.feature_cache import hash_slots
+    slot = hash_slots(ids, keys.shape[0])
+    hit = keys[slot] == ids
+    out = jnp.where(hit[:, None], rows[slot], 0)
+    return hit, out
+
+
 def flash_attention_ref(
     q: jax.Array,      # [B, Hq, Lq, Dh]
     k: jax.Array,      # [B, Hkv, Lk, Dh]

@@ -63,14 +63,18 @@ def _artifact_stats(compiled, chips: int, t_lower: float, t_compile: float) -> d
 
 
 def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
-                   merge_mode: str = "butterfly") -> dict:
+                   merge_mode: str = "butterfly",
+                   cache_rows: int = None) -> dict:
     """The paper's own workload at production scale: one synchronized
     generation+training step on a 530M-node / 5B-edge graph (the paper's
     evaluation graph).  The sampling depth comes from the arch config —
     2-hop (40, 20) for the paper cell, 1-hop for graphgen-sage, 3-hop for
     graphgen-gcn-deep (~1.7M padded nodes per iteration at (40, 20)).
     Generation shards over 'data' (the worker axis); the small GCN
-    replicates over 'model'."""
+    replicates over 'model'.  When the config enables the hot-node feature
+    cache, its per-worker state rides in the pipelined carry —
+    ``(params, opt, batch, cache)`` — and must partition/compile too."""
+    from ..core.feature_cache import cache_specs
     from ..core.generation import make_generator_fn
     from ..core.pipeline import make_pipelined_step
     from ..graph.subgraph import batch_specs, slots_per_seed
@@ -82,6 +86,9 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
     w = mesh.shape[axis]
     cfg = dataclasses.replace(get_config(arch), gcn_in_dim=128,
                               gcn_hidden=256, n_classes=64)
+    if cache_rows is not None:
+        cfg = dataclasses.replace(cfg, cache_rows=cache_rows)
+    cached = cfg.cache_rows > 0
     fanouts = cfg.fanouts
     n_nodes = 530_000_000
     n_edges = 5_000_000_000
@@ -98,8 +105,12 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
     )
     seeds = s((w, b), i32)
     rng = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    slack = cfg.capacity_slack if cfg.capacity_slack is not None else 2.0
     gen_fn = make_generator_fn(mesh, fanouts=fanouts, axis_name=axis,
-                               merge_mode=merge_mode)
+                               merge_mode=merge_mode,
+                               capacity_slack=slack,
+                               cache_rows=cfg.cache_rows,
+                               cache_admit=cfg.cache_admit)
     tcfg = TrainConfig()
 
     def train_fn(params, opt, batch):
@@ -110,9 +121,14 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
     params = jax.eval_shape(lambda: gcn_mod.init_gcn(cfg, jax.random.PRNGKey(0)))
     opt = jax.eval_shape(lambda: init_adam(params))
     batch0 = batch_specs(w * b, fanouts, cfg.gcn_in_dim, n_workers=w)
-    step = make_pipelined_step(gen_fn, train_fn)
+    step = make_pipelined_step(gen_fn, train_fn, cached=cached)
+    if cached:
+        cache0 = cache_specs(cfg.cache_rows, cfg.gcn_in_dim, n_workers=w)
+        carry0 = (params, opt, batch0, cache0)
+    else:
+        carry0 = (params, opt, batch0)
     t0 = time.time()
-    lowered = jax.jit(step).lower((params, opt, batch0), device_args, seeds, rng)
+    lowered = jax.jit(step).lower(carry0, device_args, seeds, rng)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -121,6 +137,7 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
         status="ok",
         params=cfg.param_count(),
         active_params=cfg.param_count(),
+        cache_rows=cfg.cache_rows,
         tokens=w * b * slots_per_seed(fanouts),   # padded node slots per iter
     )
     return rec
@@ -130,7 +147,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                attn: str = "naive", remat: str = "keep",
                variant: str = "baseline", shard_heads: bool = False,
                gen_merge: str = "butterfly", moe_impl: str = "gather",
-               seq_parallel: bool = False, compress: bool = False) -> dict:
+               seq_parallel: bool = False, compress: bool = False,
+               cache_rows: int = None) -> dict:
     cfg = get_config(arch)
     rec = {
         "arch": arch, "shape": shape_name,
@@ -139,7 +157,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     }
     if cfg.family == "gcn":
         rec["kind"] = "train"
-        return lower_gcn_cell(rec, arch, multi_pod, merge_mode=gen_merge)
+        return lower_gcn_cell(rec, arch, multi_pod, merge_mode=gen_merge,
+                              cache_rows=cache_rows)
     shape = SHAPES[shape_name]
     rec["kind"] = shape.kind
     if shape_name == "long_500k" and arch not in SUBQUADRATIC:
@@ -257,13 +276,16 @@ def main() -> None:
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--compress", action="store_true",
                     help="int8 error-feedback gradient compression")
+    ap.add_argument("--cache-rows", type=int, default=None,
+                    help="GCN cells: hot-node feature cache rows/worker "
+                         "(0 disables; default from the arch config)")
     ap.add_argument("--out", default=None, help="append JSONL here")
     args = ap.parse_args()
     rec = lower_cell(args.arch, args.shape, args.multi_pod,
                      attn=args.attn, remat=args.remat, variant=args.variant,
                      shard_heads=args.shard_heads, gen_merge=args.gen_merge,
                      moe_impl=args.moe, seq_parallel=args.seq_parallel,
-                     compress=args.compress)
+                     compress=args.compress, cache_rows=args.cache_rows)
     line = json.dumps(rec)
     print(line)
     if args.out:

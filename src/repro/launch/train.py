@@ -45,12 +45,50 @@ from ..train.train_loop import init_state, make_train_step  # noqa: E402
 from .mesh import make_mesh                             # noqa: E402
 
 
+#: ascending slack ladder probed by the drop-aware capacity calibration
+SLACK_LADDER = (0.25, 0.5, 1.0, 1.5, 2.0)
+#: calibration batches per rung — a single probe has no safety margin
+#: against seed/rng draws with more uniques per destination
+CALIBRATION_PROBES = 3
+
+
+def calibrate_capacity_slack(mesh, device_args, fanouts, probes,
+                             ladder=SLACK_LADDER) -> float:
+    """Drop-aware capacity autotuning (ROADMAP item).
+
+    ``probes`` is a list of ``(seeds, rng)`` calibration batches; the
+    graph/table placement in ``device_args`` is shared across the whole
+    ladder (slack only changes the compiled program, not the data).
+    Returns the smallest slack whose ``SubgraphBatch.n_dropped`` is zero
+    over EVERY probe — the all_to_all exchange buffers then carry no more
+    static padding than the workload needs, with the multi-probe pass
+    standing in for a worst-case bound.  Calibration runs the cache-off
+    generator: the cache only *removes* routed requests, so a drop-free
+    slack measured without it stays drop-free with it.
+    """
+    from ..core.generation import make_generator_fn
+
+    for slack in ladder:
+        gen_fn = jax.jit(make_generator_fn(mesh, fanouts=fanouts,
+                                           capacity_slack=slack))
+        dropped = 0
+        for seeds, rng in probes:
+            batch = gen_fn(device_args, seeds, rng)
+            dropped += int(np.asarray(batch.n_dropped).sum())
+        if dropped == 0:
+            return slack
+        print(f"calibration: slack={slack} dropped {dropped} requests "
+              f"over {len(probes)} probes")
+    print(f"calibration: even slack={ladder[-1]} drops requests; keeping it")
+    return ladder[-1]
+
+
 def train_gcn(args) -> dict:
+    import dataclasses
     w = args.workers
     mesh = make_mesh((w,), ("data",))
     cfg = get_config(args.arch)
     if args.fanouts:
-        import dataclasses
         try:
             fo = tuple(int(k) for k in args.fanouts.split(","))
         except ValueError:
@@ -60,9 +98,14 @@ def train_gcn(args) -> dict:
         if not fo or any(k < 1 for k in fo):
             raise SystemExit(f"--fanouts entries must be >= 1, got {fo}")
         cfg = dataclasses.replace(cfg, fanouts=fo)
+    if args.cache_rows is not None:
+        cfg = dataclasses.replace(cfg, cache_rows=args.cache_rows)
+    if args.cache_admit is not None:
+        cfg = dataclasses.replace(cfg, cache_admit=args.cache_admit)
     if args.smoke:
         cfg = smoke_config(cfg)
     fanouts = cfg.fanouts
+    cached = cfg.cache_rows > 0
 
     graph = powerlaw_graph(args.nodes, avg_degree=args.avg_degree,
                            n_hot=max(args.nodes // 1000, 1), seed=args.seed)
@@ -71,9 +114,41 @@ def train_gcn(args) -> dict:
     labels = node_labels(graph.n_nodes, cfg.n_classes, args.seed)
     table = balance_table(np.arange(graph.n_nodes), w, args.seed)  # step 2
 
-    gen_fn, device_args = make_distributed_generator(     # step 3
-        mesh, part, feats, labels, fanouts=fanouts
+    b = args.batch_per_worker
+    rngs = jax.random.split(jax.random.PRNGKey(args.seed + 1), args.steps + 1)
+
+    def seeds_for(t):
+        sw = table.per_worker
+        cols = (np.arange(b) + t * b) % sw.shape[1]
+        return jnp.asarray(sw[:, cols])
+
+    if args.capacity_slack is not None:
+        slack = args.capacity_slack
+    elif cfg.capacity_slack is not None:
+        slack = cfg.capacity_slack       # config pins it: no calibration
+    elif w == 1:
+        slack = 2.0      # W=1 fetch is a local gather: capacity never binds
+    else:
+        # place the graph+tables once; each ladder rung only re-jits
+        _, cal_args = make_distributed_generator(
+            mesh, part, feats, labels, fanouts=fanouts)
+        probes = [(seeds_for(t), rngs[t]) for t in range(CALIBRATION_PROBES)]
+        slack = calibrate_capacity_slack(mesh, cal_args, fanouts, probes)
+        del cal_args
+        print(f"capacity_slack auto-sized to {slack} "
+              f"(override with --capacity-slack)")
+
+    gen_out = make_distributed_generator(                  # step 3
+        mesh, part, feats, labels, fanouts=fanouts, capacity_slack=slack,
+        cache_rows=cfg.cache_rows, cache_admit=cfg.cache_admit,
     )
+    if cached:
+        gen_fn, device_args, cache = gen_out
+        print(f"hot-node cache: {cfg.cache_rows} rows/worker, "
+              f"admit-after-{cfg.cache_admit}")
+    else:
+        gen_fn, device_args = gen_out
+        cache = None
     tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                        checkpoint_every=args.ckpt_every)
     params = gcn_mod.init_gcn(cfg, jax.random.PRNGKey(args.seed))
@@ -90,34 +165,52 @@ def train_gcn(args) -> dict:
         params, opt = ckpt.restore(args.ckpt_dir, start, (params, opt))
         print(f"resumed from step {start}")
 
-    step = jax.jit(make_pipelined_step(gen_fn, train_fn))
-    b = args.batch_per_worker
-    rngs = jax.random.split(jax.random.PRNGKey(args.seed + 1), args.steps + 1)
-
-    def seeds_for(t):
-        sw = table.per_worker
-        cols = (np.arange(b) + t * b) % sw.shape[1]
-        return jnp.asarray(sw[:, cols])
-
-    batch = gen_fn(device_args, seeds_for(0), rngs[0])
-    carry = (params, opt, batch)
+    step = jax.jit(make_pipelined_step(gen_fn, train_fn, cached=cached))
+    train_step = jax.jit(train_fn)
+    # batch t comes from seeds_for(t)/rngs[t] — a resumed run must prime the
+    # pipeline at `start`, not at 0
+    if cached:
+        batch, cache = gen_fn(device_args, seeds_for(start), rngs[start], cache)
+        carry = (params, opt, batch, cache)
+    else:
+        batch = gen_fn(device_args, seeds_for(start), rngs[start])
+        carry = (params, opt, batch)
     losses = []
     t0 = time.perf_counter()
     for t in range(start, args.steps):
-        carry, loss = step(carry, device_args, seeds_for(t + 1), rngs[t + 1])
+        if t + 1 < args.steps:
+            carry, loss = step(carry, device_args, seeds_for(t + 1),
+                               rngs[t + 1])
+        else:
+            # nothing left to pre-generate: train-only final step (the same
+            # redundant-generation fix pipelined_loop carries)
+            p, o, loss = train_step(carry[0], carry[1], carry[2])
+            carry = (p, o) + carry[2:]
         losses.append(float(loss))
         if (t + 1) % args.ckpt_every == 0:
             ckpt.save(args.ckpt_dir, t + 1, (carry[0], carry[1]),
                       keep=tcfg.keep_checkpoints)
         if (t + 1) % args.log_every == 0:
-            print(f"step {t+1}: loss={losses[-1]:.4f}")
+            line = f"step {t+1}: loss={losses[-1]:.4f}"
+            nb = carry[2]
+            if cached:
+                line += f" cache_hit_rate={nb.cache_hit_rate():.3f}"
+            dropped = int(np.asarray(nb.n_dropped).sum())
+            if dropped:
+                line += f" DROPPED={dropped}"
+            print(line)
     jax.block_until_ready(carry[0])
     dt = time.perf_counter() - t0
     nodes_per_iter = batch.nodes_per_iteration()
+    out = {"losses": losses, "nodes_per_iter": nodes_per_iter, "wall_s": dt,
+           "capacity_slack": slack}
     print(f"trained {args.steps - start} steps in {dt:.1f}s "
           f"({nodes_per_iter} padded nodes/iter, "
           f"{(args.steps - start) * nodes_per_iter / dt:,.0f} nodes/s)")
-    return {"losses": losses, "nodes_per_iter": nodes_per_iter, "wall_s": dt}
+    if cached:
+        out["cache_hit_rate"] = carry[2].cache_hit_rate()
+        print(f"steady-state cache hit rate: {out['cache_hit_rate']:.3f}")
+    return out
 
 
 def train_lm(args) -> dict:
@@ -170,6 +263,18 @@ def main() -> None:
     ap.add_argument("--arch", default="graphgen-gcn")
     ap.add_argument("--fanouts", default=None,
                     help="comma-separated per-hop fanouts override, e.g. 15,10,5")
+    ap.add_argument("--capacity-slack", type=float, default=None,
+                    help="feature-shuffle capacity slack; omit to auto-size "
+                         "from a drop-aware calibration step")
+    ap.add_argument("--cache-rows", type=int, default=None,
+                    help="hot-node feature cache rows/worker "
+                         "(power of two; 0 disables; default from config)")
+    ap.add_argument("--cache-admit", type=int, default=None,
+                    help="misses before a node id is admitted to the cache")
+    ap.add_argument("--cache-probe-impl", default="jnp",
+                    choices=["jnp", "pallas"],
+                    help="cache probe implementation: XLA gather+compare or "
+                         "the fused Pallas VMEM kernel (native on TPU)")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--nodes", type=int, default=20_000)
@@ -186,6 +291,9 @@ def main() -> None:
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
+    if args.cache_probe_impl != "jnp":
+        from ..core.feature_cache import set_probe_impl
+        set_probe_impl(args.cache_probe_impl)
     if get_config(args.arch).family == "gcn":
         train_gcn(args)
     else:

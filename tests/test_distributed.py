@@ -187,6 +187,82 @@ def test_fetch_rows_skew_reports_drops_and_dedup_avoids_them():
     assert "DEDUP_OK" in out
 
 
+def test_fetch_rows_shard_boundary_ids_route_correctly():
+    """Ids sitting exactly on shard boundaries (first/last row of every
+    worker's block), heavily duplicated, must route to the right owner and
+    dedup to one wire slot each — the `owner = id // rows` bucketing at the
+    edges is exactly where an off-by-one would hide."""
+    out = run_forced("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.core.generation import fetch_rows
+        from repro.launch.mesh import make_mesh
+
+        W, rows, d = 8, 16, 3
+        mesh = make_mesh((W,), ("data",))
+        table = np.arange(W * rows * d, dtype=np.float32).reshape(W * rows, d)
+        # first and last row of every shard, plus global extremes, duplicated
+        edges = [k * rows for k in range(W)] + [k * rows + rows - 1 for k in range(W)]
+        ids = np.asarray(edges * 3 + [0, W * rows - 1], dtype=np.int32)
+        out, stats = shard_map(
+            lambda t, i: fetch_rows(t, i, "data", return_stats=True),
+            mesh=mesh, in_specs=(P("data"), P()), out_specs=P(),
+            check_rep=False)(jnp.asarray(table), jnp.asarray(ids))
+        np.testing.assert_array_equal(np.asarray(out), table[ids])
+        assert int(stats.n_unique) == len(set(edges))
+        assert int(stats.n_dropped) == 0
+        print("BOUNDARY_OK")
+    """)
+    assert "BOUNDARY_OK" in out
+
+
+def test_cached_generation_multiworker_bit_identical():
+    """The hot-node cache on 8 workers: recurring seeds drive the hit rate
+    up across iterations while every feature row stays bit-identical to the
+    uncached generator under the same rng — the cache changes WHERE rows
+    come from, never WHAT they are."""
+    out = run_forced("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.graph.synthetic import powerlaw_graph, node_features, node_labels
+        from repro.core.partition import partition_edges
+        from repro.core.balance import balance_table
+        from repro.core.generation import make_distributed_generator
+        from repro.launch.mesh import make_mesh
+
+        W = 8
+        mesh = make_mesh((W,), ("data",))
+        g = powerlaw_graph(2000, avg_degree=8, n_hot=3, hot_degree=500, seed=0)
+        part = partition_edges(g, W)
+        X = node_features(2000, 16); Y = node_labels(2000, 7)
+        table = balance_table(np.arange(2000), W, seed=0)
+        seeds = jnp.asarray(table.per_worker[:, :16])
+        gen_nc, dev_nc = make_distributed_generator(mesh, part, X, Y,
+                                                    fanouts=(8, 4))
+        gen_c, dev_c, cache = make_distributed_generator(
+            mesh, part, X, Y, fanouts=(8, 4), cache_rows=1024, cache_admit=1)
+        hit_rates = []
+        for t in range(4):
+            rng = jax.random.PRNGKey(t % 2)   # recurring rngs -> recurring ids
+            b_nc = gen_nc(dev_nc, seeds, rng)
+            b_c, cache = gen_c(dev_c, seeds, rng, cache)
+            np.testing.assert_array_equal(np.asarray(b_nc.x_seed),
+                                          np.asarray(b_c.x_seed))
+            for a, b in zip(b_nc.x_hops, b_c.x_hops):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            assert (np.asarray(b_c.labels) == np.asarray(b_nc.labels)).all()
+            assert np.asarray(b_c.n_dropped).sum() == 0
+            hits = np.asarray(b_c.n_cache_hits).sum()
+            total = hits + np.asarray(b_c.n_cache_misses).sum()
+            hit_rates.append(hits / total)
+        assert hit_rates[0] == 0.0                   # cold cache
+        assert hit_rates[-1] > 0.5, hit_rates        # recurring ids now local
+        assert b_c.n_cache_hits.shape == (W,)
+        print("CACHE_OK", [round(h, 3) for h in hit_rates])
+    """)
+    assert "CACHE_OK" in out
+
+
 def test_generation_three_hop_multiworker():
     """The depth-3 engine on 8 workers: chained masks, valid neighbors,
     correct features at every level."""

@@ -1,0 +1,279 @@
+"""Hot-node feature cache: state machine units, the cache-aware fetch
+front end (bit-identical to the uncached path), and the Zipf wire-slot
+reduction the subsystem exists for."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.feature_cache import (FeatureCache, cache_insert, cache_probe,
+                                      hash_slots, init_cache,
+                                      init_worker_caches, restore_worker_axis,
+                                      squeeze_worker_axis)
+from repro.core.generation import fetch_rows
+
+
+# ---------------------------------------------------------------- state units
+
+def test_empty_cache_never_hits():
+    cache = init_cache(64, 8)
+    ids = jnp.arange(100, dtype=jnp.int32)
+    hit, rows = cache_probe(cache, ids)
+    assert not np.asarray(hit).any()
+    assert np.abs(np.asarray(rows)).max() == 0
+
+
+def test_insert_then_probe_roundtrips_exact_rows():
+    cache = init_cache(128, 4)
+    ids = jnp.asarray([3, 17, 99, 1024], jnp.int32)
+    rows = jax.random.normal(jax.random.PRNGKey(0), (4, 4))
+    cache, n_ins = cache_insert(cache, ids, rows, jnp.ones(4, bool), admit=1)
+    assert int(n_ins) == 4
+    hit, got = cache_probe(cache, ids)
+    assert np.asarray(hit).all()
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(rows))  # bitwise
+    # ids that were never inserted must miss
+    hit2, _ = cache_probe(cache, jnp.asarray([5, 2048], jnp.int32))
+    assert not np.asarray(hit2).any()
+
+
+def test_should_mask_gates_insertion():
+    """Capacity-dropped (unserved) rows must never enter the cache."""
+    cache = init_cache(64, 2)
+    ids = jnp.asarray([1, 2], jnp.int32)
+    rows = jnp.ones((2, 2))
+    cache, n_ins = cache_insert(cache, ids, rows,
+                               jnp.asarray([True, False]), admit=1)
+    assert int(n_ins) == 1
+    hit, _ = cache_probe(cache, ids)
+    np.testing.assert_array_equal(np.asarray(hit), [True, False])
+
+
+def test_frequency_admission_requires_repeat_offers():
+    """admit=2: one-off ids never displace anything; the second offer of the
+    same id at the same slot installs it."""
+    cache = init_cache(64, 2)
+    ids = jnp.asarray([7], jnp.int32)
+    rows = jnp.full((1, 2), 3.0)
+    cache, n1 = cache_insert(cache, ids, rows, jnp.ones(1, bool), admit=2)
+    assert int(n1) == 0                       # first offer only tracks
+    hit, _ = cache_probe(cache, ids)
+    assert not np.asarray(hit).any()
+    cache, n2 = cache_insert(cache, ids, rows, jnp.ones(1, bool), admit=2)
+    assert int(n2) == 1                       # second offer installs
+    hit, got = cache_probe(cache, ids)
+    assert np.asarray(hit).all()
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(rows))
+
+
+def test_admission_counter_resets_on_different_candidate():
+    """Alternating tail ids that collide on one slot keep resetting each
+    other's counters — the resident hot row survives."""
+    c = 64
+    cache = init_cache(c, 2)
+    hot = jnp.asarray([5], jnp.int32)
+    hot_row = jnp.full((1, 2), 1.0)
+    for _ in range(2):
+        cache, _ = cache_insert(cache, hot, hot_row, jnp.ones(1, bool), admit=2)
+    slot_of_hot = int(hash_slots(hot, c)[0])
+    # find two distinct ids colliding with hot's slot
+    pool = np.arange(10_000, dtype=np.int32)
+    coll = pool[np.asarray(hash_slots(jnp.asarray(pool), c)) == slot_of_hot]
+    coll = coll[coll != 5][:2]
+    assert len(coll) == 2
+    for _ in range(4):   # alternate the two colliders
+        for cid in coll:
+            cache, n = cache_insert(cache, jnp.asarray([cid]),
+                                    jnp.zeros((1, 2)), jnp.ones(1, bool),
+                                    admit=2)
+            assert int(n) == 0
+    hit, got = cache_probe(cache, hot)
+    assert np.asarray(hit).all()
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(hot_row))
+
+
+def test_same_batch_slot_collision_installs_one_consistent_pair():
+    """Distinct ids colliding on one slot within a single insert batch must
+    resolve to ONE winner whose key and row agree — independent scatters
+    with duplicate indices could otherwise pair id A with B's row and
+    poison every later probe of A."""
+    c = 64
+    cache = init_cache(c, 2)
+    pool = np.arange(20_000, dtype=np.int32)
+    slots = np.asarray(hash_slots(jnp.asarray(pool), c))
+    counts = np.bincount(slots, minlength=c)
+    s = int(np.argmax(counts))
+    trio = pool[slots == s][:3]
+    assert len(trio) == 3
+    ids = jnp.asarray(trio)
+    rows = jnp.asarray(100.0 + np.arange(6, dtype=np.float32).reshape(3, 2))
+    cache2, n_ins = cache_insert(cache, ids, rows, jnp.ones(3, bool), admit=1)
+    assert int(n_ins) == 1
+    hit, got = cache_probe(cache2, ids)
+    assert int(np.asarray(hit).sum()) == 1
+    i = int(np.argmax(np.asarray(hit)))
+    np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(rows[i]))
+
+
+def test_hash_slots_rejects_non_power_of_two():
+    with pytest.raises(ValueError):
+        hash_slots(jnp.arange(4, dtype=jnp.int32), 100)
+
+
+def test_worker_axis_roundtrip():
+    stacked = init_worker_caches(32, 4, n_workers=1)
+    c = squeeze_worker_axis(jax.tree.map(jnp.asarray, FeatureCache(*stacked)))
+    assert c.keys.shape == (32,)
+    r = restore_worker_axis(c)
+    assert r.keys.shape == (1, 32) and r.rows.shape == (1, 32, 4)
+
+
+# ------------------------------------------------- cache-aware fetch_rows
+
+_FETCH_FNS = {}
+
+
+def _fetch_fn(kind, admit=1, dedup=True):
+    """Jitted single-worker fetch wrappers, cached so the hypothesis sweep
+    and the 20-iteration Zipf run compile once per shape."""
+    key = (kind, admit, dedup)
+    if key in _FETCH_FNS:
+        return _FETCH_FNS[key]
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_local_mesh
+
+    mesh = make_local_mesh(1, 1)
+    if kind == "plain":
+        fn = jax.jit(shard_map(
+            lambda t, i: fetch_rows(t, i, "data", dedup=dedup),
+            mesh=mesh, in_specs=(P(), P()), out_specs=P(), check_rep=False))
+    else:
+        def worker(t, i, c):
+            out, c, fs, cs = fetch_rows(t, i, "data",
+                                        cache=squeeze_worker_axis(c),
+                                        cache_admit=admit)
+            return (out, restore_worker_axis(c),
+                    jax.tree.map(lambda a: a[None], (fs, cs)))
+
+        fn = jax.jit(shard_map(
+            worker, mesh=mesh, in_specs=(P(), P(), P("data")),
+            out_specs=(P(), P("data"), P("data")), check_rep=False))
+    _FETCH_FNS[key] = fn
+    return fn
+
+
+def _run_fetch(table, ids, *, cache=None, admit=1, dedup=True):
+    if cache is None:
+        return _fetch_fn("plain", dedup=dedup)(table, ids)
+    return _fetch_fn("cached", admit=admit)(table, ids, cache)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_cached_fetch_bit_identical_to_uncached(seed):
+    """THE cache contract: across several iterations of a duplicated,
+    recurring request stream, the cached path returns bit-identical rows to
+    the uncached path (and to the table itself)."""
+    rng = np.random.default_rng(seed)
+    n, d = 40, 5
+    table = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    cache = jax.tree.map(jnp.asarray, init_worker_caches(16, d, 1))
+    for _ in range(4):
+        ids = jnp.asarray(rng.integers(0, n, 50, dtype=np.int32))
+        want = _run_fetch(table, ids)
+        got, cache, (fs, cs) = _run_fetch(table, ids, cache=cache, admit=1)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(table)[np.asarray(ids)])
+        assert int(fs.n_dropped[0]) == 0
+
+
+def test_cached_fetch_hits_accumulate_and_route_count_drops():
+    """Second identical request stream: hits appear, routed uniques fall,
+    and n_requests/n_unique telemetry stays consistent."""
+    rng = np.random.default_rng(0)
+    n, d = 64, 3
+    table = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, n, 128, dtype=np.int32))
+    n_uniq = len(np.unique(np.asarray(ids)))
+    cache = jax.tree.map(jnp.asarray, init_worker_caches(256, d, 1))
+    _, cache, (fs1, cs1) = _run_fetch(table, ids, cache=cache, admit=1)
+    assert int(cs1.n_hits[0]) == 0
+    assert int(fs1.n_unique[0]) == int(cs1.n_misses[0]) == n_uniq
+    assert int(cs1.n_inserted[0]) == n_uniq
+    got, cache, (fs2, cs2) = _run_fetch(table, ids, cache=cache, admit=1)
+    assert int(cs2.n_hits[0]) > 0
+    assert int(fs2.n_unique[0]) == n_uniq - int(cs2.n_hits[0])
+    assert int(cs2.bytes_saved[0]) == int(cs2.n_hits[0]) * d * 4
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(table)[np.asarray(ids)])
+
+
+def test_cache_requires_dedup():
+    table = jnp.zeros((8, 2))
+    cache = init_cache(8, 2)
+    with pytest.raises(ValueError):
+        fetch_rows(table, jnp.zeros(4, jnp.int32), "data", dedup=False,
+                   cache=cache)
+
+
+def test_pallas_probe_impl_serves_cached_fetch():
+    """set_probe_impl('pallas') routes the production fetch front end
+    through the fused kernel — rows stay bit-identical to the table."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.core.feature_cache import set_probe_impl
+    from repro.launch.mesh import make_local_mesh
+
+    rng = np.random.default_rng(2)
+    n, d = 64, 8
+    table = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, n, 96, dtype=np.int32))
+    mesh = make_local_mesh(1, 1)
+
+    def worker(t, i, c):
+        out, c, fs, cs = fetch_rows(t, i, "data",
+                                    cache=squeeze_worker_axis(c),
+                                    cache_admit=1)
+        return (out, restore_worker_axis(c),
+                jax.tree.map(lambda a: a[None], (fs, cs)))
+
+    set_probe_impl("pallas")
+    try:
+        run = jax.jit(shard_map(
+            worker, mesh=mesh, in_specs=(P(), P(), P("data")),
+            out_specs=(P(), P("data"), P("data")), check_rep=False))
+        cache = jax.tree.map(jnp.asarray, init_worker_caches(32, d, 1))
+        _, cache, _ = run(table, ids, cache)
+        got, cache, (fs, cs) = run(table, ids, cache)
+    finally:
+        set_probe_impl("jnp")
+    assert int(cs.n_hits[0]) > 0
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(table)[np.asarray(ids)])
+    with pytest.raises(ValueError):
+        set_probe_impl("cuda")
+
+
+def test_zipf_wire_slot_reduction_meets_criterion():
+    """Acceptance anchor: Zipf(1.1) stream, cache_rows=4096, >= 20
+    iterations -> >= 30% fewer routed unique requests than cache-off."""
+    from benchmarks.feature_cache import zipf_requests
+
+    rng = np.random.default_rng(1)
+    n, d, r, iters = 20_000, 4, 4_096, 20
+    table = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    streams = [jnp.asarray(zipf_requests(rng, n, r)) for _ in range(iters)]
+    base = 0
+    for ids in streams:
+        base += len(np.unique(np.asarray(ids)))
+    cache = jax.tree.map(jnp.asarray, init_worker_caches(4096, d, 1))
+    routed = 0
+    for ids in streams:
+        got, cache, (fs, _) = _run_fetch(table, ids, cache=cache, admit=2)
+        routed += int(fs.n_unique[0])
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(table)[np.asarray(ids)])
+    assert routed < 0.7 * base, (routed, base)

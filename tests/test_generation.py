@@ -95,6 +95,47 @@ def test_dedup_requests_invariants(seed):
     assert inverse.max() < n_unique
 
 
+@pytest.mark.parametrize("ids", [
+    np.full(64, 7),                      # all-identical ids
+    np.array([13]),                      # single-element input
+    np.arange(50),                       # already sorted, all distinct
+    np.array([0, 159, 80, 0, 159, 42]),  # ids spanning the full shard range
+], ids=["all-identical", "singleton", "sorted", "shard-range"])
+def test_dedup_requests_edge_cases(ids):
+    """Boundary inputs for the static-shape unique front end."""
+    ids_j = jnp.asarray(ids.astype(np.int32))
+    uniq, inverse, valid, n_unique = jax.jit(dedup_requests)(ids_j)
+    uniq, inverse, valid = np.asarray(uniq), np.asarray(inverse), np.asarray(valid)
+    want = np.unique(ids)
+    assert int(n_unique) == len(want)
+    assert valid.sum() == len(want)
+    np.testing.assert_array_equal(np.sort(uniq[: len(want)]), want)
+    np.testing.assert_array_equal(uniq[inverse], ids)
+    assert inverse.max() < int(n_unique)
+
+
+def test_dedup_requests_full_shard_range_routing():
+    """Full-table-range ids dedup and fetch correctly at W=1 (the local-
+    gather path with dedup telemetry; the ROUTED owner-bucketing version of
+    this runs on 8 workers in test_distributed.py)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_local_mesh
+
+    w, rows = 1, 160
+    mesh = make_local_mesh(w, 1)
+    table = jnp.arange(160 * 2, dtype=jnp.float32).reshape(160, 2)
+    ids = jnp.asarray([0, 159, 80, 0, 159, 42, 21, 21], jnp.int32)
+    out, stats = shard_map(
+        lambda t, i: fetch_rows(t, i, "data", return_stats=True),
+        mesh=mesh, in_specs=(P(), P()), out_specs=P(), check_rep=False,
+    )(table, ids)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(table)[np.asarray(ids)])
+    assert int(stats.n_unique) == 5       # {0, 21, 42, 80, 159}
+    assert int(stats.n_dropped) == 0
+
+
 def test_fetch_rows_dedup_matches_naive_single_worker():
     """Shuffled duplicate ids must fetch identical rows via the dedup path
     and the naive path."""

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
+from repro.kernels.cache_gather import cache_probe_gather_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.gather_reduce import fanout_mean_pallas, gather_reduce_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
@@ -30,6 +31,52 @@ def test_gather_reduce(n, d, m, k):
     got = gather_reduce_pallas(table, idx, mask)
     want = ref.gather_reduce_ref(table, idx, mask)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("c,d,r", [(64, 32, 17), (256, 128, 300), (1024, 96, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cache_probe_gather(c, d, r, dtype):
+    """Fused VMEM probe+gather vs the jnp oracle: identical hit vector and
+    bit-identical rows (the cache tier must never perturb features)."""
+    from repro.core.feature_cache import hash_slots
+
+    rng = np.random.default_rng(0)
+    # residents installed at their TRUE hash slots (as cache_insert would),
+    # plus ~half the slots left empty
+    pool = rng.choice(50 * c, size=c, replace=False).astype(np.int32)
+    slots = np.asarray(hash_slots(jnp.asarray(pool), c))
+    keys = np.full(c, -1, np.int32)
+    keys[slots] = pool
+    keys[rng.random(c) < 0.5] = -1
+    keys = jnp.asarray(keys)
+    rows = jax.random.normal(jax.random.PRNGKey(1), (c, d)).astype(dtype)
+    # probe a mix of resident ids (hits) and random ids (mostly misses)
+    ids = np.where(rng.random(r) < 0.5, rng.choice(pool, size=r),
+                   rng.integers(0, 50 * c, r)).astype(np.int32)
+    ids = jnp.asarray(ids)
+    got_hit, got_rows = cache_probe_gather_pallas(keys, rows, ids)
+    want_hit, want_rows = ref.cache_probe_gather_ref(keys, rows, ids)
+    np.testing.assert_array_equal(np.asarray(got_hit), np.asarray(want_hit))
+    np.testing.assert_array_equal(
+        np.asarray(got_rows, np.float32), np.asarray(want_rows, np.float32))
+    assert np.asarray(want_hit).any() and not np.asarray(want_hit).all()
+
+
+def test_cache_probe_gather_matches_state_probe():
+    """The kernel and feature_cache.cache_probe(impl=...) agree — same hash,
+    same rows — so either implementation can serve the fetch front end."""
+    from repro.core.feature_cache import cache_probe, init_cache, cache_insert
+
+    cache = init_cache(128, 16)
+    rng = np.random.default_rng(3)
+    ids = jnp.asarray(rng.integers(0, 400, 96, dtype=np.int32))
+    rows = jax.random.normal(jax.random.PRNGKey(2), (96, 16))
+    cache, _ = cache_insert(cache, ids, rows, jnp.ones(96, bool), admit=1)
+    probe = jnp.asarray(rng.integers(0, 400, 64, dtype=np.int32))
+    hit_j, rows_j = cache_probe(cache, probe)
+    hit_p, rows_p = cache_probe(cache, probe, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(hit_j), np.asarray(hit_p))
+    np.testing.assert_array_equal(np.asarray(rows_j), np.asarray(rows_p))
 
 
 @pytest.mark.parametrize("b,hq,hkv,lq,lk,dh", [

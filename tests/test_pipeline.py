@@ -83,6 +83,115 @@ def test_pipelined_loop_all_depths(fanouts):
     assert np.isfinite(np.asarray(losses)).all()
 
 
+def test_pipelined_loop_skips_redundant_final_generation():
+    """The old loop's ``min(t + 1, ...)`` clamp re-generated the last
+    schedule entry on the last step just to discard it; the train-only
+    final step must produce the EXACT same loss trajectory as a sequential
+    generate-then-train reference (same seeds, same rngs) — and count one
+    fewer generation."""
+    gen, dev, params, opt, train_fn, sched = _setup()
+    rng = jax.random.PRNGKey(3)
+    p_pipe, o_pipe, losses = pipelined_loop(
+        gen, train_fn, dev, sched, params, opt, rng)
+    # reference: batch t generated from rngs[t] (the documented schedule)
+    rngs = jax.random.split(rng, len(sched) + 1)
+    p_ref, o_ref = params, opt
+    ref_losses = []
+    tf = jax.jit(train_fn)
+    for t in range(len(sched)):
+        batch = gen(dev, jnp.asarray(sched[t]), rngs[t])
+        p_ref, o_ref, loss = tf(p_ref, o_ref, batch)
+        ref_losses.append(float(loss))
+    np.testing.assert_allclose(np.asarray(losses), np.asarray(ref_losses),
+                               rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(p_pipe), jax.tree.leaves(p_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_pipelined_loop_threads_feature_cache():
+    """Cached pipeline: the carry grows the FeatureCache, losses stay
+    finite, hits accumulate across iterations, and the returned cache holds
+    admitted rows."""
+    from jax.sharding import Mesh
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    n, dim, classes, fanouts = 800, 16, 5, (5, 3)
+    g = powerlaw_graph(n, avg_degree=6, n_hot=4, hot_degree=200, seed=0)
+    part = partition_edges(g, 1)
+    feats = node_features(n, dim)
+    labels = node_labels(n, classes)
+    gen, dev, cache0 = make_distributed_generator(
+        mesh, part, feats, labels, fanouts=fanouts,
+        cache_rows=512, cache_admit=1)
+    from repro.configs import REGISTRY, smoke_config
+    import dataclasses
+    cfg = dataclasses.replace(
+        smoke_config(REGISTRY["graphgen-gcn"]),
+        gcn_in_dim=dim, n_classes=classes, fanouts=fanouts)
+    params = gcn_mod.init_gcn(cfg, jax.random.PRNGKey(0))
+    opt = init_adam(params)
+    tcfg = TrainConfig(learning_rate=1e-3, total_steps=10)
+
+    def train_fn(params, opt, batch):
+        loss, grads = jax.value_and_grad(gcn_mod.gcn_loss)(params, batch)
+        params, opt, _ = adam_update(tcfg, params, grads, opt)
+        return params, opt, loss
+
+    table = balance_table(np.arange(n), 1, seed=0)
+    # repeat the SAME seed block so hot rows recur across iterations
+    sched = np.stack([table.per_worker[:, :8]] * 5)
+    params, opt, losses, cache = pipelined_loop(
+        gen, train_fn, dev, sched, params, opt, jax.random.PRNGKey(9),
+        cache=cache0)
+    assert losses.shape == (5,)
+    assert np.isfinite(np.asarray(losses)).all()
+    assert int(np.asarray(cache.keys >= 0).sum()) > 0   # rows were admitted
+    # cached and uncached generation agree bit-for-bit on the SAME rng
+    gen_nc, dev_nc = make_distributed_generator(
+        mesh, part, feats, labels, fanouts=fanouts)
+    rng = jax.random.PRNGKey(11)
+    seeds = jnp.asarray(sched[0])
+    b_nc = gen_nc(dev_nc, seeds, rng)
+    b_c, cache = gen(dev, seeds, rng, cache)
+    np.testing.assert_array_equal(np.asarray(b_nc.x_seed), np.asarray(b_c.x_seed))
+    for a, b in zip(b_nc.x_hops, b_c.x_hops):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(np.asarray(b_c.n_cache_hits).sum()) > 0
+
+
+def test_offline_loop_threads_feature_cache():
+    mesh = __import__("jax").sharding.Mesh(np.asarray(jax.devices()[:1]),
+                                           ("data",))
+    n, dim, classes = 400, 8, 4
+    g = powerlaw_graph(n, avg_degree=5, seed=3)
+    part = partition_edges(g, 1)
+    gen, dev, cache0 = make_distributed_generator(
+        mesh, part, node_features(n, dim), node_labels(n, classes),
+        fanouts=(4, 3), cache_rows=256, cache_admit=1)
+    from repro.configs import REGISTRY, smoke_config
+    import dataclasses
+    cfg = dataclasses.replace(
+        smoke_config(REGISTRY["graphgen-gcn"]),
+        gcn_in_dim=dim, n_classes=classes, fanouts=(4, 3))
+    params = gcn_mod.init_gcn(cfg, jax.random.PRNGKey(0))
+    opt = init_adam(params)
+    tcfg = TrainConfig(learning_rate=1e-3, total_steps=10)
+
+    def train_fn(params, opt, batch):
+        loss, grads = jax.value_and_grad(gcn_mod.gcn_loss)(params, batch)
+        params, opt, _ = adam_update(tcfg, params, grads, opt)
+        return params, opt, loss
+
+    table = balance_table(np.arange(n), 1, seed=0)
+    sched = np.stack([table.per_worker[:, :8]] * 3)
+    params, opt, losses, stats, cache = offline_loop(
+        gen, train_fn, dev, sched, params, opt, jax.random.PRNGKey(5),
+        cache=cache0)
+    assert losses.shape == (3,)
+    assert np.isfinite(np.asarray(losses)).all()
+    assert int(np.asarray(cache.keys >= 0).sum()) > 0
+
+
 def test_loader_prefetches_all_shards():
     def produce(shard):
         time.sleep(0.01)
