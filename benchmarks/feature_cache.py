@@ -1,20 +1,30 @@
-"""Hot-node feature cache: wire-slot reduction vs cache size on Zipf skew.
+"""Hot-node feature cache: wire-slot reduction vs cache size on Zipf skew,
+and replicated-vs-sharded placement at equal per-worker capacity.
 
 Industrial graphs are power-law; a Zipf(1.1) request stream is the
 canonical stand-in for the id mix a fanout sampler presents to the feature
 shuffle.  PR 1's dedup already collapses duplicates *within* an iteration;
 this benchmark measures what the cross-iteration cache tier removes on top:
-the number of distinct ids that still cross the all_to_all
+the number of distinct ids that still go to their owner
 (``FetchStats.n_unique`` summed over the run) as a function of
 ``cache_rows``, plus the steady-state hit rate and bytes saved.
+
+With ``--workers > 1`` every cache size is additionally measured in
+**sharded** placement (cache-aware routing: ids probe the worker whose
+CACHE shard owns them before falling through to the row owner).  Each
+replica of a replicated cache converges on the same Zipf head, so total
+distinct capacity stays ~C; the sharded cache partitions the id-space and
+reaches W*C — the sweep shows it serving strictly more unique hits at
+equal per-worker ``cache_rows`` (the gate ``main`` enforces).
 
     PYTHONPATH=src python -m benchmarks.feature_cache [--smoke] \
         [--out BENCH_feature_cache.json] [--workers N] [--iters K]
 
 Emits the ``name,us_per_call,derived`` CSV rows the benchmark harness
 expects and (with ``--out``) a JSON artifact so CI can accumulate the perf
-trajectory.  Acceptance anchor: at ``cache_rows=4096`` on Zipf(1.1) over
->= 20 iterations the routed-unique reduction vs cache-off is >= 30%.
+trajectory.  Acceptance anchors: at ``cache_rows=4096`` on Zipf(1.1) over
+>= 20 iterations the routed-unique reduction vs cache-off is >= 30%; at
+``--workers > 1`` sharded hits strictly exceed replicated hits per size.
 """
 from __future__ import annotations
 
@@ -45,14 +55,18 @@ def zipf_requests(rng, n_nodes: int, size: int, a: float = 1.1):
 
 
 def measure(n_nodes: int, dim: int, requests: int, iters: int,
-            cache_rows: int, *, admit: int = 2, zipf_a: float = 1.1,
+            cache_rows: int, *, admit: int = 2, assoc: int = 1,
+            mode: str = "replicated", zipf_a: float = 1.1,
             seed: int = 0, workers: int = 1, time_it: bool = False) -> dict:
     """Run ``iters`` cached fetches over a Zipf stream; count routed uniques.
 
     Runs the REAL ``fetch_rows`` path under shard_map (the all_to_all
     routes between ``workers`` devices when more than one is forced), so
-    ``FetchStats.n_unique`` is the number of ids that genuinely crossed —
-    or, at W=1, would cross — the wire.
+    ``FetchStats.n_unique`` is the number of ids that genuinely went — or,
+    at W=1, would go — to their owner.  Every worker draws its own iid
+    Zipf stream (distinct per-worker request mixes are exactly what
+    separates sharded from replicated placement).  Counters are summed
+    over ALL workers.
     """
     import jax
     import jax.numpy as jnp
@@ -60,7 +74,7 @@ def measure(n_nodes: int, dim: int, requests: int, iters: int,
     from jax.experimental.shard_map import shard_map
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    from repro.core.feature_cache import init_worker_caches
+    from repro.core.feature_cache import CacheConfig, init_worker_caches
     from repro.core.generation import fetch_rows
     from repro.launch.mesh import make_mesh
     from .common import time_fn
@@ -70,53 +84,68 @@ def measure(n_nodes: int, dim: int, requests: int, iters: int,
     rng = np.random.default_rng(seed)
     table = rng.standard_normal((workers * rows_pw, dim)).astype(np.float32)
     cached = cache_rows > 0
+    cfg = CacheConfig(n_rows=cache_rows, admit=admit, assoc=assoc,
+                      mode=mode).validated() if cached else None
 
+    # each worker fetches rows for ITS OWN stream, so the fetched block is
+    # per-worker data — it must leave the shard_map sharded, not stamped
+    # replicated (check_rep=False would mask the mismatch silently)
     if cached:
         def worker(t, i, c):
             c = jax.tree.map(lambda a: a[0], c)
-            out, c, fs, cs = fetch_rows(t, i, "data", cache=c,
-                                        cache_admit=admit)
+            out, c, fs, cs = fetch_rows(t, i[0], "data", cache=c,
+                                        cache_cfg=cfg)
             c = jax.tree.map(lambda a: a[None], c)
             stats = jax.tree.map(lambda a: a[None], (fs, cs))
-            return out, c, stats
+            return out[None], c, stats
 
         run = jax.jit(shard_map(
-            worker, mesh=mesh, in_specs=(P("data"), P(), P("data")),
-            out_specs=(P(), P("data"), P("data")), check_rep=False))
+            worker, mesh=mesh, in_specs=(P("data"), P("data"), P("data")),
+            out_specs=(P("data"), P("data"), P("data")), check_rep=False))
         state = jax.device_put(
             init_worker_caches(cache_rows, dim, workers),
             NamedSharding(mesh, P("data")))
     else:
         def worker_nc(t, i):
-            out, fs = fetch_rows(t, i, "data", return_stats=True)
-            return out, jax.tree.map(lambda a: a[None], fs)
+            out, fs = fetch_rows(t, i[0], "data", return_stats=True)
+            return out[None], jax.tree.map(lambda a: a[None], fs)
 
         run = jax.jit(shard_map(
-            worker_nc, mesh=mesh, in_specs=(P("data"), P()),
-            out_specs=(P(), P("data")), check_rep=False))
+            worker_nc, mesh=mesh, in_specs=(P("data"), P("data")),
+            out_specs=(P("data"), P("data")), check_rep=False))
         state = None
 
     table_j = jnp.asarray(table)
-    streams = [jnp.asarray(zipf_requests(rng, n_nodes, requests, zipf_a))
-               for _ in range(iters)]
+    # one iid Zipf stream PER WORKER per iteration, stacked [W, R] and
+    # sharded so each worker presents its own request mix
+    spec = NamedSharding(mesh, P("data"))
+    streams = [jax.device_put(jnp.asarray(np.stack(
+        [zipf_requests(rng, n_nodes, requests, zipf_a)
+         for _ in range(workers)])), spec) for _ in range(iters)]
     sum_unique = 0
     sum_hits = 0
+    sum_local_hits = 0
     sum_bytes_saved = 0
     dropped = 0
     for ids in streams:
         if cached:
             out, state, (fs, cs) = run(table_j, ids, state)
-            sum_hits += int(np.asarray(cs.n_hits)[0])
-            sum_bytes_saved += int(np.asarray(cs.bytes_saved)[0])
+            sum_hits += int(np.asarray(cs.n_hits).sum())
+            sum_local_hits += int(np.asarray(cs.n_local_hits).sum())
+            sum_bytes_saved += int(np.asarray(cs.bytes_saved).sum())
         else:
             out, fs = run(table_j, ids)
-        sum_unique += int(np.asarray(fs.n_unique)[0])
+        sum_unique += int(np.asarray(fs.n_unique).sum())
         dropped += int(np.asarray(fs.n_dropped).sum())
     rec = {
         "cache_rows": cache_rows,
         "admit": admit,
+        "assoc": assoc,
+        "mode": mode if cached else None,
         "sum_n_unique": sum_unique,
         "sum_hits": sum_hits,
+        "sum_local_hits": sum_local_hits,
+        "sum_shard_hits": sum_hits - sum_local_hits,
         "sum_bytes_saved": sum_bytes_saved,
         "dropped": dropped,
         "hit_rate": sum_hits / max(sum_hits + sum_unique, 1),
@@ -131,7 +160,7 @@ def measure(n_nodes: int, dim: int, requests: int, iters: int,
 
 
 def sweep(*, smoke: bool = False, workers: int = 1, iters: int = None,
-          seed: int = 0, time_it: bool = False) -> dict:
+          seed: int = 0, assoc: int = 2, time_it: bool = False) -> dict:
     n_nodes = 20_000 if smoke else 200_000
     dim = 32 if smoke else 128
     requests = 4_096 if smoke else 16_384
@@ -140,12 +169,15 @@ def sweep(*, smoke: bool = False, workers: int = 1, iters: int = None,
     base = measure(n_nodes, dim, requests, iters, 0, seed=seed,
                    workers=workers, time_it=time_it)
     results = [base]
+    modes = ("replicated", "sharded") if workers > 1 else ("replicated",)
     for c in sizes:
-        rec = measure(n_nodes, dim, requests, iters, c, seed=seed,
-                      workers=workers, time_it=time_it)
-        rec["unique_reduction"] = 1.0 - rec["sum_n_unique"] / max(
-            base["sum_n_unique"], 1)
-        results.append(rec)
+        for mode in modes:
+            rec = measure(n_nodes, dim, requests, iters, c, seed=seed,
+                          assoc=assoc, mode=mode, workers=workers,
+                          time_it=time_it)
+            rec["unique_reduction"] = 1.0 - rec["sum_n_unique"] / max(
+                base["sum_n_unique"], 1)
+            results.append(rec)
     return {
         "benchmark": "feature_cache",
         "zipf_a": 1.1,
@@ -154,8 +186,16 @@ def sweep(*, smoke: bool = False, workers: int = 1, iters: int = None,
         "requests_per_iter": requests,
         "iters": iters,
         "workers": workers,
+        "assoc": assoc,
         "results": results,
     }
+
+
+def _row_name(r: dict) -> str:
+    name = f"feature_cache_rows_{r['cache_rows']}"
+    if r.get("mode"):
+        name += f"_{r['mode']}"
+    return name
 
 
 def bench() -> list:
@@ -163,12 +203,11 @@ def bench() -> list:
     rec = sweep(smoke=True)
     rows = []
     for r in rec["results"]:
-        name = f"feature_cache_rows_{r['cache_rows']}"
         derived = (f"routed_unique={r['sum_n_unique']}"
                    f",hit_rate={r['hit_rate']:.3f}")
         if "unique_reduction" in r:
             derived += f",unique_reduction={r['unique_reduction']:.3f}"
-        rows.append((name, float(r.get("us_per_fetch", 0.0)), derived))
+        rows.append((_row_name(r), float(r.get("us_per_fetch", 0.0)), derived))
     return rows
 
 
@@ -178,8 +217,9 @@ def main() -> None:
                     help="reduced sizes (the CI configuration)")
     ap.add_argument("--workers", type=int, default=1,
                     help="forced host devices; >1 exercises the real "
-                         "all_to_all routing")
+                         "all_to_all routing AND the sharded-mode sweep")
     ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--assoc", type=int, default=2, choices=[1, 2, 4])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--time", action="store_true",
                     help="also time each fetch variant")
@@ -191,11 +231,11 @@ def main() -> None:
             + os.environ.get("XLA_FLAGS", ""))
 
     rec = sweep(smoke=args.smoke, workers=args.workers, iters=args.iters,
-                seed=args.seed, time_it=args.time)
+                seed=args.seed, assoc=args.assoc, time_it=args.time)
     print("name,us_per_call,derived")
     for r in rec["results"]:
         red = r.get("unique_reduction")
-        print(f"feature_cache_rows_{r['cache_rows']},"
+        print(f"{_row_name(r)},"
               f"{r.get('us_per_fetch', 0.0):.1f},"
               f"routed_unique={r['sum_n_unique']}"
               f",hit_rate={r['hit_rate']:.3f}"
@@ -204,10 +244,27 @@ def main() -> None:
         with open(args.out, "w") as f:
             json.dump(rec, f, indent=2)
         print(f"wrote {args.out}", file=sys.stderr)
-    at4096 = [r for r in rec["results"] if r["cache_rows"] == 4096]
+    failed = False
+    at4096 = [r for r in rec["results"]
+              if r["cache_rows"] == 4096 and r.get("mode") == "replicated"]
     if at4096 and at4096[0].get("unique_reduction", 0.0) < 0.30:
         print("WARNING: <30% routed-unique reduction at cache_rows=4096",
               file=sys.stderr)
+        failed = True
+    if args.workers > 1:
+        # the sharded claim: strictly more unique hits than replication at
+        # EQUAL per-worker cache_rows, for every swept size
+        by_size = {}
+        for r in rec["results"]:
+            if r.get("mode"):
+                by_size.setdefault(r["cache_rows"], {})[r["mode"]] = r
+        for c, recs in sorted(by_size.items()):
+            rep, sh = recs.get("replicated"), recs.get("sharded")
+            if rep and sh and sh["sum_hits"] <= rep["sum_hits"]:
+                print(f"WARNING: sharded hits {sh['sum_hits']} <= replicated "
+                      f"{rep['sum_hits']} at cache_rows={c}", file=sys.stderr)
+                failed = True
+    if failed:
         sys.exit(1)
 
 

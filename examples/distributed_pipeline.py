@@ -1,9 +1,12 @@
 """End-to-end multi-worker driver: 8 simulated workers run the full
 GraphGen+ workflow — partitioning, balance table, edge-centric generation
-with tree reduction, a device-resident hot-node feature cache threaded
-through the pipelined carry, synchronized training, checkpointing, a
-simulated worker FAILURE, rebalancing over survivors (the cache restarts
-cold — row ownership moved), and resume from checkpoint.
+with tree reduction, a SHARDED device-resident hot-node feature cache
+(each worker holds the authoritative shard of ``hash(id) mod W``, probed
+by one all_to_all round before any owner fetch) threaded through the
+pipelined carry, synchronized training, checkpointing, a simulated worker
+FAILURE, rebalancing over survivors (the cache restarts cold — both row
+ownership AND the shard map ``hash(id) mod W`` moved), and resume from
+checkpoint.
 
     python examples/distributed_pipeline.py        (sets its own XLA_FLAGS)
 """
@@ -23,6 +26,7 @@ import numpy as np          # noqa: E402
 from repro.configs import get_config                     # noqa: E402
 from repro.core.balance import balance_table             # noqa: E402
 from repro.core.config import TrainConfig                # noqa: E402
+from repro.core.feature_cache import CacheConfig         # noqa: E402
 from repro.core.generation import make_distributed_generator  # noqa: E402
 from repro.core.partition import partition_edges         # noqa: E402
 from repro.core.pipeline import make_pipelined_step      # noqa: E402
@@ -35,7 +39,8 @@ from repro.train.optimizer import adam_update, init_adam  # noqa: E402
 
 N, DIM, CLASSES, B = 20_000, 64, 8, 16
 FANOUTS = (8, 4)
-CACHE_ROWS = 1024
+# sharded 2-way cache: 8 workers x 1024 rows = 8192 distinct cached rows
+CACHE = CacheConfig(n_rows=1024, admit=2, assoc=2, mode="sharded")
 ckpt_dir = tempfile.mkdtemp(prefix="graphgen_ckpt_")
 
 
@@ -43,12 +48,12 @@ def build(workers: int):
     """(Re)build the distributed pipeline for a worker count — this is the
     elastic path used both at startup and after failures.  The hot-node
     cache starts empty on every (re)build: row ownership follows the new
-    partitioning, so surviving state would be stale."""
+    partitioning AND the shard map ``hash(id) mod W`` changed with W, so
+    surviving state would be stale on both axes."""
     mesh = make_mesh((workers,), ("data",))
     part = partition_edges(graph, workers)
     gen_fn, dev, cache = make_distributed_generator(
-        mesh, part, feats, labels, fanouts=FANOUTS,
-        cache_rows=CACHE_ROWS, cache_admit=2)
+        mesh, part, feats, labels, fanouts=FANOUTS, cache_cfg=CACHE)
     table = balance_table(np.arange(N), workers, seed=0)
     step = jax.jit(make_pipelined_step(gen_fn, train_fn, cached=True))
     return gen_fn, dev, table, step, cache

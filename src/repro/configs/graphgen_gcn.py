@@ -1,13 +1,15 @@
 """The paper's own model: mini-batch GCN on 2-hop (40, 20) subgraphs (§3).
 
-The hot-node feature cache (4096 rows/worker, admit-after-2) serves the
-power-law head of the request stream device-locally across iterations —
+The hot-node feature cache (4096 rows/worker, admit-after-2, 4-way sets)
+serves the power-law head of the request stream across iterations —
 DistDGL/GraphScale-style locality caching layered onto the paper's
-deduplicated feature shuffle."""
+deduplicated feature shuffle.  Sharded placement partitions the cache
+id-space over the worker axis (effective capacity x W); on a single
+worker it degenerates to the replicated behavior."""
 from ..core.config import ModelConfig
 
 CONFIG = ModelConfig(
     name="graphgen-gcn", family="gcn",
     gcn_in_dim=128, gcn_hidden=256, n_classes=64, fanouts=(40, 20),
-    cache_rows=4096, cache_admit=2,
+    cache_rows=4096, cache_admit=2, cache_assoc=4, cache_mode="sharded",
 )

@@ -7,5 +7,5 @@ CONFIG = ModelConfig(
     name="graphgen-gcn-deep", family="gcn",
     gcn_in_dim=128, gcn_hidden=256, n_classes=64, fanouts=(15, 10, 5),
     # deep trees revisit the hot head at every level -> paper-cell cache
-    cache_rows=4096, cache_admit=2,
+    cache_rows=4096, cache_admit=2, cache_assoc=4, cache_mode="sharded",
 )

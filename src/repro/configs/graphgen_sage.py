@@ -5,6 +5,7 @@ from ..core.config import ModelConfig
 CONFIG = ModelConfig(
     name="graphgen-sage", family="gcn",
     gcn_in_dim=128, gcn_hidden=256, n_classes=64, fanouts=(8,),
-    # shallow trees request far fewer rows per iteration -> smaller cache
-    cache_rows=2048, cache_admit=2,
+    # shallow trees request far fewer rows per iteration -> smaller cache;
+    # 2-way sets + sharded placement keep the small cache effective
+    cache_rows=2048, cache_admit=2, cache_assoc=2, cache_mode="sharded",
 )

@@ -11,6 +11,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+#: cache associativities the probe/insert paths implement and the cache
+#: placement modes — defined HERE (jax-free) so ModelConfig validation and
+#: core/feature_cache.py (which imports jax) share one source of truth
+VALID_CACHE_ASSOC = (1, 2, 4)
+VALID_CACHE_MODES = ("replicated", "sharded")
+
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
@@ -62,8 +68,18 @@ class ModelConfig:
     fanouts: Tuple[int, ...] = ()
     # --- distributed feature-fetch policy (generation step 4) ---
     cache_rows: int = 0        # hot-node feature cache slots per worker
-                               # (power of two; 0 disables the cache tier)
+                               # (rounded UP to a power of two at
+                               # construction; 0 disables the cache tier)
     cache_admit: int = 2       # misses before a candidate id is admitted
+    cache_assoc: int = 1       # ways per cache set (1 = direct-mapped;
+                               # 2/4-way recovers slot-collision losses)
+    cache_mode: str = "replicated"
+                               # "replicated": each worker caches its own
+                               # stream (PR 2 behavior, the single-worker
+                               # default); "sharded": the cache id-space
+                               # partitions across workers and misses are
+                               # first routed to their cache-shard holder
+                               # (effective capacity x W)
     capacity_slack: Optional[float] = None
                                # per-destination shuffle capacity slack;
                                # None = launcher auto-sizes from n_dropped
@@ -73,6 +89,29 @@ class ModelConfig:
     scan_layers: bool = True   # stack layer params and lax.scan over them
     use_flash_attention: bool = False
     fsdp_params: bool = True   # shard params over the data axis (ZeRO-3 style)
+
+    def __post_init__(self):
+        # validate the cache policy at CONSTRUCTION, not at trace time: a
+        # non-power-of-two cache_rows used to surface as a ValueError deep
+        # inside the jitted fetch (hash_slots), long after the config was
+        # built.  Round up — the caller asked for at least that many slots.
+        if self.cache_rows < 0:
+            raise ValueError(f"cache_rows must be >= 0, got {self.cache_rows}")
+        if self.cache_rows and self.cache_rows & (self.cache_rows - 1):
+            object.__setattr__(self, "cache_rows",
+                               1 << self.cache_rows.bit_length())
+        if self.cache_assoc not in VALID_CACHE_ASSOC:
+            raise ValueError(
+                f"cache_assoc must be one of {VALID_CACHE_ASSOC}, "
+                f"got {self.cache_assoc}")
+        if self.cache_rows and self.cache_assoc > self.cache_rows:
+            raise ValueError(
+                f"cache_assoc {self.cache_assoc} exceeds cache_rows "
+                f"{self.cache_rows}")
+        if self.cache_mode not in VALID_CACHE_MODES:
+            raise ValueError(
+                f"cache_mode must be one of {VALID_CACHE_MODES}, "
+                f"got {self.cache_mode!r}")
 
     @property
     def resolved_head_dim(self) -> int:

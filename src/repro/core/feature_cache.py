@@ -8,22 +8,46 @@ caching exploit exactly this recurrence — here it becomes an explicit,
 static-shape cache that sits in front of the routed ``all_to_all`` feature
 shuffle (``generation.fetch_rows``):
 
-  probe  — direct-mapped by multiplicative hash: node ``i`` can only live
-           in slot ``hash(i) mod C``, so a probe is one gather + compare
-           (no associative search, XLA-friendly static shapes).
+  probe  — set-associative by multiplicative hash: node ``i`` can only
+           live in set ``hash(i) mod S`` and one of its ``assoc`` ways, so
+           a probe is ``assoc`` gathers + compares (no unbounded
+           associative search, XLA-friendly static shapes).  ``assoc=1``
+           is the direct-mapped PR 2 layout; 2/4-way sets recover the
+           ~1/3 of hot ids that direct mapping loses to balls-in-bins
+           slot collisions at load factor 1.
   route  — only cache *misses* enter the all_to_all; hits are served from
            the device-resident copy, bit-identical to the owner's row
            (rows are immutable node features).
   insert — frequency admission: a missed id must be seen ``admit`` times
-           at its slot (tracked by a candidate tag + counter, TinyLFU
-           style) before it evicts the resident — one-off tail ids from
-           the Zipf tail never displace hot rows.
+           at its set (tracked by a candidate tag + counter, TinyLFU
+           style) before it evicts a resident — one-off tail ids from
+           the Zipf tail never displace hot rows.  With ``assoc > 1``
+           the admission counter doubles as the victim policy: a new
+           candidate lands in the way with the smallest counter (empty
+           ways first), so the most-contended candidates keep their
+           progress toward admission.
 
-The cache is **per-worker replicated state**: every worker keeps its own
-[C] keys + [C, D] rows, threaded *functionally* through the generation
-step (shard_map worker takes and returns it), the pipelined step (the
-carry becomes ``(params, opt_state, batch, cache)``) and the launchers.
-No mutation, no host round-trip: the state lives in device memory across
+Two placement modes (``CacheConfig.mode``):
+
+  "replicated" — the PR 2 behavior: every worker caches its OWN request
+           stream; total distinct capacity stays ~C no matter how many
+           workers join (all replicas converge on the same Zipf head).
+  "sharded" — the cache id-space is partitioned across the worker axis:
+           worker ``shard_of(id, W)`` is the authoritative shard for
+           ``id``, so total capacity grows to W*C distinct rows.  The
+           fetch front end gains a second routing stage (one all_to_all
+           probe round to the shard holders) — see
+           ``generation.fetch_rows``.  The shard hash uses a DIFFERENT
+           multiplicative mixer than the set hash so shard routing and
+           in-cache set indices stay independent (with a shared mixer,
+           the ids landing on one shard would collapse onto a fraction
+           of its sets).
+
+The cache is **per-worker state**: every worker keeps its own [C] keys +
+[C, D] rows, threaded *functionally* through the generation step
+(shard_map worker takes and returns it), the pipelined step (the carry
+becomes ``(params, opt_state, batch, cache)``) and the launchers.  No
+mutation, no host round-trip: the state lives in device memory across
 iterations exactly like optimizer state.
 
 Invariant the tests pin down: a cached fetch returns **bit-identical**
@@ -39,24 +63,72 @@ import jax.numpy as jnp
 import numpy as np
 
 # Knuth multiplicative hash constant (2^32 / phi); with a power-of-two
-# cache we keep the TOP log2(C) bits of id * K, which are the well-mixed
-# ones for multiplicative hashing.
+# set count we keep the TOP log2(S) bits of id * K, which are the
+# well-mixed ones for multiplicative hashing.
 _HASH_K = np.uint32(2654435761)
+# murmur3 fmix multiplier for the cache-SHARD routing hash — deliberately
+# a different mixer than ``_HASH_K`` so a shard's resident ids still
+# spread over all of its sets (see module docstring).
+_SHARD_K = np.uint32(0x85EBCA6B)
+
+# single source of truth for the allowed policy values lives in the
+# jax-free config module (ModelConfig validates against the same tuples);
+# re-exported here under the names the kernels import
+from .config import (VALID_CACHE_ASSOC as VALID_ASSOC,
+                     VALID_CACHE_MODES as VALID_MODES)
 
 
 class CacheConfig(NamedTuple):
-    """Static (python-int) cache policy knobs, safe to close over in jit."""
-    n_rows: int          # cache slots, power of two (0 disables)
-    admit: int = 2       # misses at a slot before a candidate is installed
+    """Static (python-int/str) cache policy knobs, safe to close over in
+    jit — THE single source of cache policy, built once from
+    ``ModelConfig`` (``CacheConfig.from_model``) and threaded through
+    ``fetch_rows`` / ``_worker_generate`` / the launchers."""
+    n_rows: int          # total cache slots, power of two (0 disables)
+    admit: int = 2       # misses at a set before a candidate is installed
+    assoc: int = 1       # ways per set (1 = direct-mapped), in VALID_ASSOC
+    mode: str = "replicated"   # "replicated" | "sharded" (see module doc)
+
+    @property
+    def n_sets(self) -> int:
+        return self.n_rows // self.assoc
+
+    def validated(self) -> "CacheConfig":
+        if self.n_rows <= 0:
+            raise ValueError(f"cache n_rows must be > 0, got {self.n_rows}")
+        if self.n_rows & (self.n_rows - 1):
+            raise ValueError(
+                f"cache n_rows must be a power of two, got {self.n_rows}")
+        if self.assoc not in VALID_ASSOC:
+            raise ValueError(
+                f"cache assoc must be one of {VALID_ASSOC}, got {self.assoc}")
+        if self.assoc > self.n_rows:
+            raise ValueError(
+                f"cache assoc {self.assoc} exceeds n_rows {self.n_rows}")
+        if self.mode not in VALID_MODES:
+            raise ValueError(
+                f"cache mode must be one of {VALID_MODES}, got {self.mode!r}")
+        return self
+
+    @classmethod
+    def from_model(cls, cfg) -> Optional["CacheConfig"]:
+        """Policy from a ``ModelConfig`` (None when the cache is disabled)."""
+        if cfg.cache_rows <= 0:
+            return None
+        return cls(n_rows=cfg.cache_rows, admit=cfg.cache_admit,
+                   assoc=cfg.cache_assoc, mode=cfg.cache_mode).validated()
 
 
 class FeatureCache(NamedTuple):
     """One worker's cache state — an explicit pytree, threaded functionally.
 
+    The flat [C] layout is associativity-agnostic: set ``s`` owns slots
+    ``s*assoc .. s*assoc + assoc - 1`` (the ``CacheConfig`` decides how the
+    slots are grouped; the state arrays never change shape).
+
     keys    [C]     int32  resident node id per slot (-1 = empty)
     rows    [C, D]  float  resident feature rows (bit-exact table copies)
     tags    [C]     int32  candidate id awaiting admission (-1 = none)
-    counts  [C]     int32  consecutive-miss count for the candidate
+    counts  [C]     int32  admission-progress count for the candidate
     """
     keys: jax.Array
     rows: jax.Array
@@ -69,20 +141,50 @@ class FeatureCache(NamedTuple):
 
 
 class CacheStats(NamedTuple):
-    """Telemetry from one cached fetch (per-worker scalars)."""
-    n_hits: jax.Array        # unique probes served from the cache
-    n_misses: jax.Array      # unique probes routed over the wire
-    n_inserted: jax.Array    # rows admitted this fetch
-    bytes_saved: jax.Array   # wire bytes the hits did not cross
+    """Telemetry from one cached fetch (per-worker scalars).
+
+    ``n_hits`` splits into ``n_local_hits`` (the requester's own shard —
+    or any hit in replicated mode — no wire crossing) and ``n_shard_hits``
+    (served by a REMOTE cache shard: the row crosses the wire from the
+    shard holder instead of the owner, so capacity multiplies by W but
+    wire bytes do not shrink).  ``bytes_saved`` therefore counts only the
+    local hits."""
+    n_hits: jax.Array        # unique probes served from the cache tier
+    n_misses: jax.Array      # unique probes routed to their owner
+    n_inserted: jax.Array    # rows admitted into THIS worker's shard
+    bytes_saved: jax.Array   # wire bytes the local hits did not cross
+    n_local_hits: jax.Array  # hits served without crossing the wire
+    n_shard_hits: jax.Array  # hits served by a remote cache shard
 
 
-def hash_slots(ids: jax.Array, n_rows: int) -> jax.Array:
-    """Direct-mapped slot of each id: top bits of the multiplicative hash."""
-    if n_rows & (n_rows - 1):
-        raise ValueError(f"cache n_rows must be a power of two, got {n_rows}")
-    shift = 32 - int(n_rows).bit_length() + 1      # keep log2(n_rows) bits
+def hash_slots(ids: jax.Array, n_sets: int) -> jax.Array:
+    """Set index of each id: top bits of the multiplicative hash.
+
+    For a direct-mapped cache (``assoc == 1``) the set IS the slot.  The
+    degenerate single-set cache (``n_sets == 1``) would need a 32-bit
+    logical shift — out of range for uint32 — so it short-circuits to
+    set 0 for every id instead of tracing an undefined shift."""
+    if n_sets <= 0 or n_sets & (n_sets - 1):
+        raise ValueError(f"cache set count must be a power of two, "
+                         f"got {n_sets}")
+    if n_sets == 1:
+        return jnp.zeros(ids.shape, jnp.int32)
+    shift = 32 - (int(n_sets).bit_length() - 1)    # keep log2(n_sets) bits
     h = ids.astype(jnp.uint32) * _HASH_K
     return jax.lax.shift_right_logical(h, jnp.uint32(shift)).astype(jnp.int32)
+
+
+def shard_of(ids: jax.Array, n_workers: int) -> jax.Array:
+    """Cache-shard owner of each id: worker ``mix(id) mod W``.
+
+    This is the SECOND routing function of the sharded mode — independent
+    of both the row-ownership map (``id // rows``) and the in-cache set
+    hash (different multiplier, see ``_SHARD_K``)."""
+    if n_workers <= 1:
+        return jnp.zeros(ids.shape, jnp.int32)
+    h = ids.astype(jnp.uint32) * _SHARD_K
+    h = jax.lax.shift_right_logical(h, jnp.uint32(16))
+    return (h % np.uint32(n_workers)).astype(jnp.int32)
 
 
 def init_cache(n_rows: int, dim: int, dtype=jnp.float32) -> FeatureCache:
@@ -98,7 +200,7 @@ def init_cache(n_rows: int, dim: int, dtype=jnp.float32) -> FeatureCache:
 def init_worker_caches(n_rows: int, dim: int, n_workers: int,
                        dtype=np.float32) -> FeatureCache:
     """Host-side [W, ...] stack of empty per-worker caches (for device_put
-    with a ``P(axis)`` sharding — each worker owns one replica)."""
+    with a ``P(axis)`` sharding — each worker owns one replica/shard)."""
     return FeatureCache(
         keys=np.full((n_workers, n_rows), -1, np.int32),
         rows=np.zeros((n_workers, n_rows, dim), dtype),
@@ -142,23 +244,37 @@ def cache_probe(
     cache: FeatureCache,
     ids: jax.Array,
     valid: Optional[jax.Array] = None,
+    *,
+    cfg: CacheConfig,
     impl: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Probe [R] ids: ``(hit [R] bool, rows [R, D])`` (zeros where missed).
 
-    ``impl`` defaults to the module setting (``set_probe_impl``);
+    ``cfg`` is REQUIRED and must be the config the state was populated
+    under — the slot layout is a property of the populated state, and a
+    probe under a different associativity silently misses resident rows
+    (never returns wrong ones: ``keys[slot] == id`` still gates the
+    gather).  ``impl`` defaults to the module setting (``set_probe_impl``);
     ``"pallas"`` routes through the fused VMEM-tiled probe+gather kernel
     (kernels/cache_gather.py, platform-dispatched via kernels/ops.py); the
     ``"jnp"`` path lowers to the same gather+compare.
     """
+    if cfg.n_rows != cache.n_rows:
+        raise ValueError(f"cfg.n_rows {cfg.n_rows} != cache state rows "
+                         f"{cache.n_rows}: probing under a mismatched "
+                         f"layout silently loses residents")
+    a = cfg.assoc
     if (impl or _PROBE_IMPL) == "pallas":
         from ..kernels.ops import cache_probe_gather
         hit, rows = cache_probe_gather(cache.keys, cache.rows, ids,
-                                       use_kernel=True)
+                                       assoc=a, use_kernel=True)
     else:
-        slot = hash_slots(ids, cache.n_rows)
-        hit = cache.keys[slot] == ids
-        rows = jnp.where(hit[:, None], cache.rows[slot], 0)
+        sets = hash_slots(ids, cfg.n_sets)
+        slots = sets[:, None] * a + jnp.arange(a, dtype=jnp.int32)[None, :]
+        match = cache.keys[slots] == ids[:, None]           # [R, A]
+        hit = match.any(axis=-1)
+        way = jnp.argmax(match, axis=-1).astype(jnp.int32)  # first match
+        rows = jnp.where(hit[:, None], cache.rows[sets * a + way], 0)
     if valid is not None:
         hit = jnp.logical_and(hit, valid)
         rows = jnp.where(hit[:, None], rows, 0)
@@ -170,32 +286,95 @@ def cache_insert(
     ids: jax.Array,
     rows: jax.Array,
     should: jax.Array,
-    admit: int = 2,
+    cfg: CacheConfig,
 ) -> Tuple[FeatureCache, jax.Array]:
     """Offer [R] fetched rows to the cache; returns (new_cache, n_inserted).
 
+    ``cfg`` is REQUIRED and must match the config every probe of this
+    state uses (the slot layout is a property of the populated state).
     ``should`` masks the offers (missed AND actually served — a
     capacity-dropped zero row must never be cached).  Admission: a
-    candidate id is installed once its per-slot counter reaches ``admit``
-    (``admit <= 1`` degrades to always-insert).  Distinct ids colliding on
-    one slot within a single batch are resolved to ONE winner (highest
-    request index) *before* any scatter: the state is four arrays updated
-    by four scatters, and duplicate scatter indices apply in unspecified
-    order per scatter — without a pre-resolved winner, ``keys[s]`` could
-    take id A while ``rows[s]`` takes B's row and every later probe of A
-    would silently return B's features.
+    candidate id is installed once its counter reaches ``cfg.admit``
+    (``admit <= 1`` degrades to always-insert).  Way choice inside a set:
+    an id already tracked as a candidate keeps its way; a new candidate
+    takes the way with the smallest admission counter, empty ways first —
+    the counter IS the victim policy, so contended candidates keep their
+    progress.  Distinct ids colliding on one slot within a single batch
+    are resolved to ONE winner (highest request index) *before* any
+    scatter: the state is four arrays updated by four scatters, and
+    duplicate scatter indices apply in unspecified order per scatter —
+    without a pre-resolved winner, ``keys[s]`` could take id A while
+    ``rows[s]`` takes B's row and every later probe of A would silently
+    return B's features.
     """
+    if cfg.n_rows != cache.n_rows:
+        raise ValueError(f"cfg.n_rows {cfg.n_rows} != cache state rows "
+                         f"{cache.n_rows}: inserting under a mismatched "
+                         f"layout silently corrupts the placement")
+    a, admit = cfg.assoc, cfg.admit
     c = cache.n_rows
     r = ids.shape[0]
-    slot = hash_slots(ids, c)
+    sets = hash_slots(ids, cfg.n_sets)
+    slots = sets[:, None] * a + jnp.arange(a, dtype=jnp.int32)[None, :]
+    keys_w = cache.keys[slots]                              # [R, A]
+    tags_w = cache.tags[slots]
+    counts_w = cache.counts[slots]
+    tag_match = tags_w == ids[:, None]
+    has_tag = tag_match.any(axis=-1)
+    tag_way = jnp.argmax(tag_match, axis=-1).astype(jnp.int32)
+    # victim policy: VIRGIN ways first (no resident AND no candidate in
+    # flight — a way whose tag is mid-admission carries progress worth as
+    # much as a resident's, so it scores by its counter like occupied
+    # ways do), then smallest counter.  Ways claimed by a same-batch
+    # TAGGED offer are excluded outright (huge score): the tagged offer
+    # sits outside the preference order on its tag way, and a new
+    # candidate routed onto it would trample its admission progress while
+    # virgin ways sit free.
+    claim_slot = sets * a + tag_way
+    claimed = jnp.zeros((c,), jnp.bool_).at[
+        jnp.where(jnp.logical_and(should, has_tag), claim_slot, c)
+    ].set(True, mode="drop")
+    victim_score = jnp.where(jnp.logical_and(keys_w < 0, tags_w < 0),
+                             -1, counts_w)
+    victim_score = jnp.where(claimed[slots], jnp.int32(2**30), victim_score)
+    ways_pref = jnp.argsort(victim_score, axis=-1).astype(jnp.int32)  # [R, A]
+    # Same-set offers within ONE batch must not all pick the same victim
+    # way (the per-slot winner resolution below would then drop all but
+    # one even with free ways left) — rank each NEW candidate within its
+    # set and hand out ways in victim-preference order.  The rank counts
+    # DISTINCT untagged ids only: duplicates of one id (several workers
+    # offering the same hot row to its shard holder in one sharded
+    # admission round) must share a way so the per-slot winner keeps
+    # exactly one copy, and tagged offers consume no preference slot
+    # (they keep their tag way).
+    sets_eff = jnp.where(should, sets, cfg.n_sets)
+    o1 = jnp.argsort(ids)
+    order = o1[jnp.argsort(sets_eff[o1])]    # stable: (set, id) lexicographic
+    s_sorted = sets_eff[order]
+    i_sorted = ids[order]
+    new_group = jnp.concatenate([
+        jnp.ones((1,), jnp.bool_),
+        jnp.logical_or(s_sorted[1:] != s_sorted[:-1],
+                       i_sorted[1:] != i_sorted[:-1])])
+    # cumulative count of NEW-CANDIDATE group starts: constant across a
+    # group (increments only at group starts), so duplicates share a rank
+    nontag_start = jnp.logical_and(new_group, ~has_tag[order])
+    ng = jnp.cumsum(nontag_start).astype(jnp.int32)
+    set_start = jnp.searchsorted(s_sorted, s_sorted, side="left")
+    before_set = ng[set_start] - nontag_start[set_start].astype(jnp.int32)
+    rank = jnp.zeros((r,), jnp.int32).at[order].set(ng - before_set - 1)
+    victim_way = jnp.take_along_axis(ways_pref, (rank % a)[:, None],
+                                     axis=-1)[:, 0]
+    way = jnp.where(has_tag, tag_way, victim_way)
+    slot = sets * a + way                                   # [R]
+    prev = jnp.take_along_axis(counts_w, way[:, None], axis=-1)[:, 0]
+    new_count = jnp.where(has_tag, prev + 1, 1)
     # one deterministic winner per slot among the offers (max-combiner
     # scatter is order-independent); only the winner touches the slot
     idx = jnp.arange(r, dtype=jnp.int32)
     win = jnp.full((c,), -1, jnp.int32).at[
         jnp.where(should, slot, c)].max(idx, mode="drop")
     offer = jnp.logical_and(should, win[slot] == idx)
-    same_cand = cache.tags[slot] == ids
-    new_count = jnp.where(same_cand, cache.counts[slot] + 1, 1)
     install = jnp.logical_and(offer, new_count >= admit)
     # not-selected offers scatter OUT OF BOUNDS so mode="drop" discards them
     s_track = jnp.where(offer, slot, c)

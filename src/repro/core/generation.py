@@ -39,17 +39,42 @@ trees driven by ``fanouts = (k_1, ..., k_L)``:
                               slot that asked for it.  In front of the
                               all_to_all sits an optional **device-resident
                               hot-node cache** (core/feature_cache.py):
-                              distinct ids are first probed against a
-                              per-worker direct-mapped cache and only the
-                              *misses* are routed — hot rows that recur
-                              across iterations stop crossing the
-                              interconnect entirely, and served misses are
-                              admitted back (frequency admission) so the
-                              cache tracks the workload.  Requests beyond
-                              the per-destination capacity are *counted*
-                              (``SubgraphBatch.n_dropped``), never silently
-                              zero-filled, and cache hits/misses surface as
+                              distinct ids are first probed against the
+                              cache tier and only the *misses* are routed —
+                              hot rows that recur across iterations stop
+                              being fetched from their owners, and served
+                              misses are admitted back (frequency
+                              admission) so the cache tracks the workload.
+                              Requests beyond the per-destination capacity
+                              are *counted* (``SubgraphBatch.n_dropped``),
+                              never silently zero-filled, and cache
+                              hits/misses surface as
                               ``SubgraphBatch.n_cache_hits/n_cache_misses``.
+
+**Two-stage cache-aware routing** (``CacheConfig.mode == "sharded"``): the
+replicated cache caps total distinct capacity at ~C no matter how many
+workers join (every replica converges on the same Zipf head).  In sharded
+mode the cache id-space is partitioned over the worker axis — worker
+``shard_of(id, W)`` is the authoritative cache shard for ``id`` — and a
+missed id takes up to two routed rounds:
+
+  stage 1 (shard probe)  — each deduplicated id is routed to its
+           *cache-shard* worker with one ``all_to_all`` probe round; the
+           shard holder probes its local ``FeatureCache`` and returns
+           (hit, row) — DistDGL-style "ask the worker whose CACHE holds a
+           hot row, not its owner".
+  stage 2 (owner fetch)  — only shard-*misses* fall through to the routed
+           owner fetch; the served rows then ride one more ``all_to_all``
+           back to the shard holders (reusing the probe round's slot
+           assignment) so admission updates the AUTHORITATIVE shard, not a
+           local replica.
+
+Effective capacity multiplies by W; a shard hit's row still crosses the
+wire (shard holder -> requester instead of owner -> requester), so
+``CacheStats`` splits ``n_local_hits`` (no crossing) from ``n_shard_hits``
+and ``bytes_saved`` counts only the former.  Sharded fetches stay
+bit-identical to uncached fetches — cached rows are verbatim table copies
+wherever they live.
 
 Edges sampled for several seeds are *replicated* into each seed's subgraph
 (paper step 3), which falls out of sampling per frontier slot.
@@ -67,9 +92,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from ..graph.subgraph import SubgraphBatch
-from .feature_cache import (CacheStats, FeatureCache, cache_insert,
-                            cache_probe, init_worker_caches,
-                            restore_worker_axis, squeeze_worker_axis)
+from .feature_cache import (CacheConfig, CacheStats, FeatureCache,
+                            cache_insert, cache_probe, init_worker_caches,
+                            restore_worker_axis, shard_of,
+                            squeeze_worker_axis)
 from .partition import PartitionedGraph
 from .tree_reduce import axis_size, tree_allreduce, tree_reduce_scatter
 
@@ -147,6 +173,38 @@ def dedup_requests(ids: jax.Array):
     return uniq, inverse, valid, n_unique
 
 
+class _RoutePlan(NamedTuple):
+    """Per-destination slot assignment of one routed all_to_all round.
+
+    The assignment is a pure function of ``(dest, cap)`` — the shard-probe
+    and shard-admission rounds rely on this determinism to reuse ONE plan,
+    so the rows a requester sends for admission land exactly on the recv
+    slots whose ids the shard holder probed.
+    """
+    order: jax.Array        # [R] argsort of dest (requests in send order)
+    sorted_dest: jax.Array  # [R] dest[order] (w = sentinel "nowhere")
+    slot_c: jax.Array       # [R] per-destination slot, cap = overflow/drop
+    ok: jax.Array           # [R] request got a wire slot (in sorted order)
+
+
+def _route_plan(dest: jax.Array, cap: int, w: int) -> _RoutePlan:
+    """Assign each request a (destination, slot) wire position.
+
+    ``dest == w`` is the sentinel for requests that must not cross the
+    interconnect; requests beyond ``cap`` per destination overflow to slot
+    index ``cap`` so a ``mode="drop"`` scatter discards them (clipping
+    would overwrite the request already in the last slot).
+    """
+    r = dest.shape[0]
+    order = jnp.argsort(dest)
+    sorted_dest = dest[order]
+    first = jnp.searchsorted(sorted_dest, sorted_dest, side="left")
+    slot = jnp.arange(r, dtype=jnp.int32) - first
+    ok = jnp.logical_and(slot < cap, sorted_dest < w)
+    slot_c = jnp.where(ok, slot, cap)
+    return _RoutePlan(order, sorted_dest, slot_c, ok)
+
+
 def _routed_fetch(
     table_local: jax.Array,
     ids: jax.Array,
@@ -168,27 +226,98 @@ def _routed_fetch(
     # invalid slots route to a sentinel bucket past the last worker so they
     # neither consume capacity nor cross the interconnect
     owner = jnp.where(valid, owner, w)
-    order = jnp.argsort(owner)
-    sorted_owner = owner[order]
-    first = jnp.searchsorted(sorted_owner, sorted_owner, side="left")
-    slot = jnp.arange(r, dtype=jnp.int32) - first
-    sorted_valid = sorted_owner < w
-    ok = jnp.logical_and(slot < cap, sorted_valid)
-    # overflow + sentinel requests go OUT OF BOUNDS so mode="drop" discards
-    # them (clipping would overwrite the request already in the last slot)
-    slot_c = jnp.where(ok, slot, cap)
+    plan = _route_plan(owner, cap, w)
     send = jnp.zeros((w, cap), dtype=jnp.int32)
-    send = send.at[sorted_owner, slot_c].set(ids[order], mode="drop")
+    send = send.at[plan.sorted_dest, plan.slot_c].set(ids[plan.order],
+                                                      mode="drop")
     recv = lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0, tiled=True)
     me = lax.axis_index(axis_name)
     local = jnp.clip(recv - me * rows, 0, rows - 1)
     served = table_local[local]                      # [w, cap, D]
     resp = lax.all_to_all(served, axis_name, split_axis=0, concat_axis=0, tiled=True)
-    got = resp[jnp.clip(sorted_owner, 0, w - 1), jnp.clip(slot_c, 0, cap - 1)]
-    got = jnp.where(ok[:, None], got, 0)
+    got = resp[jnp.clip(plan.sorted_dest, 0, w - 1),
+               jnp.clip(plan.slot_c, 0, cap - 1)]
+    got = jnp.where(plan.ok[:, None], got, 0)
     out = jnp.zeros((r, table_local.shape[1]), table_local.dtype)
-    served = jnp.zeros((r,), jnp.bool_).at[order].set(ok)
-    return out.at[order].set(got), served
+    served = jnp.zeros((r,), jnp.bool_).at[plan.order].set(plan.ok)
+    return out.at[plan.order].set(got), served
+
+
+def _shard_probe(
+    cache: FeatureCache,
+    cfg: CacheConfig,
+    ids: jax.Array,
+    valid: jax.Array,
+    axis_name: str,
+    cap: int,
+    w: int,
+):
+    """Stage-1 routing: probe each id against its CACHE-SHARD worker.
+
+    One all_to_all round trip — ids ride to their shard holders, every
+    holder probes its local shard for everything it received, and
+    (hit, row) ride back.  Returns ``(hit [R], rows [R, D], plan,
+    recv_ids [w, cap])``; ids beyond the probe capacity simply miss (they
+    fall through to the owner fetch — a lost hit opportunity, never a
+    correctness loss).  ``plan``/``recv_ids`` feed ``_shard_admit`` so the
+    admission round reuses this round's slot assignment.
+    """
+    r = ids.shape[0]
+    dest = jnp.where(valid, shard_of(ids, w), w)
+    plan = _route_plan(dest, cap, w)
+    # empty probe slots carry -1, which the probe masks out (node ids are
+    # always >= 0, so -1 can never alias a resident key)
+    send = jnp.full((w, cap), -1, jnp.int32)
+    send = send.at[plan.sorted_dest, plan.slot_c].set(ids[plan.order],
+                                                      mode="drop")
+    recv = lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0, tiled=True)
+    flat = recv.reshape(-1)
+    hit_f, rows_f = cache_probe(cache, flat, valid=flat >= 0, cfg=cfg)
+    d = rows_f.shape[1]
+    hit_b = lax.all_to_all(hit_f.reshape(w, cap), axis_name,
+                           split_axis=0, concat_axis=0, tiled=True)
+    rows_b = lax.all_to_all(rows_f.reshape(w, cap, d), axis_name,
+                            split_axis=0, concat_axis=0, tiled=True)
+    g = (jnp.clip(plan.sorted_dest, 0, w - 1), jnp.clip(plan.slot_c, 0, cap - 1))
+    got_hit = jnp.logical_and(hit_b[g], plan.ok)
+    got_rows = jnp.where(got_hit[:, None], rows_b[g], 0)
+    hit = jnp.zeros((r,), jnp.bool_).at[plan.order].set(got_hit)
+    hit_rows = jnp.zeros((r, d), rows_f.dtype).at[plan.order].set(got_rows)
+    return hit, hit_rows, plan, recv
+
+
+def _shard_admit(
+    cache: FeatureCache,
+    cfg: CacheConfig,
+    plan: _RoutePlan,
+    recv_ids: jax.Array,
+    fetched: jax.Array,
+    should: jax.Array,
+    axis_name: str,
+    w: int,
+):
+    """Stage-2 write-back: offer owner-fetched rows to their shard holders.
+
+    Reuses the probe round's slot assignment, so the shard holder pairs
+    each incoming row with the id it probed at that slot — admission
+    updates the AUTHORITATIVE shard, not the requester's local state.
+    Returns ``(new_cache, n_inserted)`` for THIS worker's shard.
+    """
+    cap = recv_ids.shape[1]
+    d = fetched.shape[1]
+    send_rows = jnp.zeros((w, cap, d), fetched.dtype)
+    send_rows = send_rows.at[plan.sorted_dest, plan.slot_c].set(
+        fetched[plan.order], mode="drop")
+    send_should = jnp.zeros((w, cap), jnp.bool_)
+    send_should = send_should.at[plan.sorted_dest, plan.slot_c].set(
+        should[plan.order], mode="drop")
+    recv_rows = lax.all_to_all(send_rows, axis_name,
+                               split_axis=0, concat_axis=0, tiled=True)
+    recv_should = lax.all_to_all(send_should, axis_name,
+                                 split_axis=0, concat_axis=0, tiled=True)
+    ids_f = recv_ids.reshape(-1)
+    offer = jnp.logical_and(recv_should.reshape(-1), ids_f >= 0)
+    return cache_insert(cache, ids_f, recv_rows.reshape(-1, d), offer, cfg)
 
 
 def fetch_rows(
@@ -200,7 +329,7 @@ def fetch_rows(
     capacity: Optional[int] = None,
     return_stats: bool = False,
     cache: Optional[FeatureCache] = None,
-    cache_admit: int = 2,
+    cache_cfg: Optional[CacheConfig] = None,
 ):
     """Routed remote row fetch (the MapReduce shuffle, as ``all_to_all``).
 
@@ -215,28 +344,48 @@ def fetch_rows(
     at a given per-destination capacity this slashes the drop rate — and
     because distinct requests per destination can never exceed the
     destination's ``rows``, the default capacity is clamped to ``rows``
-    (shrinking the static exchange buffers).  Pass a smaller ``capacity``
-    sized to the expected unique count to shrink wire traffic further.
+    (shrinking the static exchange buffers).
 
-    With ``cache`` (a per-worker ``FeatureCache``, requires dedup) the
-    distinct ids are first probed against the device-resident hot-node
-    cache and only the **misses** enter the all_to_all; served misses are
-    offered back under the frequency-admission policy.  The returned rows
-    are bit-identical to the uncached path (cached rows are verbatim table
-    copies), the return value becomes
-    ``(out, new_cache, FetchStats, CacheStats)``, and ``n_unique`` counts
-    only the ids that actually crossed the wire.
+    With ``cache`` (a per-worker ``FeatureCache``; requires dedup AND
+    ``cache_cfg`` — the ``CacheConfig`` the state was populated under,
+    since the slot layout is a property of the state) the distinct ids are
+    first probed against the device-resident hot-node cache tier.
+    In **replicated** mode the
+    probe is local; in **sharded** mode (W > 1) the probe is the two-stage
+    routing described in the module docstring: ids first ride one
+    all_to_all round to their cache-shard workers, shard-misses fall
+    through to the owner fetch, and served misses ride back to the shard
+    holders for admission.  Either way only the cache-tier **misses**
+    enter the owner all_to_all, the returned rows are bit-identical to
+    the uncached path (cached rows are verbatim table copies), the return
+    value becomes ``(out, new_cache, FetchStats, CacheStats)``, and
+    ``n_unique`` counts only the ids that went to their owner.
 
-    Per-destination capacity defaults to ``ceil(R/W) * slack`` (clamped as
-    above when dedup is on); requests beyond it return zero rows and are
-    counted per request slot — pass ``return_stats=True`` to receive
-    ``(out, FetchStats)`` instead of silently zero-filled rows.  For W == 1
-    the fetch degenerates to a local gather (no routing; ``n_unique``
-    still reports the would-route distinct/miss count so single-device
-    runs measure the same wire-slot telemetry).
+    Per-destination OWNER capacity defaults to ``ceil(R/W) * slack``
+    (clamped as above when dedup is on); pass an explicit ``capacity`` —
+    e.g. sized to the steady-state cache-miss count by the warm
+    re-calibration hook in ``launch/train.py`` — to shrink the static
+    owner-exchange buffers below their cache-unaware cold-start size.  The
+    sharded probe round keeps the slack-based size regardless: it carries
+    ALL distinct ids (not just misses), so shrinking it with the miss rate
+    would spill probes to the owner path and undo the hit rate it was
+    sized for.  Requests beyond capacity return zero rows and are counted
+    per request slot — pass ``return_stats=True`` to receive
+    ``(out, FetchStats)`` instead of silently zero-filled rows.  For
+    W == 1 the fetch degenerates to a local gather (no routing; sharded
+    mode degenerates to replicated — the single worker owns every shard —
+    and ``n_unique`` still reports the would-route distinct/miss count so
+    single-device runs measure the same wire-slot telemetry).
     """
     if cache is not None and not dedup:
         raise ValueError("the cache front end requires dedup=True")
+    if cache is not None and cache_cfg is None:
+        # the slot layout and placement are properties of the POPULATED
+        # state; guessing a default here would silently probe an assoc>1
+        # or sharded cache with the wrong layout (near-zero hit rate, no
+        # error) — the policy object must travel with the state
+        raise ValueError("fetch_rows(cache=...) requires cache_cfg "
+                         "(the CacheConfig the state was populated under)")
     w = axis_size(axis_name)
     rows = table_local.shape[0]
     r = ids.shape[0]
@@ -249,9 +398,13 @@ def fetch_rows(
                 n_unique = jnp.int32(r)
             return out, FetchStats(jnp.int32(r), n_unique, jnp.int32(0))
         return out
+    # the probe round carries ALL distinct ids, so it is sized from the
+    # request count even when an explicit miss-sized `capacity` shrinks
+    # the owner exchange (see docstring)
+    slack_cap = int(min(r, -(-r // w) * capacity_slack + 8))
     cap = capacity
     if cap is None:
-        cap = int(min(r, -(-r // w) * capacity_slack + 8))
+        cap = slack_cap
         if dedup:
             cap = min(cap, rows)    # ≤ rows distinct ids per destination
     if dedup:
@@ -260,14 +413,22 @@ def fetch_rows(
         req_ids, inverse = ids, None
         req_valid = jnp.ones((r,), jnp.bool_)
         n_unique = jnp.int32(r)
-    # --- cache probe: hits never reach the wire --------------------------
+    sharded = (cache is not None and cache_cfg.mode == "sharded" and w > 1)
+    # --- cache probe: hits never reach the owner fetch -------------------
+    probe_plan = probe_recv = None
     if cache is not None:
-        hit, hit_rows = cache_probe(cache, req_ids, req_valid)
+        if sharded:
+            hit, hit_rows, probe_plan, probe_recv = _shard_probe(
+                cache, cache_cfg, req_ids, req_valid, axis_name,
+                slack_cap, w)
+        else:
+            hit, hit_rows = cache_probe(cache, req_ids, req_valid,
+                                        cfg=cache_cfg)
         route_valid = jnp.logical_and(req_valid, ~hit)
     else:
         hit = jnp.zeros(req_ids.shape, jnp.bool_)
         route_valid = req_valid
-    # --- route the (remaining) requests ----------------------------------
+    # --- route the (remaining) requests to their owners ------------------
     if w == 1:
         fetched = table_local[jnp.clip(req_ids, 0, rows - 1)]
         fetched = jnp.where(route_valid[:, None], fetched, 0)
@@ -282,13 +443,24 @@ def fetch_rows(
     if cache is not None:
         out_u = jnp.where(hit[:, None], hit_rows, fetched)
         served_u = jnp.logical_or(hit, served_r)
-        new_cache, n_ins = cache_insert(
-            cache, req_ids, fetched,
-            should=jnp.logical_and(route_valid, served_r), admit=cache_admit)
+        should = jnp.logical_and(route_valid, served_r)
+        if sharded:
+            new_cache, n_ins = _shard_admit(
+                cache, cache_cfg, probe_plan, probe_recv, fetched, should,
+                axis_name, w)
+            local = shard_of(req_ids, w) == lax.axis_index(axis_name)
+            n_local = jnp.sum(jnp.logical_and(hit, local)).astype(jnp.int32)
+        else:
+            new_cache, n_ins = cache_insert(cache, req_ids, fetched,
+                                            should, cache_cfg)
+            n_local = jnp.sum(hit).astype(jnp.int32)
         n_hits = jnp.sum(hit).astype(jnp.int32)
         row_bytes = table_local.shape[1] * jnp.dtype(table_local.dtype).itemsize
-        cstats = CacheStats(n_hits, n_routed, n_ins, n_hits * row_bytes)
-        n_unique = n_routed          # ids that actually crossed the wire
+        cstats = CacheStats(
+            n_hits=n_hits, n_misses=n_routed, n_inserted=n_ins,
+            bytes_saved=n_local * row_bytes, n_local_hits=n_local,
+            n_shard_hits=n_hits - n_local)
+        n_unique = n_routed          # ids that went to their owner
     else:
         out_u, served_u = fetched, served_r
     if dedup:
@@ -321,7 +493,8 @@ def _worker_generate(
     axis_name: str,
     merge_mode: str = "butterfly",
     capacity_slack: float = 2.0,
-    cache_admit: int = 2,
+    cache_cfg: Optional[CacheConfig] = None,
+    fetch_capacity: Optional[int] = None,
 ):
     """One worker's slice of an L-hop generation round (runs in shard_map).
 
@@ -329,8 +502,12 @@ def _worker_generate(
     (butterfly allreduce or recursive-halving reduce-scatter); the merged
     global sample becomes the next frontier.  Masks chain so a padded
     parent's subtree stays padded.  Then one deduplicated feature shuffle
-    fetches every node's row, probing the hot-node cache first when one is
-    threaded in (returns ``(SubgraphBatch, new_cache)`` in that case).
+    fetches every node's row, probing the hot-node cache tier first when
+    one is threaded in — locally in replicated mode, via the two-stage
+    shard routing in sharded mode (returns ``(SubgraphBatch, new_cache)``
+    in either case).  ``cache_cfg`` is the single source of cache policy;
+    ``fetch_capacity`` pins the owner-exchange buffer size (the warm
+    re-calibration hook shrinks it to the steady-state miss count).
     """
     b = seeds.shape[0]
     me = lax.axis_index(axis_name)
@@ -385,11 +562,12 @@ def _worker_generate(
     if cache is not None:
         feats, cache, fstats, cstats = fetch_rows(
             x_local, need, axis_name, capacity_slack=capacity_slack,
-            cache=cache, cache_admit=cache_admit)
+            capacity=fetch_capacity, cache=cache, cache_cfg=cache_cfg)
         n_hits, n_misses = cstats.n_hits, cstats.n_misses
     else:
         feats, fstats = fetch_rows(x_local, need, axis_name,
                                    capacity_slack=capacity_slack,
+                                   capacity=fetch_capacity,
                                    return_stats=True)
         n_hits, n_misses = jnp.int32(0), fstats.n_unique
     d = x_local.shape[1]
@@ -442,8 +620,8 @@ def make_generator_fn(
     axis_name: str = "data",
     merge_mode: str = "butterfly",
     capacity_slack: float = 2.0,
-    cache_rows: int = 0,
-    cache_admit: int = 2,
+    cache_cfg: Optional[CacheConfig] = None,
+    fetch_capacity: Optional[int] = None,
 ):
     """Pure generator function (no data placement — dry-run lowerable).
 
@@ -451,21 +629,29 @@ def make_generator_fn(
     ``device_args = (indptr [W,N+1], indices [W,E_pad], x [W*rows,D],
     y [W*rows,1])`` sharded on their leading axis.
 
-    With ``cache_rows > 0`` the generator becomes stateful-by-threading:
+    With a ``cache_cfg`` (a ``CacheConfig`` with ``n_rows > 0``) the
+    generator becomes stateful-by-threading:
     ``gen_fn(device_args, seeds, rng, cache) -> (SubgraphBatch, cache)``
     where ``cache`` is a [W, ...] ``FeatureCache`` pytree sharded
-    ``P(axis_name)`` on its leading axis (one replica per worker)."""
+    ``P(axis_name)`` on its leading axis — one replica per worker in
+    replicated mode, one authoritative shard per worker in sharded mode.
+    ``fetch_capacity`` (optional) pins the per-destination owner-exchange
+    capacity; the warm re-calibration hook uses it to shrink the static
+    all_to_all buffers to the steady-state cache-miss count."""
     if not fanouts:
         raise ValueError("fanouts must name at least one hop, got ()")
     graph_spec = P(axis_name)
     row_spec = P(axis_name)
     repl = P()
-    cached = cache_rows > 0
+    cached = cache_cfg is not None and cache_cfg.n_rows > 0
+    if cached:
+        cache_cfg = cache_cfg.validated()
 
     worker_gen = functools.partial(
         _worker_generate, fanouts=tuple(fanouts), axis_name=axis_name,
         merge_mode=merge_mode, capacity_slack=capacity_slack,
-        cache_admit=cache_admit)
+        cache_cfg=cache_cfg if cached else None,
+        fetch_capacity=fetch_capacity)
 
     # shard_map blocks keep the sharded leading axis of size 1 per worker;
     # the wrappers drop it on the way in and restore it on the way out.
@@ -513,14 +699,14 @@ def make_distributed_generator(
     axis_name: str = "data",
     merge_mode: str = "butterfly",
     capacity_slack: float = 2.0,
-    cache_rows: int = 0,
-    cache_admit: int = 2,
+    cache_cfg: Optional[CacheConfig] = None,
+    fetch_capacity: Optional[int] = None,
 ):
     """Build the jitted distributed generator with data placed on the mesh.
 
     Returns ``(gen_fn, device_args)``; every output leaf is sharded
-    ``P(axis_name)`` on its leading (global-batch) axis.  With
-    ``cache_rows > 0`` an initial (empty) per-worker ``FeatureCache`` is
+    ``P(axis_name)`` on its leading (global-batch) axis.  With a
+    ``cache_cfg`` an initial (empty) per-worker ``FeatureCache`` is
     also placed on the mesh and the return becomes
     ``(gen_fn, device_args, cache0)`` with
     ``gen_fn(device_args, seeds, rng, cache) -> (batch, cache)``."""
@@ -531,7 +717,8 @@ def make_distributed_generator(
     gen_fn = make_generator_fn(mesh, fanouts=fanouts, axis_name=axis_name,
                                merge_mode=merge_mode,
                                capacity_slack=capacity_slack,
-                               cache_rows=cache_rows, cache_admit=cache_admit)
+                               cache_cfg=cache_cfg,
+                               fetch_capacity=fetch_capacity)
     spec = NamedSharding(mesh, P(axis_name))
     device_args = (
         jax.device_put(part.indptr, spec),
@@ -539,8 +726,8 @@ def make_distributed_generator(
         jax.device_put(x, spec),
         jax.device_put(y, spec),
     )
-    if cache_rows > 0:
+    if cache_cfg is not None and cache_cfg.n_rows > 0:
         cache0 = jax.device_put(
-            init_worker_caches(cache_rows, x.shape[1], w), spec)
+            init_worker_caches(cache_cfg.n_rows, x.shape[1], w), spec)
         return jax.jit(gen_fn), device_args, cache0
     return jax.jit(gen_fn), device_args

@@ -39,7 +39,11 @@ def make_pipelined_step(
     ``(params, opt_state, next_batch, cache)`` — and ``gen_fn`` must be the
     stateful form ``gen_fn(device_args, seeds, rng, cache) -> (batch,
     cache)``; the cache rides across iterations in device memory exactly
-    like optimizer state.
+    like optimizer state.  The carry shape is identical for replicated and
+    sharded cache placement (both are a [W, ...] ``FeatureCache`` pytree
+    sharded on the worker axis — only the MEANING of worker ``i``'s block
+    changes: its own replica vs the authoritative shard of
+    ``shard_of(id, W) == i``), so the pipelined step needs no mode switch.
     """
 
     if cached:

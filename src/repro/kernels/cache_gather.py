@@ -3,12 +3,17 @@
 ``gather_reduce_pallas`` serves already-sampled rows straight from the HBM
 feature table; this kernel is its cache-tier sibling: it serves *cache
 hits* from VMEM-tiled blocks of the device-resident cache
-(core/feature_cache.py).  One kernel fuses the three steps a jnp probe
-lowers to separately —
+(core/feature_cache.py).  One kernel fuses the steps a jnp probe lowers to
+separately —
 
-  slot    = top-bits multiplicative hash of each id        (VPU)
-  hit     = keys[slot] == id                               (VPU compare)
-  row     = rows[slot] masked by hit                       (VMEM gather)
+  set     = top-bits multiplicative hash of each id        (VPU)
+  ways    = static unrolled loop over the ``assoc`` slots of the set:
+            hit_j = keys[set*assoc+j] == id                (VPU compare)
+            row   = rows[set*assoc+j] masked by hit_j      (VMEM gather)
+
+``assoc=1`` is the direct-mapped PR 2 kernel; 2/4-way sets probe their
+ways in the same VMEM residency (the way loop is a compile-time constant,
+so it unrolls — no dynamic control flow on the accelerator).
 
 The cache is small by construction (``cache_rows`` is a few thousand), so
 a whole [C, block_d] column block of the row table fits in VMEM alongside
@@ -26,18 +31,31 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 # keep the hash bit-compatible with the jnp probe (core/feature_cache.py)
-from ..core.feature_cache import _HASH_K
+from ..core.feature_cache import _HASH_K, VALID_ASSOC
 
 
 def _probe_gather_kernel(keys_ref, rows_ref, ids_ref, hit_ref, out_ref,
-                         *, shift: int):
+                         *, shift: int, assoc: int):
     ids = ids_ref[...]                              # [br] int32
-    h = ids.astype(jnp.uint32) * jnp.uint32(_HASH_K)
-    slot = jax.lax.shift_right_logical(h, jnp.uint32(shift)).astype(jnp.int32)
-    hit = keys_ref[...][slot] == ids                # [br] bool
-    rows = rows_ref[...][slot]                      # [br, bd] VMEM gather
+    if shift >= 32:
+        # single-set cache: a 32-bit shift on uint32 is out of range —
+        # every id lives in set 0 (mirrors feature_cache.hash_slots)
+        sets = jnp.zeros(ids.shape, jnp.int32)
+    else:
+        h = ids.astype(jnp.uint32) * jnp.uint32(_HASH_K)
+        sets = jax.lax.shift_right_logical(
+            h, jnp.uint32(shift)).astype(jnp.int32)
+    keys = keys_ref[...]
+    rows = rows_ref[...]
+    hit = jnp.zeros(ids.shape, jnp.bool_)
+    out = jnp.zeros(ids.shape + (rows.shape[1],), out_ref.dtype)
+    for j in range(assoc):                          # static unrolled ways
+        slot = sets * assoc + j
+        m = keys[slot] == ids                       # [br] bool
+        out = jnp.where(m[:, None], rows[slot].astype(out_ref.dtype), out)
+        hit = jnp.logical_or(hit, m)
     hit_ref[...] = hit
-    out_ref[...] = jnp.where(hit[:, None], rows, 0).astype(out_ref.dtype)
+    out_ref[...] = out
 
 
 def cache_probe_gather_pallas(
@@ -45,11 +63,12 @@ def cache_probe_gather_pallas(
     rows: jax.Array,     # [C, D] resident feature rows
     ids: jax.Array,      # [R] int32 probe ids
     *,
+    assoc: int = 1,
     block_r: int = 256,
     block_d: int = 128,
     interpret: bool = True,
 ):
-    """Probe ``ids`` against a direct-mapped cache: ``(hit [R], out [R, D])``.
+    """Probe ``ids`` against an ``assoc``-way cache: ``(hit [R], out [R, D])``.
 
     ``out`` rows are the cached copies where hit, zeros where missed —
     bit-identical to ``feature_cache.cache_probe`` (the jnp oracle is
@@ -58,13 +77,19 @@ def cache_probe_gather_pallas(
     c = keys.shape[0]
     if c & (c - 1):
         raise ValueError(f"cache size must be a power of two, got {c}")
+    if assoc not in VALID_ASSOC or assoc > c:
+        raise ValueError(f"assoc must be one of {VALID_ASSOC} and <= {c}, "
+                         f"got {assoc}")
+    n_sets = c // assoc
     r = ids.shape[0]
     d = rows.shape[1]
     br, bd = min(block_r, r), min(block_d, d)
-    shift = 32 - int(c).bit_length() + 1
+    # 32 signals the degenerate single-set cache to the kernel (a literal
+    # 32-bit shift would be out of range for uint32)
+    shift = 32 if n_sets == 1 else 32 - (int(n_sets).bit_length() - 1)
     grid = (pl.cdiv(r, br), pl.cdiv(d, bd))
     return pl.pallas_call(
-        functools.partial(_probe_gather_kernel, shift=shift),
+        functools.partial(_probe_gather_kernel, shift=shift, assoc=assoc),
         grid=grid,
         in_specs=[
             pl.BlockSpec((c,), lambda i, j: (0,)),        # full key vector

@@ -38,13 +38,14 @@ def gather_reduce(
 
 
 def cache_probe_gather(
-    keys: jax.Array, rows: jax.Array, ids: jax.Array, use_kernel: bool = False
+    keys: jax.Array, rows: jax.Array, ids: jax.Array,
+    assoc: int = 1, use_kernel: bool = False,
 ):
     """Fused hot-node cache probe+gather: (hit [R], rows [R, D])."""
     if use_kernel:
-        return cache_probe_gather_pallas(keys, rows, ids,
+        return cache_probe_gather_pallas(keys, rows, ids, assoc=assoc,
                                          interpret=_interpret())
-    return ref.cache_probe_gather_ref(keys, rows, ids)
+    return ref.cache_probe_gather_ref(keys, rows, ids, assoc=assoc)
 
 
 def flash_attention(

@@ -31,16 +31,21 @@ def gather_reduce_ref(
 
 
 def cache_probe_gather_ref(
-    keys: jax.Array, rows: jax.Array, ids: jax.Array
+    keys: jax.Array, rows: jax.Array, ids: jax.Array, assoc: int = 1
 ) -> tuple:
-    """Direct-mapped cache probe: keys [C], rows [C, D], ids [R] ->
+    """Set-associative cache probe: keys [C], rows [C, D], ids [R] ->
     (hit [R] bool, out [R, D]); out is the cached row where hit, zeros
-    where missed.  Semantic ground truth for the fused probe+gather
-    kernel (and the shape the jnp probe in core/feature_cache.py takes)."""
+    where missed.  Set ``s = hash(id) mod (C/assoc)`` owns the ``assoc``
+    consecutive slots ``s*assoc + j``; ``assoc=1`` is the direct-mapped
+    special case.  Semantic ground truth for the fused probe+gather kernel
+    (and the shape the jnp probe in core/feature_cache.py takes)."""
     from ..core.feature_cache import hash_slots
-    slot = hash_slots(ids, keys.shape[0])
-    hit = keys[slot] == ids
-    out = jnp.where(hit[:, None], rows[slot], 0)
+    sets = hash_slots(ids, keys.shape[0] // assoc)
+    slots = sets[:, None] * assoc + jnp.arange(assoc)[None, :]   # [R, A]
+    match = keys[slots] == ids[:, None]
+    hit = match.any(axis=-1)
+    way = jnp.argmax(match, axis=-1)
+    out = jnp.where(hit[:, None], rows[sets * assoc + way], 0)
     return hit, out
 
 

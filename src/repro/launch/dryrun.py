@@ -64,7 +64,7 @@ def _artifact_stats(compiled, chips: int, t_lower: float, t_compile: float) -> d
 
 def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
                    merge_mode: str = "butterfly",
-                   cache_rows: int = None) -> dict:
+                   cache_rows: int = None, cache_mode: str = None) -> dict:
     """The paper's own workload at production scale: one synchronized
     generation+training step on a 530M-node / 5B-edge graph (the paper's
     evaluation graph).  The sampling depth comes from the arch config —
@@ -74,7 +74,7 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
     replicates over 'model'.  When the config enables the hot-node feature
     cache, its per-worker state rides in the pipelined carry —
     ``(params, opt, batch, cache)`` — and must partition/compile too."""
-    from ..core.feature_cache import cache_specs
+    from ..core.feature_cache import CacheConfig, cache_specs
     from ..core.generation import make_generator_fn
     from ..core.pipeline import make_pipelined_step
     from ..graph.subgraph import batch_specs, slots_per_seed
@@ -88,7 +88,10 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
                               gcn_hidden=256, n_classes=64)
     if cache_rows is not None:
         cfg = dataclasses.replace(cfg, cache_rows=cache_rows)
-    cached = cfg.cache_rows > 0
+    if cache_mode is not None:
+        cfg = dataclasses.replace(cfg, cache_mode=cache_mode)
+    cache_cfg = CacheConfig.from_model(cfg)
+    cached = cache_cfg is not None
     fanouts = cfg.fanouts
     n_nodes = 530_000_000
     n_edges = 5_000_000_000
@@ -109,8 +112,7 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
     gen_fn = make_generator_fn(mesh, fanouts=fanouts, axis_name=axis,
                                merge_mode=merge_mode,
                                capacity_slack=slack,
-                               cache_rows=cfg.cache_rows,
-                               cache_admit=cfg.cache_admit)
+                               cache_cfg=cache_cfg)
     tcfg = TrainConfig()
 
     def train_fn(params, opt, batch):
@@ -138,6 +140,7 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
         params=cfg.param_count(),
         active_params=cfg.param_count(),
         cache_rows=cfg.cache_rows,
+        cache_mode=cfg.cache_mode if cached else None,
         tokens=w * b * slots_per_seed(fanouts),   # padded node slots per iter
     )
     return rec
@@ -148,7 +151,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                variant: str = "baseline", shard_heads: bool = False,
                gen_merge: str = "butterfly", moe_impl: str = "gather",
                seq_parallel: bool = False, compress: bool = False,
-               cache_rows: int = None) -> dict:
+               cache_rows: int = None, cache_mode: str = None) -> dict:
     cfg = get_config(arch)
     rec = {
         "arch": arch, "shape": shape_name,
@@ -158,7 +161,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     if cfg.family == "gcn":
         rec["kind"] = "train"
         return lower_gcn_cell(rec, arch, multi_pod, merge_mode=gen_merge,
-                              cache_rows=cache_rows)
+                              cache_rows=cache_rows, cache_mode=cache_mode)
     shape = SHAPES[shape_name]
     rec["kind"] = shape.kind
     if shape_name == "long_500k" and arch not in SUBQUADRATIC:
@@ -279,13 +282,17 @@ def main() -> None:
     ap.add_argument("--cache-rows", type=int, default=None,
                     help="GCN cells: hot-node feature cache rows/worker "
                          "(0 disables; default from the arch config)")
+    ap.add_argument("--cache-mode", default=None,
+                    choices=["replicated", "sharded"],
+                    help="GCN cells: cache placement override")
     ap.add_argument("--out", default=None, help="append JSONL here")
     args = ap.parse_args()
     rec = lower_cell(args.arch, args.shape, args.multi_pod,
                      attn=args.attn, remat=args.remat, variant=args.variant,
                      shard_heads=args.shard_heads, gen_merge=args.gen_merge,
                      moe_impl=args.moe, seq_parallel=args.seq_parallel,
-                     compress=args.compress, cache_rows=args.cache_rows)
+                     compress=args.compress, cache_rows=args.cache_rows,
+                     cache_mode=args.cache_mode)
     line = json.dumps(rec)
     print(line)
     if args.out:

@@ -53,7 +53,7 @@ CALIBRATION_PROBES = 3
 
 
 def calibrate_capacity_slack(mesh, device_args, fanouts, probes,
-                             ladder=SLACK_LADDER) -> float:
+                             ladder=SLACK_LADDER, cache_cfg=None) -> float:
     """Drop-aware capacity autotuning (ROADMAP item).
 
     ``probes`` is a list of ``(seeds, rng)`` calibration batches; the
@@ -62,18 +62,37 @@ def calibrate_capacity_slack(mesh, device_args, fanouts, probes,
     Returns the smallest slack whose ``SubgraphBatch.n_dropped`` is zero
     over EVERY probe — the all_to_all exchange buffers then carry no more
     static padding than the workload needs, with the multi-probe pass
-    standing in for a worst-case bound.  Calibration runs the cache-off
-    generator: the cache only *removes* routed requests, so a drop-free
-    slack measured without it stays drop-free with it.
-    """
-    from ..core.generation import make_generator_fn
+    standing in for a worst-case bound.
 
+    With ``cache_cfg`` the ladder probes the CACHED generator, and every
+    rung starts from a freshly initialized (cold) cache: the heaviest
+    owner-fetch traffic is the cold-start miss burst, and a cache warmed
+    by a previous rung would understate it — the chosen slack would then
+    drop requests on the real run's first iterations.  (Within a rung the
+    cache threads across the probes, exactly as the real run warms up.)
+    """
+    from ..core.feature_cache import init_worker_caches
+    from ..core.generation import make_generator_fn
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    w = mesh.shape["data"]
+    feat_dim = device_args[2].shape[1]     # the placed [W*rows, D] table
+    cached = cache_cfg is not None and cache_cfg.n_rows > 0
     for slack in ladder:
-        gen_fn = jax.jit(make_generator_fn(mesh, fanouts=fanouts,
-                                           capacity_slack=slack))
+        gen_fn = jax.jit(make_generator_fn(
+            mesh, fanouts=fanouts, capacity_slack=slack,
+            cache_cfg=cache_cfg if cached else None))
+        if cached:
+            # COLD cache per rung (see docstring)
+            cache = jax.device_put(
+                init_worker_caches(cache_cfg.n_rows, feat_dim, w),
+                NamedSharding(mesh, P("data")))
         dropped = 0
         for seeds, rng in probes:
-            batch = gen_fn(device_args, seeds, rng)
+            if cached:
+                batch, cache = gen_fn(device_args, seeds, rng, cache)
+            else:
+                batch = gen_fn(device_args, seeds, rng)
             dropped += int(np.asarray(batch.n_dropped).sum())
         if dropped == 0:
             return slack
@@ -81,6 +100,23 @@ def calibrate_capacity_slack(mesh, device_args, fanouts, probes,
               f"over {len(probes)} probes")
     print(f"calibration: even slack={ladder[-1]} drops requests; keeping it")
     return ladder[-1]
+
+
+def warm_capacity(miss_peak: int, w: int, slack: float, rows: int,
+                  margin: int = 8) -> int:
+    """Steady-state owner-exchange capacity from a warm miss measurement.
+
+    ``miss_peak`` is the largest per-worker routed-miss count observed
+    over the warm window; the per-destination capacity only needs to
+    carry those misses (not the full pre-cache request count), spread
+    over ``w`` destinations.  The skew allowance floors at 2x regardless
+    of the calibrated ``slack``: steady-state miss counts are small, so
+    their per-destination peaks are relatively spikier than the cold
+    request mix the slack was calibrated on (and the training loop's
+    drop-rollback still guards the residual risk).  Clamped to ``rows``
+    (a destination can never serve more distinct ids than it owns)."""
+    cap = int(-(-miss_peak // max(w, 1)) * max(slack, 2.0)) + margin
+    return max(min(cap, rows), 1)
 
 
 def train_gcn(args) -> dict:
@@ -102,10 +138,16 @@ def train_gcn(args) -> dict:
         cfg = dataclasses.replace(cfg, cache_rows=args.cache_rows)
     if args.cache_admit is not None:
         cfg = dataclasses.replace(cfg, cache_admit=args.cache_admit)
+    if args.cache_assoc is not None:
+        cfg = dataclasses.replace(cfg, cache_assoc=args.cache_assoc)
+    if args.cache_mode is not None:
+        cfg = dataclasses.replace(cfg, cache_mode=args.cache_mode)
     if args.smoke:
         cfg = smoke_config(cfg)
     fanouts = cfg.fanouts
-    cached = cfg.cache_rows > 0
+    from ..core.feature_cache import CacheConfig
+    cache_cfg = CacheConfig.from_model(cfg)
+    cached = cache_cfg is not None
 
     graph = powerlaw_graph(args.nodes, avg_degree=args.avg_degree,
                            n_hot=max(args.nodes // 1000, 1), seed=args.seed)
@@ -129,23 +171,27 @@ def train_gcn(args) -> dict:
     elif w == 1:
         slack = 2.0      # W=1 fetch is a local gather: capacity never binds
     else:
-        # place the graph+tables once; each ladder rung only re-jits
+        # place the graph+tables once; each ladder rung only re-jits —
+        # probing the CACHED generator (cold cache per rung) so the slack
+        # covers the configured path's cold-start miss traffic
         _, cal_args = make_distributed_generator(
             mesh, part, feats, labels, fanouts=fanouts)
         probes = [(seeds_for(t), rngs[t]) for t in range(CALIBRATION_PROBES)]
-        slack = calibrate_capacity_slack(mesh, cal_args, fanouts, probes)
+        slack = calibrate_capacity_slack(mesh, cal_args, fanouts, probes,
+                                         cache_cfg=cache_cfg)
         del cal_args
         print(f"capacity_slack auto-sized to {slack} "
               f"(override with --capacity-slack)")
 
     gen_out = make_distributed_generator(                  # step 3
         mesh, part, feats, labels, fanouts=fanouts, capacity_slack=slack,
-        cache_rows=cfg.cache_rows, cache_admit=cfg.cache_admit,
+        cache_cfg=cache_cfg,
     )
     if cached:
         gen_fn, device_args, cache = gen_out
-        print(f"hot-node cache: {cfg.cache_rows} rows/worker, "
-              f"admit-after-{cfg.cache_admit}")
+        print(f"hot-node cache: {cache_cfg.n_rows} rows/worker "
+              f"({cache_cfg.assoc}-way, {cache_cfg.mode}), "
+              f"admit-after-{cache_cfg.admit}")
     else:
         gen_fn, device_args = gen_out
         cache = None
@@ -176,8 +222,58 @@ def train_gcn(args) -> dict:
         batch = gen_fn(device_args, seeds_for(start), rngs[start])
         carry = (params, opt, batch)
     losses = []
+    miss_peak = 0
+    wide_step = None          # pre-recalibration step, kept for rollback
+    # the first batches carry the cold-start miss burst the cache exists to
+    # eliminate — measuring them would size the "warm" buffers to the cold
+    # peak; only the second half of the warm window counts
+    warm_from = start + max(args.warm_recalibrate // 2, 1)
     t0 = time.perf_counter()
     for t in range(start, args.steps):
+        if cached and args.warm_recalibrate and t >= warm_from:
+            miss_peak = max(miss_peak, int(np.asarray(
+                carry[2].n_cache_misses).max()))
+        # rollback check FIRST: when it fires, carry[2] was generated by
+        # the SHRUNKEN generator (the recalibration below installs the
+        # shrink only after this point, so a drop in a wide-generated
+        # batch can never be misattributed to the shrink)
+        if (wide_step is not None
+                and int(np.asarray(carry[2].n_dropped).sum()) > 0):
+            # the shrunken buffers dropped requests (a miss-rate excursion
+            # beyond the warm sample) — zero-filled features must never
+            # train, so regenerate THIS batch at the calibrated width and
+            # roll the step back for good.  (The regeneration re-offers
+            # the batch's served rows to the cache — a second admission
+            # tick for those ids, harmless: admission is a heuristic and
+            # rows stay verbatim table copies.)
+            step = wide_step
+            wide_step = None
+            batch, cache_now = wide_gen(device_args, seeds_for(t), rngs[t],
+                                        carry[3])
+            carry = (carry[0], carry[1], batch, cache_now)
+            print(f"step {t}: shrunken capacity dropped requests — "
+                  f"regenerated the batch and rolled back to the "
+                  f"calibrated width")
+        if (args.warm_recalibrate and cached and w > 1
+                and t == start + args.warm_recalibrate
+                and t + 1 < args.steps):
+            # cache-aware capacity shrink: by now the cache serves the hot
+            # head, so the owner exchange only carries steady-state misses
+            # — re-jit the generator with buffers sized to the warm peak
+            # (the cold-start burst is behind us; the cache state carries
+            # over, so the miss rate will not rebound)
+            from ..core.generation import make_generator_fn
+            rows_pw = device_args[2].shape[0] // w
+            new_cap = warm_capacity(miss_peak, w, slack, rows_pw)
+            wide_step, wide_gen = step, gen_fn
+            gen_fn = jax.jit(make_generator_fn(
+                mesh, fanouts=fanouts, capacity_slack=slack,
+                cache_cfg=cache_cfg, fetch_capacity=new_cap))
+            step = jax.jit(make_pipelined_step(gen_fn, train_fn,
+                                               cached=True))
+            print(f"warm re-calibration at step {t}: owner-exchange "
+                  f"capacity -> {new_cap} slots/destination "
+                  f"(peak warm per-worker misses {miss_peak})")
         if t + 1 < args.steps:
             carry, loss = step(carry, device_args, seeds_for(t + 1),
                                rngs[t + 1])
@@ -267,10 +363,22 @@ def main() -> None:
                     help="feature-shuffle capacity slack; omit to auto-size "
                          "from a drop-aware calibration step")
     ap.add_argument("--cache-rows", type=int, default=None,
-                    help="hot-node feature cache rows/worker "
-                         "(power of two; 0 disables; default from config)")
+                    help="hot-node feature cache rows/worker (rounded UP "
+                         "to a power of two; 0 disables; default from "
+                         "config)")
     ap.add_argument("--cache-admit", type=int, default=None,
                     help="misses before a node id is admitted to the cache")
+    ap.add_argument("--cache-assoc", type=int, default=None,
+                    choices=[1, 2, 4],
+                    help="cache ways per set (1 = direct-mapped)")
+    ap.add_argument("--cache-mode", default=None,
+                    choices=["replicated", "sharded"],
+                    help="cache placement: per-worker replicas or "
+                         "id-space shards with cache-aware routing")
+    ap.add_argument("--warm-recalibrate", type=int, default=0,
+                    help="after N warm steps, shrink the owner-exchange "
+                         "capacity to the observed steady-state cache-miss "
+                         "peak (0 disables; needs the cache and W > 1)")
     ap.add_argument("--cache-probe-impl", default="jnp",
                     choices=["jnp", "pallas"],
                     help="cache probe implementation: XLA gather+compare or "

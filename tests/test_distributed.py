@@ -237,10 +237,12 @@ def test_cached_generation_multiworker_bit_identical():
         X = node_features(2000, 16); Y = node_labels(2000, 7)
         table = balance_table(np.arange(2000), W, seed=0)
         seeds = jnp.asarray(table.per_worker[:, :16])
+        from repro.core.feature_cache import CacheConfig
         gen_nc, dev_nc = make_distributed_generator(mesh, part, X, Y,
                                                     fanouts=(8, 4))
         gen_c, dev_c, cache = make_distributed_generator(
-            mesh, part, X, Y, fanouts=(8, 4), cache_rows=1024, cache_admit=1)
+            mesh, part, X, Y, fanouts=(8, 4),
+            cache_cfg=CacheConfig(1024, admit=1))
         hit_rates = []
         for t in range(4):
             rng = jax.random.PRNGKey(t % 2)   # recurring rngs -> recurring ids
@@ -261,6 +263,170 @@ def test_cached_generation_multiworker_bit_identical():
         print("CACHE_OK", [round(h, 3) for h in hit_rates])
     """)
     assert "CACHE_OK" in out
+
+
+def test_sharded_cached_fetch_bit_identical_property():
+    """THE sharded contract, property-style on a W=4 mesh: across random
+    seeds, request mixes, cache sizes, and associativities, the two-stage
+    (shard-probe -> owner-fetch -> shard-admit) cached fetch returns rows
+    bit-identical to the raw table, with zero drops."""
+    out = run_forced("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.feature_cache import CacheConfig, init_worker_caches
+        from repro.core.generation import fetch_rows
+        from repro.launch.mesh import make_mesh
+
+        W, rows_pw, d = 4, 32, 3
+        mesh = make_mesh((W,), ("data",))
+        table = np.arange(W * rows_pw * d,
+                          dtype=np.float32).reshape(W * rows_pw, d)
+        spec = NamedSharding(mesh, P("data"))
+        for trial, (c, assoc) in enumerate([(16, 1), (32, 2), (64, 4)]):
+            cfg = CacheConfig(c, admit=1, assoc=assoc, mode="sharded")
+
+            def worker(t, i, cc):
+                cc = jax.tree.map(lambda a: a[0], cc)
+                out, cc, fs, cs = fetch_rows(t, i[0], "data", cache=cc,
+                                             cache_cfg=cfg)
+                return (out[None], jax.tree.map(lambda a: a[None], cc),
+                        jax.tree.map(lambda a: a[None], (fs, cs)))
+
+            run = jax.jit(shard_map(
+                worker, mesh=mesh,
+                in_specs=(P("data"), P("data"), P("data")),
+                out_specs=(P("data"), P("data"), P("data")),
+                check_rep=False))
+            state = jax.device_put(init_worker_caches(c, d, W), spec)
+            rng = np.random.default_rng(trial)
+            total_hits = 0
+            for it in range(6):
+                ids = rng.integers(0, W * rows_pw, (W, 48)).astype(np.int32)
+                out, state, (fs, cs) = run(
+                    jnp.asarray(table), jax.device_put(jnp.asarray(ids), spec),
+                    state)
+                np.testing.assert_array_equal(
+                    np.asarray(out).reshape(W, 48, d),
+                    table[ids])
+                assert int(np.asarray(fs.n_dropped).sum()) == 0
+                total_hits += int(np.asarray(cs.n_hits).sum())
+                # telemetry consistency: hits split exactly local/shard
+                assert (np.asarray(cs.n_local_hits)
+                        + np.asarray(cs.n_shard_hits)
+                        == np.asarray(cs.n_hits)).all()
+            assert total_hits > 0, (c, assoc)
+        print("SHARDED_BITWISE_OK")
+    """, devices=4)
+    assert "SHARDED_BITWISE_OK" in out
+
+
+def test_sharded_cache_beats_replicated_capacity():
+    """The reason sharding exists: at equal per-worker cache_rows over a
+    shared hot set larger than one replica, the W-sharded cache serves
+    strictly more unique hits (effective capacity x W) AND a remote-shard
+    hit population appears."""
+    out = run_forced("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.feature_cache import CacheConfig, init_worker_caches
+        from repro.core.generation import fetch_rows
+        from repro.launch.mesh import make_mesh
+
+        W, rows_pw, d, c = 4, 64, 2, 32
+        mesh = make_mesh((W,), ("data",))
+        table = np.arange(W * rows_pw * d,
+                          dtype=np.float32).reshape(W * rows_pw, d)
+        spec = NamedSharding(mesh, P("data"))
+        rng = np.random.default_rng(0)
+        # a hot set of ~3*c ids: one 32-row replica can never hold it, the
+        # 4 x 32 sharded aggregate can
+        hot = rng.choice(W * rows_pw, size=3 * c, replace=False)
+        streams = [np.stack([rng.choice(hot, size=96) for _ in range(W)])
+                   .astype(np.int32) for _ in range(10)]
+
+        def run_mode(mode):
+            cfg = CacheConfig(c, admit=1, assoc=2, mode=mode)
+
+            def worker(t, i, cc):
+                cc = jax.tree.map(lambda a: a[0], cc)
+                out, cc, fs, cs = fetch_rows(t, i[0], "data", cache=cc,
+                                             cache_cfg=cfg)
+                return (out[None], jax.tree.map(lambda a: a[None], cc),
+                        jax.tree.map(lambda a: a[None], (fs, cs)))
+
+            run = jax.jit(shard_map(
+                worker, mesh=mesh,
+                in_specs=(P("data"), P("data"), P("data")),
+                out_specs=(P("data"), P("data"), P("data")),
+                check_rep=False))
+            state = jax.device_put(init_worker_caches(c, d, W), spec)
+            hits = shard_hits = 0
+            for ids in streams:
+                out, state, (fs, cs) = run(
+                    jnp.asarray(table),
+                    jax.device_put(jnp.asarray(ids), spec), state)
+                np.testing.assert_array_equal(
+                    np.asarray(out).reshape(W, 96, d), table[ids])
+                hits += int(np.asarray(cs.n_hits).sum())
+                shard_hits += int(np.asarray(cs.n_shard_hits).sum())
+            return hits, shard_hits
+
+        rep_hits, rep_shard = run_mode("replicated")
+        sh_hits, sh_shard = run_mode("sharded")
+        assert rep_shard == 0
+        assert sh_shard > 0
+        assert sh_hits > rep_hits, (sh_hits, rep_hits)
+        print("SHARDED_CAPACITY_OK", rep_hits, sh_hits)
+    """, devices=4)
+    assert "SHARDED_CAPACITY_OK" in out
+
+
+def test_sharded_cached_generation_multiworker_bit_identical():
+    """End-to-end: the full generation engine with the SHARDED cache on 8
+    workers stays bit-identical to the uncached generator under the same
+    rng, while remote-shard hits appear in the telemetry."""
+    out = run_forced("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.graph.synthetic import powerlaw_graph, node_features, node_labels
+        from repro.core.partition import partition_edges
+        from repro.core.balance import balance_table
+        from repro.core.feature_cache import CacheConfig
+        from repro.core.generation import make_distributed_generator
+        from repro.launch.mesh import make_mesh
+
+        W = 8
+        mesh = make_mesh((W,), ("data",))
+        g = powerlaw_graph(2000, avg_degree=8, n_hot=3, hot_degree=500, seed=0)
+        part = partition_edges(g, W)
+        X = node_features(2000, 16); Y = node_labels(2000, 7)
+        table = balance_table(np.arange(2000), W, seed=0)
+        seeds = jnp.asarray(table.per_worker[:, :16])
+        gen_nc, dev_nc = make_distributed_generator(mesh, part, X, Y,
+                                                    fanouts=(8, 4))
+        gen_c, dev_c, cache = make_distributed_generator(
+            mesh, part, X, Y, fanouts=(8, 4),
+            cache_cfg=CacheConfig(256, admit=1, assoc=2, mode="sharded"))
+        hit_rates = []
+        for t in range(4):
+            rng = jax.random.PRNGKey(t % 2)   # recurring rngs -> recurring ids
+            b_nc = gen_nc(dev_nc, seeds, rng)
+            b_c, cache = gen_c(dev_c, seeds, rng, cache)
+            np.testing.assert_array_equal(np.asarray(b_nc.x_seed),
+                                          np.asarray(b_c.x_seed))
+            for a, b in zip(b_nc.x_hops, b_c.x_hops):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            assert (np.asarray(b_c.labels) == np.asarray(b_nc.labels)).all()
+            assert np.asarray(b_c.n_dropped).sum() == 0
+            hits = np.asarray(b_c.n_cache_hits).sum()
+            total = hits + np.asarray(b_c.n_cache_misses).sum()
+            hit_rates.append(hits / total)
+        assert hit_rates[0] == 0.0                   # cold cache
+        assert hit_rates[-1] > 0.5, hit_rates        # recurring ids now cached
+        print("SHARDED_GEN_OK", [round(h, 3) for h in hit_rates])
+    """)
+    assert "SHARDED_GEN_OK" in out
 
 
 def test_generation_three_hop_multiworker():
@@ -303,6 +469,49 @@ def test_generation_three_hop_multiworker():
         print("THREE_HOP_OK")
     """)
     assert "THREE_HOP_OK" in out
+
+
+def test_calibration_probes_cached_generator_cold():
+    """The slack ladder probes the CONFIGURED (cached) generator with a
+    cold cache per rung, and the chosen slack is drop-free from cold —
+    a rung warmed by its predecessor would understate cold-start miss
+    traffic and pick a slack that drops on the real run's first steps."""
+    out = run_forced("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.graph.synthetic import powerlaw_graph, node_features, node_labels
+        from repro.core.balance import balance_table
+        from repro.core.feature_cache import CacheConfig, init_worker_caches
+        from repro.core.generation import (make_distributed_generator,
+                                           make_generator_fn)
+        from repro.core.partition import partition_edges
+        from repro.launch.mesh import make_mesh
+        from repro.launch.train import calibrate_capacity_slack
+
+        W, n, dim = 4, 2000, 8
+        mesh = make_mesh((W,), ("data",))
+        g = powerlaw_graph(n, avg_degree=8, n_hot=3, hot_degree=400, seed=0)
+        part = partition_edges(g, W)
+        X = node_features(n, dim); Y = node_labels(n, 5)
+        table = balance_table(np.arange(n), W, seed=0)
+        cfg = CacheConfig(256, admit=2, assoc=2, mode="sharded")
+        _, dev = make_distributed_generator(mesh, part, X, Y, fanouts=(6, 4))
+        probes = [(jnp.asarray(table.per_worker[:, t*8:(t+1)*8]),
+                   jax.random.PRNGKey(t)) for t in range(2)]
+        slack = calibrate_capacity_slack(mesh, dev, (6, 4), probes,
+                                         cache_cfg=cfg)
+        assert slack in (0.25, 0.5, 1.0, 1.5, 2.0), slack
+        # the chosen slack must be drop-free from a COLD cache
+        gen = jax.jit(make_generator_fn(mesh, fanouts=(6, 4),
+                                        capacity_slack=slack, cache_cfg=cfg))
+        cache = jax.device_put(init_worker_caches(256, dim, W),
+                               NamedSharding(mesh, P("data")))
+        for seeds, rng in probes:
+            batch, cache = gen(dev, seeds, rng, cache)
+            assert int(np.asarray(batch.n_dropped).sum()) == 0
+        print("CALIBRATION_COLD_OK", slack)
+    """, devices=4)
+    assert "CALIBRATION_COLD_OK" in out
 
 
 def test_elastic_checkpoint_reshard():

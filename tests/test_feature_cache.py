@@ -1,15 +1,18 @@
-"""Hot-node feature cache: state machine units, the cache-aware fetch
-front end (bit-identical to the uncached path), and the Zipf wire-slot
-reduction the subsystem exists for."""
+"""Hot-node feature cache: state machine units (direct-mapped and
+set-associative), the cache-aware fetch front end (bit-identical to the
+uncached path), and the Zipf wire-slot reduction the subsystem exists
+for.  The sharded-mode multiworker path runs in test_distributed.py
+subprocesses (forced device counts)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.feature_cache import (FeatureCache, cache_insert, cache_probe,
-                                      hash_slots, init_cache,
-                                      init_worker_caches, restore_worker_axis,
+from repro.core.feature_cache import (CacheConfig, FeatureCache,
+                                      cache_insert, cache_probe, hash_slots,
+                                      init_cache, init_worker_caches,
+                                      restore_worker_axis, shard_of,
                                       squeeze_worker_axis)
 from repro.core.generation import fetch_rows
 
@@ -19,63 +22,68 @@ from repro.core.generation import fetch_rows
 def test_empty_cache_never_hits():
     cache = init_cache(64, 8)
     ids = jnp.arange(100, dtype=jnp.int32)
-    hit, rows = cache_probe(cache, ids)
+    hit, rows = cache_probe(cache, ids, cfg=CacheConfig(64))
     assert not np.asarray(hit).any()
     assert np.abs(np.asarray(rows)).max() == 0
 
 
-def test_insert_then_probe_roundtrips_exact_rows():
+@pytest.mark.parametrize("assoc", [1, 2, 4])
+def test_insert_then_probe_roundtrips_exact_rows(assoc):
+    cfg = CacheConfig(128, admit=1, assoc=assoc)
     cache = init_cache(128, 4)
     ids = jnp.asarray([3, 17, 99, 1024], jnp.int32)
     rows = jax.random.normal(jax.random.PRNGKey(0), (4, 4))
-    cache, n_ins = cache_insert(cache, ids, rows, jnp.ones(4, bool), admit=1)
+    cache, n_ins = cache_insert(cache, ids, rows, jnp.ones(4, bool), cfg)
     assert int(n_ins) == 4
-    hit, got = cache_probe(cache, ids)
+    hit, got = cache_probe(cache, ids, cfg=cfg)
     assert np.asarray(hit).all()
     np.testing.assert_array_equal(np.asarray(got), np.asarray(rows))  # bitwise
     # ids that were never inserted must miss
-    hit2, _ = cache_probe(cache, jnp.asarray([5, 2048], jnp.int32))
+    hit2, _ = cache_probe(cache, jnp.asarray([5, 2048], jnp.int32), cfg=cfg)
     assert not np.asarray(hit2).any()
 
 
 def test_should_mask_gates_insertion():
     """Capacity-dropped (unserved) rows must never enter the cache."""
+    cfg = CacheConfig(64, admit=1)
     cache = init_cache(64, 2)
     ids = jnp.asarray([1, 2], jnp.int32)
     rows = jnp.ones((2, 2))
     cache, n_ins = cache_insert(cache, ids, rows,
-                               jnp.asarray([True, False]), admit=1)
+                                jnp.asarray([True, False]), cfg)
     assert int(n_ins) == 1
-    hit, _ = cache_probe(cache, ids)
+    hit, _ = cache_probe(cache, ids, cfg=cfg)
     np.testing.assert_array_equal(np.asarray(hit), [True, False])
 
 
 def test_frequency_admission_requires_repeat_offers():
     """admit=2: one-off ids never displace anything; the second offer of the
-    same id at the same slot installs it."""
+    same id at the same set installs it."""
+    cfg = CacheConfig(64, admit=2)
     cache = init_cache(64, 2)
     ids = jnp.asarray([7], jnp.int32)
     rows = jnp.full((1, 2), 3.0)
-    cache, n1 = cache_insert(cache, ids, rows, jnp.ones(1, bool), admit=2)
+    cache, n1 = cache_insert(cache, ids, rows, jnp.ones(1, bool), cfg)
     assert int(n1) == 0                       # first offer only tracks
-    hit, _ = cache_probe(cache, ids)
+    hit, _ = cache_probe(cache, ids, cfg=cfg)
     assert not np.asarray(hit).any()
-    cache, n2 = cache_insert(cache, ids, rows, jnp.ones(1, bool), admit=2)
+    cache, n2 = cache_insert(cache, ids, rows, jnp.ones(1, bool), cfg)
     assert int(n2) == 1                       # second offer installs
-    hit, got = cache_probe(cache, ids)
+    hit, got = cache_probe(cache, ids, cfg=cfg)
     assert np.asarray(hit).all()
     np.testing.assert_array_equal(np.asarray(got), np.asarray(rows))
 
 
 def test_admission_counter_resets_on_different_candidate():
-    """Alternating tail ids that collide on one slot keep resetting each
+    """Alternating tail ids that collide on one set keep resetting each
     other's counters — the resident hot row survives."""
     c = 64
+    cfg = CacheConfig(c, admit=2)
     cache = init_cache(c, 2)
     hot = jnp.asarray([5], jnp.int32)
     hot_row = jnp.full((1, 2), 1.0)
     for _ in range(2):
-        cache, _ = cache_insert(cache, hot, hot_row, jnp.ones(1, bool), admit=2)
+        cache, _ = cache_insert(cache, hot, hot_row, jnp.ones(1, bool), cfg)
     slot_of_hot = int(hash_slots(hot, c)[0])
     # find two distinct ids colliding with hot's slot
     pool = np.arange(10_000, dtype=np.int32)
@@ -86,19 +94,20 @@ def test_admission_counter_resets_on_different_candidate():
         for cid in coll:
             cache, n = cache_insert(cache, jnp.asarray([cid]),
                                     jnp.zeros((1, 2)), jnp.ones(1, bool),
-                                    admit=2)
+                                    cfg)
             assert int(n) == 0
-    hit, got = cache_probe(cache, hot)
+    hit, got = cache_probe(cache, hot, cfg=cfg)
     assert np.asarray(hit).all()
     np.testing.assert_array_equal(np.asarray(got), np.asarray(hot_row))
 
 
 def test_same_batch_slot_collision_installs_one_consistent_pair():
-    """Distinct ids colliding on one slot within a single insert batch must
-    resolve to ONE winner whose key and row agree — independent scatters
-    with duplicate indices could otherwise pair id A with B's row and
-    poison every later probe of A."""
+    """Distinct ids colliding on one direct-mapped slot within a single
+    insert batch must resolve to ONE winner whose key and row agree —
+    independent scatters with duplicate indices could otherwise pair id A
+    with B's row and poison every later probe of A."""
     c = 64
+    cfg = CacheConfig(c, admit=1)
     cache = init_cache(c, 2)
     pool = np.arange(20_000, dtype=np.int32)
     slots = np.asarray(hash_slots(jnp.asarray(pool), c))
@@ -108,17 +117,255 @@ def test_same_batch_slot_collision_installs_one_consistent_pair():
     assert len(trio) == 3
     ids = jnp.asarray(trio)
     rows = jnp.asarray(100.0 + np.arange(6, dtype=np.float32).reshape(3, 2))
-    cache2, n_ins = cache_insert(cache, ids, rows, jnp.ones(3, bool), admit=1)
+    cache2, n_ins = cache_insert(cache, ids, rows, jnp.ones(3, bool), cfg)
     assert int(n_ins) == 1
-    hit, got = cache_probe(cache2, ids)
+    hit, got = cache_probe(cache2, ids, cfg=cfg)
     assert int(np.asarray(hit).sum()) == 1
     i = int(np.argmax(np.asarray(hit)))
     np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(rows[i]))
 
 
+# ------------------------------------------------------ set-associativity
+
+def _set_colliders(n_sets: int, target_set: int, count: int,
+                   exclude=()) -> np.ndarray:
+    pool = np.arange(50_000, dtype=np.int32)
+    sets = np.asarray(hash_slots(jnp.asarray(pool), n_sets))
+    coll = pool[sets == target_set]
+    coll = coll[~np.isin(coll, list(exclude))]
+    assert len(coll) >= count
+    return coll[:count]
+
+
+def test_two_way_set_holds_two_colliding_ids():
+    """The whole point of associativity: two hot ids whose hashes collide
+    both stay resident in a 2-way set (direct mapping evicts one)."""
+    c, a = 64, 2
+    cfg = CacheConfig(c, admit=1, assoc=a)
+    pair = _set_colliders(c // a, 7, 2)
+    cache = init_cache(c, 2)
+    rows = jnp.asarray([[1.0, 2.0], [3.0, 4.0]])
+    cache, n = cache_insert(cache, jnp.asarray(pair), rows,
+                            jnp.ones(2, bool), cfg)
+    assert int(n) == 2       # same batch, same set -> both ways fill
+    hit, got = cache_probe(cache, jnp.asarray(pair), cfg=cfg)
+    assert np.asarray(hit).all()
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(rows))
+    # the direct-mapped layout with the same state arrays keeps only one
+    cfg1 = CacheConfig(c, admit=1, assoc=1)
+    d_cache = init_cache(c, 2)
+    d_pair = _set_colliders(c, 7, 2)
+    d_cache, n1 = cache_insert(d_cache, jnp.asarray(d_pair),
+                               rows, jnp.ones(2, bool), cfg1)
+    assert int(n1) == 1
+    d_hit, _ = cache_probe(d_cache, jnp.asarray(d_pair), cfg=cfg1)
+    assert int(np.asarray(d_hit).sum()) == 1
+
+
+def test_victim_selection_evicts_smallest_admission_counter():
+    """4-way victim policy: the way whose candidate counter is smallest is
+    the victim — a way whose resident keeps being re-offered (large
+    counter) survives a new candidate's installation."""
+    c, a = 64, 4
+    cfg = CacheConfig(c, admit=1, assoc=a)
+    n_sets = c // a
+    ids = _set_colliders(n_sets, 3, 6)
+    cache = init_cache(c, 2)
+    # fill all 4 ways of set 3 (one batch -> ranks spread over ways)
+    first4 = jnp.asarray(ids[:4])
+    rows4 = jnp.asarray(np.arange(8, dtype=np.float32).reshape(4, 2))
+    cache, n = cache_insert(cache, first4, rows4, jnp.ones(4, bool), cfg)
+    assert int(n) == 4
+    # pump one resident's counter by re-offering it as a candidate twice
+    # (misses of an already-resident id cannot happen through fetch_rows,
+    # so emulate contention by offering OTHER ids and re-offering one)
+    keep = first4[:1]
+    keep_row = rows4[:1]
+    for _ in range(3):
+        cache, _ = cache_insert(cache, keep, keep_row, jnp.ones(1, bool),
+                                CacheConfig(c, admit=99, assoc=a))
+    # now install a 5th collider: it must evict a LOW-counter way, never
+    # the pumped way
+    fifth = jnp.asarray(ids[4:5])
+    cache, n5 = cache_insert(cache, fifth, jnp.full((1, 2), 9.0),
+                             jnp.ones(1, bool), cfg)
+    assert int(n5) == 1
+    hit_keep, got_keep = cache_probe(cache, keep, cfg=cfg)
+    assert np.asarray(hit_keep).all()
+    np.testing.assert_array_equal(np.asarray(got_keep), np.asarray(keep_row))
+    hit5, _ = cache_probe(cache, fifth, cfg=cfg)
+    assert np.asarray(hit5).all()
+
+
+def test_assoc_same_batch_set_overflow_keeps_consistent_pairs():
+    """More same-set offers than ways in one batch: each installed way must
+    hold a consistent (key, row) pair and the overflow is dropped."""
+    c, a = 32, 2
+    cfg = CacheConfig(c, admit=1, assoc=a)
+    ids = _set_colliders(c // a, 5, 4)
+    cache = init_cache(c, 2)
+    rows = jnp.asarray(10.0 + np.arange(8, dtype=np.float32).reshape(4, 2))
+    cache, n = cache_insert(cache, jnp.asarray(ids), rows,
+                            jnp.ones(4, bool), cfg)
+    assert int(n) == a       # one install per way, overflow dropped
+    hit, got = cache_probe(cache, jnp.asarray(ids), cfg=cfg)
+    assert int(np.asarray(hit).sum()) == a
+    for i in np.flatnonzero(np.asarray(hit)):
+        np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(rows[i]))
+
+
+@pytest.mark.parametrize("assoc", [2, 4])
+@pytest.mark.parametrize("flip", [False, True])
+def test_new_candidate_spares_inflight_candidate_way(assoc, flip):
+    """A way whose candidate is mid-admission carries progress: a new
+    same-set candidate must take a virgin way, not trample the in-flight
+    tag (which would reset its counter with free ways available) — for
+    either id ordering within the batch (the rank machinery must not route
+    the new candidate onto the tagged way by off-by-one)."""
+    c = 8 * assoc                 # keeps n_sets small so colliders abound
+    cfg = CacheConfig(c, admit=2, assoc=assoc)
+    ids = _set_colliders(c // assoc, 2, 2)
+    x, y = int(ids[0]), int(ids[1])
+    if flip:
+        x, y = y, x
+    cache = init_cache(c, 2)
+    # offer X once: tagged somewhere, count 1, nothing installed
+    cache, n0 = cache_insert(cache, jnp.asarray([x], jnp.int32),
+                             jnp.ones((1, 2)), jnp.ones(1, bool), cfg)
+    assert int(n0) == 0
+    # offer X and Y together: X's second offer must install (progress
+    # kept), Y must track in a DIFFERENT way
+    batch = jnp.asarray([x, y], jnp.int32)
+    cache, n1 = cache_insert(cache, batch, jnp.ones((2, 2)),
+                             jnp.ones(2, bool), cfg)
+    assert int(n1) == 1
+    hit, _ = cache_probe(cache, jnp.asarray([x], jnp.int32), cfg=cfg)
+    assert np.asarray(hit).all()
+    assert int(np.asarray(cache.tags == y).sum()) == 1   # Y tracked too
+    # Y's second offer now installs alongside X
+    cache, n2 = cache_insert(cache, jnp.asarray([y], jnp.int32),
+                             jnp.ones((1, 2)), jnp.ones(1, bool), cfg)
+    assert int(n2) == 1
+    hit2, _ = cache_probe(cache, batch, cfg=cfg)
+    assert np.asarray(hit2).all()
+
+
+def test_duplicate_id_offers_occupy_one_way():
+    """Sharded admission hands the shard holder the SAME id from several
+    source workers in one batch — it must land in exactly one way (and
+    count one admission step), never clone itself across the set or evict
+    unrelated residents from every way."""
+    c, a = 32, 4
+    cfg = CacheConfig(c, admit=1, assoc=a)
+    cache = init_cache(c, 2)
+    ids = jnp.asarray([77, 77, 77, 77], jnp.int32)   # 4 workers, same id
+    rows = jnp.full((4, 2), 5.0)
+    cache, n = cache_insert(cache, ids, rows, jnp.ones(4, bool), cfg)
+    assert int(n) == 1
+    assert int(np.asarray(cache.keys == 77).sum()) == 1
+    hit, got = cache_probe(cache, ids[:1], cfg=cfg)
+    assert np.asarray(hit).all()
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(rows[:1]))
+    # duplicates + a distinct collider in one batch: the collider still
+    # gets its own way
+    sets = hash_slots(jnp.arange(50_000, dtype=jnp.int32), c // a)
+    coll = np.arange(50_000)[np.asarray(sets)
+                             == int(hash_slots(ids[:1], c // a)[0])]
+    coll = coll[coll != 77][:1]
+    batch = jnp.asarray([77, int(coll[0]), 77], jnp.int32)
+    cache2, n2 = cache_insert(init_cache(c, 2), batch,
+                              jnp.ones((3, 2)), jnp.ones(3, bool), cfg)
+    assert int(n2) == 2
+    hit2, _ = cache_probe(cache2, batch, cfg=cfg)
+    assert np.asarray(hit2).all()
+    # admit=2: duplicate offers in ONE batch are one tracking step, so the
+    # candidate is not yet installed
+    cfg2 = CacheConfig(c, admit=2, assoc=a)
+    cache3, n3 = cache_insert(init_cache(c, 2), ids, rows,
+                              jnp.ones(4, bool), cfg2)
+    assert int(n3) == 0
+    assert int(np.asarray(cache3.tags == 77).sum()) == 1
+
+
+# ------------------------------------------------------------- hash guards
+
 def test_hash_slots_rejects_non_power_of_two():
     with pytest.raises(ValueError):
         hash_slots(jnp.arange(4, dtype=jnp.int32), 100)
+
+
+def test_hash_slots_degenerate_single_set():
+    """n_sets == 1 would need a 32-bit shift (out of range on uint32) —
+    the guard maps every id to set 0 instead of tracing UB."""
+    slots = hash_slots(jnp.asarray([0, 1, 7, 2**30], jnp.int32), 1)
+    np.testing.assert_array_equal(np.asarray(slots), 0)
+    # a 1-row cache is usable end to end
+    cfg = CacheConfig(1, admit=1)
+    cache = init_cache(1, 2)
+    cache, n = cache_insert(cache, jnp.asarray([42], jnp.int32),
+                            jnp.ones((1, 2)), jnp.ones(1, bool), cfg)
+    assert int(n) == 1
+    hit, _ = cache_probe(cache, jnp.asarray([42], jnp.int32), cfg=cfg)
+    assert np.asarray(hit).all()
+
+
+def test_shard_of_is_balanced_and_differs_from_set_hash():
+    """The shard router must spread ids over workers AND stay independent
+    of the set hash — a shared mixer would collapse one shard's residents
+    onto a fraction of its sets."""
+    ids = jnp.arange(20_000, dtype=jnp.int32)
+    for w in (2, 4, 7, 8):
+        s = np.asarray(shard_of(ids, w))
+        counts = np.bincount(s, minlength=w)
+        assert counts.min() > 0.8 * len(ids) / w, (w, counts)
+    # within one shard, the set indices still cover most sets
+    n_sets = 64
+    shard0 = np.asarray(ids)[np.asarray(shard_of(ids, 8)) == 0]
+    sets = np.asarray(hash_slots(jnp.asarray(shard0), n_sets))
+    assert len(np.unique(sets)) == n_sets
+
+
+def test_probe_and_insert_reject_mismatched_layout():
+    """The cfg must describe the POPULATED state: a different n_rows would
+    silently probe/insert at wrong slots, so it raises instead."""
+    cache = init_cache(64, 2)
+    ids = jnp.asarray([1], jnp.int32)
+    with pytest.raises(ValueError):
+        cache_probe(cache, ids, cfg=CacheConfig(32))
+    with pytest.raises(ValueError):
+        cache_insert(cache, ids, jnp.ones((1, 2)), jnp.ones(1, bool),
+                     CacheConfig(128))
+
+
+def test_cache_config_validation():
+    with pytest.raises(ValueError):
+        CacheConfig(100).validated()            # not a power of two
+    with pytest.raises(ValueError):
+        CacheConfig(64, assoc=3).validated()    # unsupported ways
+    with pytest.raises(ValueError):
+        CacheConfig(64, mode="global").validated()
+    assert CacheConfig(64, assoc=4, mode="sharded").validated().n_sets == 16
+
+
+def test_model_config_rounds_cache_rows():
+    """cache_rows validation happens at CONSTRUCTION, not trace time."""
+    from repro.core.config import ModelConfig
+    cfg = ModelConfig(name="t", family="gcn", cache_rows=1000)
+    assert cfg.cache_rows == 1024
+    cfg2 = ModelConfig(name="t", family="gcn", cache_rows=4096)
+    assert cfg2.cache_rows == 4096
+    with pytest.raises(ValueError):
+        ModelConfig(name="t", family="gcn", cache_rows=-1)
+    with pytest.raises(ValueError):
+        ModelConfig(name="t", family="gcn", cache_assoc=3)
+    with pytest.raises(ValueError):
+        ModelConfig(name="t", family="gcn", cache_mode="bogus")
+    c3 = CacheConfig.from_model(
+        ModelConfig(name="t", family="gcn", cache_rows=512, cache_admit=3,
+                    cache_assoc=2, cache_mode="sharded"))
+    assert c3 == CacheConfig(512, 3, 2, "sharded")
+    assert CacheConfig.from_model(
+        ModelConfig(name="t", family="gcn", cache_rows=0)) is None
 
 
 def test_worker_axis_roundtrip():
@@ -134,10 +381,10 @@ def test_worker_axis_roundtrip():
 _FETCH_FNS = {}
 
 
-def _fetch_fn(kind, admit=1, dedup=True):
+def _fetch_fn(kind, admit=1, assoc=1, dedup=True):
     """Jitted single-worker fetch wrappers, cached so the hypothesis sweep
     and the 20-iteration Zipf run compile once per shape."""
-    key = (kind, admit, dedup)
+    key = (kind, admit, assoc, dedup)
     if key in _FETCH_FNS:
         return _FETCH_FNS[key]
     from jax.experimental.shard_map import shard_map
@@ -151,9 +398,11 @@ def _fetch_fn(kind, admit=1, dedup=True):
             mesh=mesh, in_specs=(P(), P()), out_specs=P(), check_rep=False))
     else:
         def worker(t, i, c):
+            cfg = CacheConfig(
+                squeeze_worker_axis(c).n_rows, admit=admit, assoc=assoc)
             out, c, fs, cs = fetch_rows(t, i, "data",
                                         cache=squeeze_worker_axis(c),
-                                        cache_admit=admit)
+                                        cache_cfg=cfg)
             return (out, restore_worker_axis(c),
                     jax.tree.map(lambda a: a[None], (fs, cs)))
 
@@ -164,10 +413,10 @@ def _fetch_fn(kind, admit=1, dedup=True):
     return fn
 
 
-def _run_fetch(table, ids, *, cache=None, admit=1, dedup=True):
+def _run_fetch(table, ids, *, cache=None, admit=1, assoc=1, dedup=True):
     if cache is None:
         return _fetch_fn("plain", dedup=dedup)(table, ids)
-    return _fetch_fn("cached", admit=admit)(table, ids, cache)
+    return _fetch_fn("cached", admit=admit, assoc=assoc)(table, ids, cache)
 
 
 @settings(max_examples=20, deadline=None)
@@ -190,6 +439,23 @@ def test_cached_fetch_bit_identical_to_uncached(seed):
         assert int(fs.n_dropped[0]) == 0
 
 
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4]))
+def test_cached_fetch_bit_identical_set_associative(seed, assoc):
+    """The bit-identity contract holds for every associativity."""
+    rng = np.random.default_rng(seed)
+    n, d = 48, 3
+    table = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    cache = jax.tree.map(jnp.asarray, init_worker_caches(16, d, 1))
+    for _ in range(3):
+        ids = jnp.asarray(rng.integers(0, n, 40, dtype=np.int32))
+        got, cache, (fs, cs) = _run_fetch(table, ids, cache=cache,
+                                          admit=1, assoc=assoc)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(table)[np.asarray(ids)])
+        assert int(fs.n_dropped[0]) == 0
+
+
 def test_cached_fetch_hits_accumulate_and_route_count_drops():
     """Second identical request stream: hits appear, routed uniques fall,
     and n_requests/n_unique telemetry stays consistent."""
@@ -206,6 +472,9 @@ def test_cached_fetch_hits_accumulate_and_route_count_drops():
     got, cache, (fs2, cs2) = _run_fetch(table, ids, cache=cache, admit=1)
     assert int(cs2.n_hits[0]) > 0
     assert int(fs2.n_unique[0]) == n_uniq - int(cs2.n_hits[0])
+    # replicated mode: every hit is local, bytes_saved counts all of them
+    assert int(cs2.n_local_hits[0]) == int(cs2.n_hits[0])
+    assert int(cs2.n_shard_hits[0]) == 0
     assert int(cs2.bytes_saved[0]) == int(cs2.n_hits[0]) * d * 4
     np.testing.assert_array_equal(np.asarray(got),
                                   np.asarray(table)[np.asarray(ids)])
@@ -217,6 +486,16 @@ def test_cache_requires_dedup():
     with pytest.raises(ValueError):
         fetch_rows(table, jnp.zeros(4, jnp.int32), "data", dedup=False,
                    cache=cache)
+
+
+def test_cache_requires_cfg():
+    """A cache state without its policy object must be rejected — probing
+    an assoc>1/sharded state under a guessed default layout would silently
+    lose the residents instead of erroring."""
+    table = jnp.zeros((8, 2))
+    cache = init_cache(8, 2)
+    with pytest.raises(ValueError):
+        fetch_rows(table, jnp.zeros(4, jnp.int32), "data", cache=cache)
 
 
 def test_pallas_probe_impl_serves_cached_fetch():
@@ -234,9 +513,9 @@ def test_pallas_probe_impl_serves_cached_fetch():
     mesh = make_local_mesh(1, 1)
 
     def worker(t, i, c):
-        out, c, fs, cs = fetch_rows(t, i, "data",
-                                    cache=squeeze_worker_axis(c),
-                                    cache_admit=1)
+        out, c, fs, cs = fetch_rows(
+            t, i, "data", cache=squeeze_worker_axis(c),
+            cache_cfg=CacheConfig(32, admit=1, assoc=2))
         return (out, restore_worker_axis(c),
                 jax.tree.map(lambda a: a[None], (fs, cs)))
 

@@ -98,9 +98,13 @@ def test_dedup_requests_invariants(seed):
 @pytest.mark.parametrize("ids", [
     np.full(64, 7),                      # all-identical ids
     np.array([13]),                      # single-element input
+    np.array([13, 13]),                  # smallest duplicated input
     np.arange(50),                       # already sorted, all distinct
+    np.arange(50)[::-1].copy(),          # reverse-sorted, all distinct
     np.array([0, 159, 80, 0, 159, 42]),  # ids spanning the full shard range
-], ids=["all-identical", "singleton", "sorted", "shard-range"])
+    np.array([0]),                       # single id zero (sentinel-adjacent)
+], ids=["all-identical", "singleton", "duplicated-pair", "sorted",
+        "reverse-sorted", "shard-range", "zero"])
 def test_dedup_requests_edge_cases(ids):
     """Boundary inputs for the static-shape unique front end."""
     ids_j = jnp.asarray(ids.astype(np.int32))

@@ -34,19 +34,26 @@ def test_gather_reduce(n, d, m, k):
 
 
 @pytest.mark.parametrize("c,d,r", [(64, 32, 17), (256, 128, 300), (1024, 96, 64)])
+@pytest.mark.parametrize("assoc", [1, 2, 4])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_cache_probe_gather(c, d, r, dtype):
-    """Fused VMEM probe+gather vs the jnp oracle: identical hit vector and
-    bit-identical rows (the cache tier must never perturb features)."""
+def test_cache_probe_gather(c, d, r, assoc, dtype):
+    """Fused VMEM probe+gather vs the jnp oracle across associativities:
+    identical hit vector and bit-identical rows (the cache tier must never
+    perturb features)."""
     from repro.core.feature_cache import hash_slots
 
     rng = np.random.default_rng(0)
-    # residents installed at their TRUE hash slots (as cache_insert would),
-    # plus ~half the slots left empty
+    # residents installed at their TRUE hash sets spread over the ways (as
+    # cache_insert would), plus ~half the slots left empty
+    n_sets = c // assoc
     pool = rng.choice(50 * c, size=c, replace=False).astype(np.int32)
-    slots = np.asarray(hash_slots(jnp.asarray(pool), c))
+    sets = np.asarray(hash_slots(jnp.asarray(pool), n_sets))
     keys = np.full(c, -1, np.int32)
-    keys[slots] = pool
+    way_fill = np.zeros(n_sets, np.int64)
+    for pid, s in zip(pool, sets):
+        if way_fill[s] < assoc:
+            keys[s * assoc + way_fill[s]] = pid
+            way_fill[s] += 1
     keys[rng.random(c) < 0.5] = -1
     keys = jnp.asarray(keys)
     rows = jax.random.normal(jax.random.PRNGKey(1), (c, d)).astype(dtype)
@@ -54,29 +61,47 @@ def test_cache_probe_gather(c, d, r, dtype):
     ids = np.where(rng.random(r) < 0.5, rng.choice(pool, size=r),
                    rng.integers(0, 50 * c, r)).astype(np.int32)
     ids = jnp.asarray(ids)
-    got_hit, got_rows = cache_probe_gather_pallas(keys, rows, ids)
-    want_hit, want_rows = ref.cache_probe_gather_ref(keys, rows, ids)
+    got_hit, got_rows = cache_probe_gather_pallas(keys, rows, ids, assoc=assoc)
+    want_hit, want_rows = ref.cache_probe_gather_ref(keys, rows, ids,
+                                                     assoc=assoc)
     np.testing.assert_array_equal(np.asarray(got_hit), np.asarray(want_hit))
     np.testing.assert_array_equal(
         np.asarray(got_rows, np.float32), np.asarray(want_rows, np.float32))
     assert np.asarray(want_hit).any() and not np.asarray(want_hit).all()
 
 
-def test_cache_probe_gather_matches_state_probe():
+@pytest.mark.parametrize("assoc", [1, 2])
+def test_cache_probe_gather_matches_state_probe(assoc):
     """The kernel and feature_cache.cache_probe(impl=...) agree — same hash,
     same rows — so either implementation can serve the fetch front end."""
-    from repro.core.feature_cache import cache_probe, init_cache, cache_insert
+    from repro.core.feature_cache import (CacheConfig, cache_probe,
+                                          init_cache, cache_insert)
 
+    cfg = CacheConfig(128, admit=1, assoc=assoc)
     cache = init_cache(128, 16)
     rng = np.random.default_rng(3)
     ids = jnp.asarray(rng.integers(0, 400, 96, dtype=np.int32))
     rows = jax.random.normal(jax.random.PRNGKey(2), (96, 16))
-    cache, _ = cache_insert(cache, ids, rows, jnp.ones(96, bool), admit=1)
+    cache, _ = cache_insert(cache, ids, rows, jnp.ones(96, bool), cfg)
     probe = jnp.asarray(rng.integers(0, 400, 64, dtype=np.int32))
-    hit_j, rows_j = cache_probe(cache, probe)
-    hit_p, rows_p = cache_probe(cache, probe, impl="pallas")
+    hit_j, rows_j = cache_probe(cache, probe, cfg=cfg)
+    hit_p, rows_p = cache_probe(cache, probe, cfg=cfg, impl="pallas")
     np.testing.assert_array_equal(np.asarray(hit_j), np.asarray(hit_p))
     np.testing.assert_array_equal(np.asarray(rows_j), np.asarray(rows_p))
+
+
+def test_cache_probe_gather_degenerate_single_set():
+    """c == assoc -> one set: the kernel takes the shift-guard branch
+    (a literal 32-bit uint32 shift would be out of range)."""
+    keys = jnp.asarray([11, 22, -1, 33], jnp.int32)
+    rows = jnp.arange(8, dtype=jnp.float32).reshape(4, 2)
+    ids = jnp.asarray([22, 5, 33, 11, -7], jnp.int32)
+    got_hit, got_rows = cache_probe_gather_pallas(keys, rows, ids, assoc=4)
+    want_hit, want_rows = ref.cache_probe_gather_ref(keys, rows, ids, assoc=4)
+    np.testing.assert_array_equal(np.asarray(got_hit), np.asarray(want_hit))
+    np.testing.assert_array_equal(np.asarray(got_rows), np.asarray(want_rows))
+    np.testing.assert_array_equal(np.asarray(want_hit),
+                                  [True, False, True, True, False])
 
 
 @pytest.mark.parametrize("b,hq,hkv,lq,lk,dh", [

@@ -120,9 +120,10 @@ def test_pipelined_loop_threads_feature_cache():
     part = partition_edges(g, 1)
     feats = node_features(n, dim)
     labels = node_labels(n, classes)
+    from repro.core.feature_cache import CacheConfig
     gen, dev, cache0 = make_distributed_generator(
         mesh, part, feats, labels, fanouts=fanouts,
-        cache_rows=512, cache_admit=1)
+        cache_cfg=CacheConfig(512, admit=1))
     from repro.configs import REGISTRY, smoke_config
     import dataclasses
     cfg = dataclasses.replace(
@@ -165,9 +166,10 @@ def test_offline_loop_threads_feature_cache():
     n, dim, classes = 400, 8, 4
     g = powerlaw_graph(n, avg_degree=5, seed=3)
     part = partition_edges(g, 1)
+    from repro.core.feature_cache import CacheConfig
     gen, dev, cache0 = make_distributed_generator(
         mesh, part, node_features(n, dim), node_labels(n, classes),
-        fanouts=(4, 3), cache_rows=256, cache_admit=1)
+        fanouts=(4, 3), cache_cfg=CacheConfig(256, admit=1))
     from repro.configs import REGISTRY, smoke_config
     import dataclasses
     cfg = dataclasses.replace(

@@ -17,6 +17,26 @@ from repro.train.optimizer import (adam_update, clip_by_global_norm,
                                    init_adam, lr_schedule)
 
 
+# ------------------------------------------------- capacity calibration --
+def test_warm_capacity_bounds():
+    """Cache-aware capacity shrink: the warm bound follows the measured
+    miss peak, never exceeds the per-worker row count, and keeps a margin
+    for routing skew."""
+    from repro.launch.train import warm_capacity
+
+    # misses spread over 8 destinations with 2x skew allowance + margin
+    assert warm_capacity(800, 8, 2.0, rows=10_000) == 208
+    # clamped to the destination's row count
+    assert warm_capacity(100_000, 2, 2.0, rows=512) == 512
+    # the skew allowance floors at 2x even under a tighter calibrated
+    # slack — warm miss peaks are spikier than the cold request mix
+    assert warm_capacity(800, 8, 0.25, rows=10_000) == 208
+    # a larger calibrated slack widens it further
+    assert warm_capacity(800, 8, 4.0, rows=10_000) == 408
+    # degenerate: tiny miss peaks still get a usable buffer
+    assert warm_capacity(0, 8, 2.0, rows=64) == 8
+
+
 # ------------------------------------------------------------- optimizer --
 def test_adam_converges_on_quadratic():
     tcfg = TrainConfig(learning_rate=0.1, warmup_steps=0, total_steps=200,
