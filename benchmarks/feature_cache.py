@@ -1,5 +1,6 @@
 """Hot-node feature cache: wire-slot reduction vs cache size on Zipf skew,
-and replicated-vs-sharded placement at equal per-worker capacity.
+and the three-way replicated / sharded / tiered placement sweep at equal
+per-worker capacity.
 
 Industrial graphs are power-law; a Zipf(1.1) request stream is the
 canonical stand-in for the id mix a fanout sampler presents to the feature
@@ -9,22 +10,36 @@ the number of distinct ids that still go to their owner
 (``FetchStats.n_unique`` summed over the run) as a function of
 ``cache_rows``, plus the steady-state hit rate and bytes saved.
 
-With ``--workers > 1`` every cache size is additionally measured in
-**sharded** placement (cache-aware routing: ids probe the worker whose
-CACHE shard owns them before falling through to the row owner).  Each
-replica of a replicated cache converges on the same Zipf head, so total
-distinct capacity stays ~C; the sharded cache partitions the id-space and
-reaches W*C — the sweep shows it serving strictly more unique hits at
-equal per-worker ``cache_rows`` (the gate ``main`` enforces).
+With ``--workers > 1`` every TOTAL per-worker row budget is additionally
+measured in **sharded** placement (cache-aware routing: ids probe the
+worker whose CACHE shard owns them before falling through to the row
+owner) and **tiered** placement (a replicated L1 head in front of the
+sharded L2; equal-total split — the only power-of-two partition of a
+power-of-two budget — is half L1, half L2).  Each replica of a replicated
+cache converges on the same Zipf head, so total distinct capacity stays
+~C; the sharded cache partitions the id-space and reaches W*C; the tiered
+cache trades half the L2 capacity for serving the global head with ZERO
+probe-round traffic.  ``probe_round_bytes`` counts the ids each mode
+actually carries on the shard-probe all_to_all (occupied wire slots x
+(id up + hit flag and row down) — what a compacted transport would ship;
+empty slack slots carry only the -1 sentinel): sharded ships EVERY
+distinct id, tiered only the L1 misses, so at equal total rows the tiered
+probe round is strictly cheaper (the gate ``main`` enforces, together
+with the L1 serving >= 20% of all hits network-free).
 
     PYTHONPATH=src python -m benchmarks.feature_cache [--smoke] \
-        [--out BENCH_feature_cache.json] [--workers N] [--iters K]
+        [--out BENCH_feature_cache.json] [--workers N] [--iters K] \
+        [--baseline benchmarks/baselines/feature_cache_smoke_w4.json]
 
 Emits the ``name,us_per_call,derived`` CSV rows the benchmark harness
 expects and (with ``--out``) a JSON artifact so CI can accumulate the perf
-trajectory.  Acceptance anchors: at ``cache_rows=4096`` on Zipf(1.1) over
->= 20 iterations the routed-unique reduction vs cache-off is >= 30%; at
-``--workers > 1`` sharded hits strictly exceed replicated hits per size.
+trajectory.  ``--baseline`` compares each mode's unique_reduction against
+a checked-in reference and fails on a >5% relative regression (the
+nightly job's gate).  Acceptance anchors: at ``cache_rows=4096`` on
+Zipf(1.1) over >= 20 iterations the routed-unique reduction vs cache-off
+is >= 30%; at ``--workers > 1`` sharded hits strictly exceed replicated
+hits per size, tiered probe-round bytes stay strictly below sharded, and
+the L1 serves >= 20% of tiered hits.
 """
 from __future__ import annotations
 
@@ -56,8 +71,9 @@ def zipf_requests(rng, n_nodes: int, size: int, a: float = 1.1):
 
 def measure(n_nodes: int, dim: int, requests: int, iters: int,
             cache_rows: int, *, admit: int = 2, assoc: int = 1,
-            mode: str = "replicated", zipf_a: float = 1.1,
-            seed: int = 0, workers: int = 1, time_it: bool = False) -> dict:
+            mode: str = "replicated", l1_rows: int = 0, l1_promote: int = 2,
+            zipf_a: float = 1.1, seed: int = 0, workers: int = 1,
+            time_it: bool = False) -> dict:
     """Run ``iters`` cached fetches over a Zipf stream; count routed uniques.
 
     Runs the REAL ``fetch_rows`` path under shard_map (the all_to_all
@@ -66,7 +82,9 @@ def measure(n_nodes: int, dim: int, requests: int, iters: int,
     at W=1, would go — to their owner.  Every worker draws its own iid
     Zipf stream (distinct per-worker request mixes are exactly what
     separates sharded from replicated placement).  Counters are summed
-    over ALL workers.
+    over ALL workers.  ``cache_rows`` is the main-tier (L2) size; tiered
+    mode adds ``l1_rows`` replicated L1 slots, so total per-worker rows
+    are ``cache_rows + l1_rows``.
     """
     import jax
     import jax.numpy as jnp
@@ -74,7 +92,7 @@ def measure(n_nodes: int, dim: int, requests: int, iters: int,
     from jax.experimental.shard_map import shard_map
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    from repro.core.feature_cache import CacheConfig, init_worker_caches
+    from repro.core.feature_cache import CacheConfig, init_cache_state
     from repro.core.generation import fetch_rows
     from repro.launch.mesh import make_mesh
     from .common import time_fn
@@ -85,7 +103,8 @@ def measure(n_nodes: int, dim: int, requests: int, iters: int,
     table = rng.standard_normal((workers * rows_pw, dim)).astype(np.float32)
     cached = cache_rows > 0
     cfg = CacheConfig(n_rows=cache_rows, admit=admit, assoc=assoc,
-                      mode=mode).validated() if cached else None
+                      mode=mode, l1_rows=l1_rows if mode == "tiered" else 0,
+                      l1_promote=l1_promote).validated() if cached else None
 
     # each worker fetches rows for ITS OWN stream, so the fetched block is
     # per-worker data — it must leave the shard_map sharded, not stamped
@@ -103,7 +122,7 @@ def measure(n_nodes: int, dim: int, requests: int, iters: int,
             worker, mesh=mesh, in_specs=(P("data"), P("data"), P("data")),
             out_specs=(P("data"), P("data"), P("data")), check_rep=False))
         state = jax.device_put(
-            init_worker_caches(cache_rows, dim, workers),
+            init_cache_state(cfg, dim, workers),
             NamedSharding(mesh, P("data")))
     else:
         def worker_nc(t, i):
@@ -125,28 +144,48 @@ def measure(n_nodes: int, dim: int, requests: int, iters: int,
     sum_unique = 0
     sum_hits = 0
     sum_local_hits = 0
+    sum_l1_hits = 0
     sum_bytes_saved = 0
+    probe_round_ids = 0
     dropped = 0
     for ids in streams:
         if cached:
             out, state, (fs, cs) = run(table_j, ids, state)
-            sum_hits += int(np.asarray(cs.n_hits).sum())
+            n_hits = int(np.asarray(cs.n_hits).sum())
+            n_l1 = int(np.asarray(cs.n_l1_hits).sum())
+            n_miss = int(np.asarray(cs.n_misses).sum())
+            sum_hits += n_hits
+            sum_l1_hits += n_l1
             sum_local_hits += int(np.asarray(cs.n_local_hits).sum())
             sum_bytes_saved += int(np.asarray(cs.bytes_saved).sum())
+            if mode in ("sharded", "tiered"):
+                # ids this mode carried on the shard-probe round: every
+                # distinct id (= hits + misses, by conservation) minus the
+                # L1 hits that never left the requester
+                probe_round_ids += n_hits + n_miss - n_l1
         else:
             out, fs = run(table_j, ids)
         sum_unique += int(np.asarray(fs.n_unique).sum())
         dropped += int(np.asarray(fs.n_dropped).sum())
+    # per probed id: the int32 id rides out, a hit byte and the [D] f32
+    # row ride back (what a compacted probe transport would ship)
+    probe_slot_bytes = 4 + 1 + 4 * dim
     rec = {
         "cache_rows": cache_rows,
+        "l1_rows": l1_rows if (cached and mode == "tiered") else 0,
+        "total_rows": cache_rows + (l1_rows if (cached and mode == "tiered")
+                                    else 0),
         "admit": admit,
         "assoc": assoc,
         "mode": mode if cached else None,
         "sum_n_unique": sum_unique,
         "sum_hits": sum_hits,
+        "sum_l1_hits": sum_l1_hits,
         "sum_local_hits": sum_local_hits,
-        "sum_shard_hits": sum_hits - sum_local_hits,
+        "sum_shard_hits": sum_hits - sum_local_hits - sum_l1_hits,
         "sum_bytes_saved": sum_bytes_saved,
+        "probe_round_ids": probe_round_ids,
+        "probe_round_bytes": probe_round_ids * probe_slot_bytes,
         "dropped": dropped,
         "hit_rate": sum_hits / max(sum_hits + sum_unique, 1),
     }
@@ -161,6 +200,13 @@ def measure(n_nodes: int, dim: int, requests: int, iters: int,
 
 def sweep(*, smoke: bool = False, workers: int = 1, iters: int = None,
           seed: int = 0, assoc: int = 2, time_it: bool = False) -> dict:
+    """Three-way placement sweep at EQUAL total per-worker rows.
+
+    Every swept size ``c`` is the TOTAL per-worker row budget: replicated
+    and sharded spend all of it on their single tier; tiered splits it
+    half L1 / half L2 (the only power-of-two partition of a power-of-two
+    budget — both tiers hash with the top-bits trick, so both must be
+    powers of two)."""
     n_nodes = 20_000 if smoke else 200_000
     dim = 32 if smoke else 128
     requests = 4_096 if smoke else 16_384
@@ -169,12 +215,15 @@ def sweep(*, smoke: bool = False, workers: int = 1, iters: int = None,
     base = measure(n_nodes, dim, requests, iters, 0, seed=seed,
                    workers=workers, time_it=time_it)
     results = [base]
-    modes = ("replicated", "sharded") if workers > 1 else ("replicated",)
+    modes = (("replicated", "sharded", "tiered") if workers > 1
+             else ("replicated",))
     for c in sizes:
         for mode in modes:
-            rec = measure(n_nodes, dim, requests, iters, c, seed=seed,
-                          assoc=assoc, mode=mode, workers=workers,
-                          time_it=time_it)
+            l2 = c // 2 if mode == "tiered" else c
+            l1 = c // 2 if mode == "tiered" else 0
+            rec = measure(n_nodes, dim, requests, iters, l2, seed=seed,
+                          assoc=assoc, mode=mode, l1_rows=l1,
+                          workers=workers, time_it=time_it)
             rec["unique_reduction"] = 1.0 - rec["sum_n_unique"] / max(
                 base["sum_n_unique"], 1)
             results.append(rec)
@@ -192,10 +241,36 @@ def sweep(*, smoke: bool = False, workers: int = 1, iters: int = None,
 
 
 def _row_name(r: dict) -> str:
-    name = f"feature_cache_rows_{r['cache_rows']}"
+    name = f"feature_cache_rows_{r['total_rows']}"
     if r.get("mode"):
         name += f"_{r['mode']}"
     return name
+
+
+def check_baseline(rec: dict, baseline: dict, tol: float = 0.05) -> list:
+    """Compare each (total_rows, mode) cell's unique_reduction against a
+    checked-in baseline; return failure strings for any cell whose
+    reduction fell more than ``tol`` RELATIVE (the nightly regression
+    gate).  Cells missing on either side are skipped — adding a new size
+    or mode must not fail the old baseline."""
+    def key(r):
+        return (r.get("total_rows"), r.get("mode"))
+
+    have = {key(r): r for r in rec["results"] if r.get("mode")}
+    failures = []
+    for b in baseline.get("results", []):
+        if not b.get("mode") or "unique_reduction" not in b:
+            continue
+        now = have.get(key(b))
+        if now is None:
+            continue
+        floor = b["unique_reduction"] * (1.0 - tol)
+        if now["unique_reduction"] < floor:
+            failures.append(
+                f"{_row_name(b)}: unique_reduction "
+                f"{now['unique_reduction']:.3f} < baseline "
+                f"{b['unique_reduction']:.3f} - {tol:.0%}")
+    return failures
 
 
 def bench() -> list:
@@ -224,6 +299,9 @@ def main() -> None:
     ap.add_argument("--time", action="store_true",
                     help="also time each fetch variant")
     ap.add_argument("--out", default=None, help="write JSON here")
+    ap.add_argument("--baseline", default=None,
+                    help="checked-in baseline JSON; fail if any mode's "
+                         "unique_reduction regresses >5%% relative")
     args = ap.parse_args()
     if args.workers > 1:
         os.environ["XLA_FLAGS"] = (
@@ -235,11 +313,18 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in rec["results"]:
         red = r.get("unique_reduction")
-        print(f"{_row_name(r)},"
-              f"{r.get('us_per_fetch', 0.0):.1f},"
-              f"routed_unique={r['sum_n_unique']}"
-              f",hit_rate={r['hit_rate']:.3f}"
-              + (f",unique_reduction={red:.3f}" if red is not None else ""))
+        line = (f"{_row_name(r)},"
+                f"{r.get('us_per_fetch', 0.0):.1f},"
+                f"routed_unique={r['sum_n_unique']}"
+                f",hit_rate={r['hit_rate']:.3f}")
+        if red is not None:
+            line += f",unique_reduction={red:.3f}"
+        if r.get("mode") in ("sharded", "tiered"):
+            line += f",probe_round_bytes={r['probe_round_bytes']}"
+        if r.get("mode") == "tiered":
+            line += (f",l1_hit_share="
+                     f"{r['sum_l1_hits'] / max(r['sum_hits'], 1):.3f}")
+        print(line)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(rec, f, indent=2)
@@ -252,18 +337,42 @@ def main() -> None:
               file=sys.stderr)
         failed = True
     if args.workers > 1:
-        # the sharded claim: strictly more unique hits than replication at
-        # EQUAL per-worker cache_rows, for every swept size
         by_size = {}
         for r in rec["results"]:
             if r.get("mode"):
-                by_size.setdefault(r["cache_rows"], {})[r["mode"]] = r
+                by_size.setdefault(r["total_rows"], {})[r["mode"]] = r
         for c, recs in sorted(by_size.items()):
             rep, sh = recs.get("replicated"), recs.get("sharded")
+            ti = recs.get("tiered")
+            # the sharded claim: strictly more unique hits than replication
+            # at EQUAL total per-worker rows, for every swept size
             if rep and sh and sh["sum_hits"] <= rep["sum_hits"]:
                 print(f"WARNING: sharded hits {sh['sum_hits']} <= replicated "
-                      f"{rep['sum_hits']} at cache_rows={c}", file=sys.stderr)
+                      f"{rep['sum_hits']} at total_rows={c}", file=sys.stderr)
                 failed = True
+            # the tiered claim: the L1 head keeps distinct ids OFF the
+            # probe round — strictly fewer probe-round bytes than sharded
+            # at equal total rows, with the L1 serving >= 20% of all hits
+            # without any network at all
+            if sh and ti:
+                if ti["probe_round_bytes"] >= sh["probe_round_bytes"]:
+                    print(f"WARNING: tiered probe bytes "
+                          f"{ti['probe_round_bytes']} >= sharded "
+                          f"{sh['probe_round_bytes']} at total_rows={c}",
+                          file=sys.stderr)
+                    failed = True
+                l1_share = ti["sum_l1_hits"] / max(ti["sum_hits"], 1)
+                if l1_share < 0.20:
+                    print(f"WARNING: L1 serves only {l1_share:.1%} of tiered "
+                          f"hits at total_rows={c} (need >= 20%)",
+                          file=sys.stderr)
+                    failed = True
+    if args.baseline:
+        with open(args.baseline) as f:
+            base_rec = json.load(f)
+        for msg in check_baseline(rec, base_rec):
+            print(f"REGRESSION: {msg}", file=sys.stderr)
+            failed = True
     if failed:
         sys.exit(1)
 

@@ -1,11 +1,13 @@
 """End-to-end multi-worker driver: 8 simulated workers run the full
 GraphGen+ workflow — partitioning, balance table, edge-centric generation
-with tree reduction, a SHARDED device-resident hot-node feature cache
-(each worker holds the authoritative shard of ``hash(id) mod W``, probed
-by one all_to_all round before any owner fetch) threaded through the
-pipelined carry, synchronized training, checkpointing, a simulated worker
-FAILURE, rebalancing over survivors (the cache restarts cold — both row
-ownership AND the shard map ``hash(id) mod W`` moved), and resume from
+with tree reduction, a TIERED device-resident hot-node feature cache
+(a small replicated L1 holding the global Zipf head — probed with zero
+network — in front of the sharded L2 where each worker holds the
+authoritative shard of ``hash(id) mod W``, probed by one all_to_all round
+before any owner fetch) threaded through the pipelined carry, synchronized
+training, checkpointing, a simulated worker FAILURE, rebalancing over
+survivors (the cache restarts cold — row ownership, the shard map
+``hash(id) mod W``, AND the promoted L1 head all moved), and resume from
 checkpoint.
 
     python examples/distributed_pipeline.py        (sets its own XLA_FLAGS)
@@ -39,8 +41,11 @@ from repro.train.optimizer import adam_update, init_adam  # noqa: E402
 
 N, DIM, CLASSES, B = 20_000, 64, 8, 16
 FANOUTS = (8, 4)
-# sharded 2-way cache: 8 workers x 1024 rows = 8192 distinct cached rows
-CACHE = CacheConfig(n_rows=1024, admit=2, assoc=2, mode="sharded")
+# tiered 2-way cache: 8 workers x 1024 L2 rows = 8192 distinct sharded
+# rows, plus a 128-row replicated L1 per worker serving the global head
+# without even the probe round (rows promoted after 2 observations)
+CACHE = CacheConfig(n_rows=1024, admit=2, assoc=2, mode="tiered",
+                    l1_rows=128, l1_promote=2)
 ckpt_dir = tempfile.mkdtemp(prefix="graphgen_ckpt_")
 
 

@@ -50,7 +50,8 @@ def smoke_config(cfg: ModelConfig) -> ModelConfig:
         small = ((4, 3) + (2,) * depth)[:depth]
         return dataclasses.replace(cfg, gcn_in_dim=16, gcn_hidden=32, n_classes=5,
                                    fanouts=small,
-                                   cache_rows=min(cfg.cache_rows, 256))
+                                   cache_rows=min(cfg.cache_rows, 256),
+                                   cache_l1_rows=min(cfg.cache_l1_rows, 32))
     hd = 16
     heads = max(cfg.n_heads // 4, 2) if cfg.n_heads else 0
     kv = max(cfg.n_kv_heads // 4, 1) if cfg.n_kv_heads else 0

@@ -6,6 +6,10 @@ from ..core.config import ModelConfig
 CONFIG = ModelConfig(
     name="graphgen-gcn-deep", family="gcn",
     gcn_in_dim=128, gcn_hidden=256, n_classes=64, fanouts=(15, 10, 5),
-    # deep trees revisit the hot head at every level -> paper-cell cache
-    cache_rows=4096, cache_admit=2, cache_assoc=4, cache_mode="sharded",
+    # deep trees revisit the hot head at EVERY level, so the global head
+    # is the hottest of any workload here -> tiered cache: a 512-row
+    # replicated L1 serves it with zero probe-round traffic in front of
+    # the 4096-row sharded L2 (promotion after 3 observations)
+    cache_rows=4096, cache_admit=2, cache_assoc=4, cache_mode="tiered",
+    cache_l1_rows=512, cache_l1_promote=3,
 )

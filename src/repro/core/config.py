@@ -15,7 +15,7 @@ from typing import Optional, Tuple
 #: placement modes — defined HERE (jax-free) so ModelConfig validation and
 #: core/feature_cache.py (which imports jax) share one source of truth
 VALID_CACHE_ASSOC = (1, 2, 4)
-VALID_CACHE_MODES = ("replicated", "sharded")
+VALID_CACHE_MODES = ("replicated", "sharded", "tiered")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,7 +79,20 @@ class ModelConfig:
                                # default); "sharded": the cache id-space
                                # partitions across workers and misses are
                                # first routed to their cache-shard holder
-                               # (effective capacity x W)
+                               # (effective capacity x W); "tiered": a
+                               # small replicated L1 (the global Zipf head,
+                               # probed with zero network traffic) in front
+                               # of the sharded L2 — L1 misses take the
+                               # shard-probe round, shard misses fall
+                               # through to the owner fetch
+    cache_l1_rows: int = 0     # tiered mode: replicated L1 slots per worker
+                               # (rounded UP to a power of two; 0 = auto,
+                               # cache_rows // 8 — the "~1/8 head" default)
+    cache_l1_promote: int = 3  # tiered mode: times the L2 tier must serve
+                               # a row to this worker before the row is
+                               # promoted into its L1 — the frequency
+                               # threshold that migrates the hottest rows
+                               # to every worker without a broadcast
     capacity_slack: Optional[float] = None
                                # per-destination shuffle capacity slack;
                                # None = launcher auto-sizes from n_dropped
@@ -112,6 +125,21 @@ class ModelConfig:
             raise ValueError(
                 f"cache_mode must be one of {VALID_CACHE_MODES}, "
                 f"got {self.cache_mode!r}")
+        if self.cache_l1_rows < 0:
+            raise ValueError(
+                f"cache_l1_rows must be >= 0, got {self.cache_l1_rows}")
+        if self.cache_l1_rows and self.cache_l1_rows & (self.cache_l1_rows - 1):
+            object.__setattr__(self, "cache_l1_rows",
+                               1 << self.cache_l1_rows.bit_length())
+        if self.cache_l1_promote < 1:
+            raise ValueError(
+                f"cache_l1_promote must be >= 1, got {self.cache_l1_promote}")
+        # deliberately NO cross-field mode check here: launchers override
+        # one field at a time with dataclasses.replace, so a tiered arch
+        # config being switched to --cache-mode sharded must not trip over
+        # its (now ignored) cache_l1_rows — CacheConfig.from_model simply
+        # drops the L1 knobs outside tiered mode, and the strict check
+        # lives in CacheConfig.validated() where the policy is final
 
     @property
     def resolved_head_dim(self) -> int:

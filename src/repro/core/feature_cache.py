@@ -27,7 +27,7 @@ shuffle (``generation.fetch_rows``):
            ways first), so the most-contended candidates keep their
            progress toward admission.
 
-Two placement modes (``CacheConfig.mode``):
+Three placement modes (``CacheConfig.mode``):
 
   "replicated" — the PR 2 behavior: every worker caches its OWN request
            stream; total distinct capacity stays ~C no matter how many
@@ -42,6 +42,22 @@ Two placement modes (``CacheConfig.mode``):
            in-cache set indices stay independent (with a shared mixer,
            the ids landing on one shard would collapse onto a fraction
            of its sets).
+  "tiered" — hierarchical composition of the two: a SMALL replicated L1
+           (``l1_rows`` slots, direct-mapped or 2-way — the global Zipf
+           head) sits in front of the sharded L2 (``n_rows`` slots per
+           worker).  The L1 probe is local — a hit costs ZERO network,
+           not even the shard-probe round a sharded hit pays — and only
+           L1 misses enter the probe round, so the probe round's wire
+           bytes shrink by the L1 hit fraction.  Rows migrate L2 -> L1
+           by frequency: every row the L2 tier SERVES a worker is
+           OFFERED to that worker's local L1 and installs only after
+           ``l1_promote`` observations — the hottest rows therefore
+           reach every worker's L1 without any broadcast, because every
+           worker keeps observing them (owner-fetched rows are not
+           offered: they missed both tiers, and the cold tail must not
+           churn the small L1's admission tags).  The tiered state is
+           the ``TieredCache`` pytree ``(l1, l2)`` of two
+           ``FeatureCache``s.
 
 The cache is **per-worker state**: every worker keeps its own [C] keys +
 [C, D] rows, threaded *functionally* through the generation step
@@ -83,14 +99,42 @@ class CacheConfig(NamedTuple):
     jit — THE single source of cache policy, built once from
     ``ModelConfig`` (``CacheConfig.from_model``) and threaded through
     ``fetch_rows`` / ``_worker_generate`` / the launchers."""
-    n_rows: int          # total cache slots, power of two (0 disables)
+    n_rows: int          # main-tier cache slots (the L2 in tiered mode),
+                         # power of two (0 disables)
     admit: int = 2       # misses at a set before a candidate is installed
     assoc: int = 1       # ways per set (1 = direct-mapped), in VALID_ASSOC
-    mode: str = "replicated"   # "replicated" | "sharded" (see module doc)
+    mode: str = "replicated"   # "replicated" | "sharded" | "tiered"
+                               # (see module doc)
+    l1_rows: int = 0     # tiered mode only: replicated L1 slots per
+                         # worker, power of two (the global Zipf head —
+                         # total device rows become l1_rows + n_rows)
+    l1_promote: int = 3  # tiered mode only: observations of a row before
+                         # it is promoted into this worker's L1
 
     @property
     def n_sets(self) -> int:
         return self.n_rows // self.assoc
+
+    @property
+    def l1_assoc(self) -> int:
+        """L1 ways per set: direct-mapped, or 2-way when the L2 is
+        set-associative (a tiny head cache gains nothing from 4 ways —
+        it holds far fewer distinct ids than its set count collides)."""
+        return 1 if self.assoc == 1 else 2
+
+    def l1_config(self) -> "CacheConfig":
+        """The L1 tier as a standalone replicated policy: the probe/insert
+        state machine is tier-agnostic, so the L1 reuses it verbatim with
+        ``l1_promote`` as the admission threshold (promotion IS frequency
+        admission — a row installs after ``l1_promote`` observations)."""
+        return CacheConfig(n_rows=self.l1_rows, admit=self.l1_promote,
+                           assoc=self.l1_assoc, mode="replicated")
+
+    def l2_config(self) -> "CacheConfig":
+        """The L2 tier as a standalone sharded policy (the pre-tiered
+        sharded cache, unchanged)."""
+        return CacheConfig(n_rows=self.n_rows, admit=self.admit,
+                           assoc=self.assoc, mode="sharded")
 
     def validated(self) -> "CacheConfig":
         if self.n_rows <= 0:
@@ -107,15 +151,45 @@ class CacheConfig(NamedTuple):
         if self.mode not in VALID_MODES:
             raise ValueError(
                 f"cache mode must be one of {VALID_MODES}, got {self.mode!r}")
+        if self.mode == "tiered":
+            if self.l1_rows <= 0:
+                raise ValueError("tiered mode requires l1_rows > 0 "
+                                 f"(got {self.l1_rows})")
+            if self.l1_rows & (self.l1_rows - 1):
+                raise ValueError(f"l1_rows must be a power of two, "
+                                 f"got {self.l1_rows}")
+            if self.l1_rows > self.n_rows:
+                raise ValueError(
+                    f"l1_rows {self.l1_rows} exceeds the L2's n_rows "
+                    f"{self.n_rows} — the L1 is the SMALL head tier")
+            if self.l1_assoc > self.l1_rows:
+                raise ValueError(
+                    f"l1_rows {self.l1_rows} cannot hold {self.l1_assoc} ways")
+            if self.l1_promote < 1:
+                raise ValueError(
+                    f"l1_promote must be >= 1, got {self.l1_promote}")
+        elif self.l1_rows:
+            raise ValueError(
+                f"l1_rows is a tiered-mode knob; mode is {self.mode!r}")
         return self
 
     @classmethod
     def from_model(cls, cfg) -> Optional["CacheConfig"]:
-        """Policy from a ``ModelConfig`` (None when the cache is disabled)."""
+        """Policy from a ``ModelConfig`` (None when the cache is disabled).
+
+        In tiered mode ``cache_l1_rows == 0`` auto-sizes the L1 to
+        ``cache_rows // 8`` — the "small replicated head" default (floored
+        at the L1's way count so a tiny auto-sized L1 still validates);
+        outside tiered mode the L1 knobs are ignored entirely."""
         if cfg.cache_rows <= 0:
             return None
+        l1 = 0
+        if cfg.cache_mode == "tiered":
+            l1_assoc = 1 if cfg.cache_assoc == 1 else 2
+            l1 = cfg.cache_l1_rows or max(cfg.cache_rows // 8, l1_assoc)
         return cls(n_rows=cfg.cache_rows, admit=cfg.cache_admit,
-                   assoc=cfg.cache_assoc, mode=cfg.cache_mode).validated()
+                   assoc=cfg.cache_assoc, mode=cfg.cache_mode,
+                   l1_rows=l1, l1_promote=cfg.cache_l1_promote).validated()
 
 
 class FeatureCache(NamedTuple):
@@ -140,21 +214,46 @@ class FeatureCache(NamedTuple):
         return self.keys.shape[-1]
 
 
+class TieredCache(NamedTuple):
+    """Tiered-mode per-worker state: the ``(l1, l2)`` pytree.
+
+    ``l1`` is the small replicated head cache (``CacheConfig.l1_rows``
+    slots, layout ``l1_config()``); ``l2`` is the authoritative sharded
+    tier (``n_rows`` slots, layout ``l2_config()``).  Both are plain
+    ``FeatureCache`` states, so every probe/insert primitive applies
+    per tier unchanged."""
+    l1: FeatureCache
+    l2: FeatureCache
+
+
 class CacheStats(NamedTuple):
     """Telemetry from one cached fetch (per-worker scalars).
 
-    ``n_hits`` splits into ``n_local_hits`` (the requester's own shard —
-    or any hit in replicated mode — no wire crossing) and ``n_shard_hits``
-    (served by a REMOTE cache shard: the row crosses the wire from the
-    shard holder instead of the owner, so capacity multiplies by W but
-    wire bytes do not shrink).  ``bytes_saved`` therefore counts only the
-    local hits."""
+    The hit population splits three ways, disjointly:
+
+      ``n_l1_hits``    — served by the local replicated L1 (tiered mode):
+                         ZERO network, not even a probe round.
+      ``n_local_hits`` — served by THIS worker's main-tier cache (the
+                         requester's own shard, or any hit in replicated
+                         mode): no wire crossing.
+      ``n_shard_hits`` — served by a REMOTE cache shard: the row crosses
+                         the wire from the shard holder instead of the
+                         owner (capacity multiplies by W but wire bytes
+                         do not shrink).
+
+    ``n_hits == n_l1_hits + n_local_hits + n_shard_hits``, and with
+    ``n_misses`` (unique probes routed to their owner) the conservation
+    invariant ``n_l1_hits + n_local_hits + n_shard_hits + n_misses ==
+    n_unique`` holds for every mode.  ``bytes_saved`` counts only the
+    network-free populations (L1 + local)."""
     n_hits: jax.Array        # unique probes served from the cache tier
     n_misses: jax.Array      # unique probes routed to their owner
-    n_inserted: jax.Array    # rows admitted into THIS worker's shard
-    bytes_saved: jax.Array   # wire bytes the local hits did not cross
-    n_local_hits: jax.Array  # hits served without crossing the wire
+    n_inserted: jax.Array    # rows admitted into THIS worker's tiers
+    bytes_saved: jax.Array   # wire bytes the network-free hits did not cross
+    n_local_hits: jax.Array  # main-tier hits served without crossing the wire
     n_shard_hits: jax.Array  # hits served by a remote cache shard
+    n_l1_hits: jax.Array     # hits served by the replicated L1 (no probe
+                             # round either; 0 outside tiered mode)
 
 
 def hash_slots(ids: jax.Array, n_sets: int) -> jax.Array:
@@ -219,6 +318,31 @@ def cache_specs(n_rows: int, dim: int, n_workers: int = 1,
         tags=s((n_workers, n_rows), jnp.int32),
         counts=s((n_workers, n_rows), jnp.int32),
     )
+
+
+def init_cache_state(cfg: CacheConfig, dim: int, n_workers: int,
+                     dtype=np.float32):
+    """Mode-polymorphic [W, ...] initial cache state for a ``CacheConfig``.
+
+    THE constructor every component should use: replicated/sharded modes
+    get the flat ``FeatureCache`` stack, tiered mode gets the
+    ``TieredCache`` pytree ``(l1, l2)`` — callers never branch on the
+    mode themselves."""
+    if cfg.mode == "tiered":
+        return TieredCache(
+            l1=init_worker_caches(cfg.l1_rows, dim, n_workers, dtype),
+            l2=init_worker_caches(cfg.n_rows, dim, n_workers, dtype))
+    return init_worker_caches(cfg.n_rows, dim, n_workers, dtype)
+
+
+def cache_state_specs(cfg: CacheConfig, dim: int, n_workers: int = 1,
+                      dtype=jnp.float32):
+    """Mode-polymorphic ShapeDtypeStruct stand-ins (dry-run input)."""
+    if cfg.mode == "tiered":
+        return TieredCache(
+            l1=cache_specs(cfg.l1_rows, dim, n_workers, dtype),
+            l2=cache_specs(cfg.n_rows, dim, n_workers, dtype))
+    return cache_specs(cfg.n_rows, dim, n_workers, dtype)
 
 
 #: probe implementation every cached fetch uses when the caller does not
@@ -314,6 +438,10 @@ def cache_insert(
     a, admit = cfg.assoc, cfg.admit
     c = cache.n_rows
     r = ids.shape[0]
+    if r == 0:
+        # empty offer batch: the rank machinery below concatenates a
+        # length-1 group-start marker, which has no length-0 analogue
+        return cache, jnp.int32(0)
     sets = hash_slots(ids, cfg.n_sets)
     slots = sets[:, None] * a + jnp.arange(a, dtype=jnp.int32)[None, :]
     keys_w = cache.keys[slots]                              # [R, A]
@@ -389,11 +517,85 @@ def cache_insert(
     return new, jnp.sum(install).astype(jnp.int32)
 
 
-def squeeze_worker_axis(cache: FeatureCache) -> FeatureCache:
-    """[1, ...] shard_map block -> per-worker [...] state."""
+def _keys_leaf(cache) -> jax.Array:
+    """The representative keys array of either state form (tiered -> L1)."""
+    return (cache.l1.keys if isinstance(cache, TieredCache) else cache.keys)
+
+
+def squeeze_worker_axis(cache):
+    """[1, ...] shard_map block -> per-worker [...] state.
+
+    The shape contract is explicit: the input must be a STACKED block
+    whose leading worker axis has size 1 (``keys`` is [1, C]).  An
+    already-squeezed state used to be accepted silently — ``a[0]`` on a
+    per-worker [C] keys array returns its first SCALAR, corrupting every
+    downstream probe — so both violations now raise at trace time."""
+    keys = _keys_leaf(cache)
+    if keys.ndim != 2:
+        raise ValueError(
+            f"squeeze_worker_axis expects a [1, ...] stacked block "
+            f"(keys ndim 2), got keys shape {tuple(keys.shape)} — "
+            f"is this state already squeezed?")
+    if keys.shape[0] != 1:
+        raise ValueError(
+            f"squeeze_worker_axis expects the shard_map block's worker "
+            f"axis of size 1, got leading axis {keys.shape[0]}")
     return jax.tree.map(lambda a: a[0], cache)
 
 
-def restore_worker_axis(cache: FeatureCache) -> FeatureCache:
-    """Per-worker [...] state -> [1, ...] shard_map block."""
+def restore_worker_axis(cache):
+    """Per-worker [...] state -> [1, ...] shard_map block.
+
+    Inverse of ``squeeze_worker_axis`` and equally strict: the input
+    must be the PER-WORKER form (``keys`` is [C]); restoring an already
+    stacked state would silently grow a bogus axis."""
+    keys = _keys_leaf(cache)
+    if keys.ndim != 1:
+        raise ValueError(
+            f"restore_worker_axis expects per-worker state (keys ndim 1), "
+            f"got keys shape {tuple(keys.shape)} — is this state already "
+            f"stacked?")
     return jax.tree.map(lambda a: a[None], cache)
+
+
+def tiered_probe(
+    state: TieredCache,
+    ids: jax.Array,
+    valid: Optional[jax.Array] = None,
+    *,
+    cfg: CacheConfig,
+    impl: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Local two-tier probe: ``(l1_hit [R], l2_hit [R], rows [R, D])``.
+
+    Both tiers of THIS worker's state are probed in one pass — the
+    single-worker degenerate of tiered mode (W == 1 owns every shard) and
+    the building block the fused Pallas kernel implements.  ``l1_hit``
+    and ``l2_hit`` are disjoint (L1 takes priority); ``rows`` carries the
+    serving tier's copy, zeros where both miss."""
+    if cfg.mode != "tiered":
+        raise ValueError(f"tiered_probe requires mode='tiered', "
+                         f"got {cfg.mode!r}")
+    if cfg.l1_rows != state.l1.n_rows or cfg.n_rows != state.l2.n_rows:
+        raise ValueError(
+            f"cfg tiers ({cfg.l1_rows}, {cfg.n_rows}) != state tiers "
+            f"({state.l1.n_rows}, {state.l2.n_rows}): probing under a "
+            f"mismatched layout silently loses residents")
+    if (impl or _PROBE_IMPL) == "pallas":
+        from ..kernels.ops import cache_probe_tiered
+        src, rows = cache_probe_tiered(
+            state.l1.keys, state.l1.rows, state.l2.keys, state.l2.rows,
+            ids, l1_assoc=cfg.l1_assoc, l2_assoc=cfg.assoc, use_kernel=True)
+        l1_hit = src == 1
+        l2_hit = src == 2
+    else:
+        l1_hit, r1 = cache_probe(state.l1, ids, cfg=cfg.l1_config())
+        l2_raw, r2 = cache_probe(state.l2, ids, cfg=cfg.l2_config())
+        l2_hit = jnp.logical_and(l2_raw, ~l1_hit)
+        rows = jnp.where(l1_hit[:, None], r1,
+                         jnp.where(l2_hit[:, None], r2, 0))
+    if valid is not None:
+        l1_hit = jnp.logical_and(l1_hit, valid)
+        l2_hit = jnp.logical_and(l2_hit, valid)
+        rows = jnp.where(jnp.logical_or(l1_hit, l2_hit)[:, None], rows, 0)
+    return l1_hit, l2_hit, rows

@@ -51,30 +51,43 @@ trees driven by ``fanouts = (k_1, ..., k_L)``:
                               hits/misses surface as
                               ``SubgraphBatch.n_cache_hits/n_cache_misses``.
 
-**Two-stage cache-aware routing** (``CacheConfig.mode == "sharded"``): the
+**Mode-polymorphic cache-aware routing** (``CacheConfig.mode``): the
 replicated cache caps total distinct capacity at ~C no matter how many
-workers join (every replica converges on the same Zipf head).  In sharded
-mode the cache id-space is partitioned over the worker axis — worker
-``shard_of(id, W)`` is the authoritative cache shard for ``id`` — and a
-missed id takes up to two routed rounds:
+workers join (every replica converges on the same Zipf head); sharded
+mode partitions the id-space over the worker axis (capacity x W); tiered
+mode composes both.  Each mode is a (probe, admit) strategy pair — the
+fetch path itself never branches on the mode.  The full three-stage
+tiered flow (the other modes run a subset of it):
 
-  stage 1 (shard probe)  — each deduplicated id is routed to its
-           *cache-shard* worker with one ``all_to_all`` probe round; the
-           shard holder probes its local ``FeatureCache`` and returns
-           (hit, row) — DistDGL-style "ask the worker whose CACHE holds a
-           hot row, not its owner".
+  stage 0 (L1 probe)     — every deduplicated id is probed against the
+           LOCAL replicated L1 (the global Zipf head, ``l1_rows`` slots).
+           An L1 hit costs zero network — it skips the probe round AND
+           the owner fetch.  [tiered only]
+  stage 1 (shard probe)  — the remaining ids are routed to their
+           *cache-shard* worker (``shard_of(id, W)``) with one
+           ``all_to_all`` probe round; the shard holder probes its local
+           tier and returns (hit, row) — DistDGL-style "ask the worker
+           whose CACHE holds a hot row, not its owner".  In tiered mode
+           the round carries only L1 *misses*, so its wire bytes shrink
+           by the L1 hit fraction.  [sharded + tiered]
   stage 2 (owner fetch)  — only shard-*misses* fall through to the routed
            owner fetch; the served rows then ride one more ``all_to_all``
            back to the shard holders (reusing the probe round's slot
            assignment) so admission updates the AUTHORITATIVE shard, not a
-           local replica.
+           local replica.  In tiered mode every row the L2 tier SERVED the
+           requester this round is also OFFERED to its local L1, which
+           installs it after ``l1_promote`` observations — the hottest
+           rows migrate L2 -> L1 on every worker without any broadcast
+           (owner-fetched rows are not offered: the cold tail must not
+           churn the small L1's admission tags).  [all modes; replicated
+           probes/admits locally]
 
-Effective capacity multiplies by W; a shard hit's row still crosses the
-wire (shard holder -> requester instead of owner -> requester), so
-``CacheStats`` splits ``n_local_hits`` (no crossing) from ``n_shard_hits``
-and ``bytes_saved`` counts only the former.  Sharded fetches stay
-bit-identical to uncached fetches — cached rows are verbatim table copies
-wherever they live.
+A shard hit's row still crosses the wire (shard holder -> requester
+instead of owner -> requester), so ``CacheStats`` splits the hits into
+``n_l1_hits`` (zero network) / ``n_local_hits`` (own shard, no crossing) /
+``n_shard_hits`` (remote shard) and ``bytes_saved`` counts only the first
+two.  Cached fetches stay bit-identical to uncached fetches in every mode
+— cached rows are verbatim table copies wherever they live.
 
 Edges sampled for several seeds are *replicated* into each seed's subgraph
 (paper step 3), which falls out of sampling per frontier slot.
@@ -93,9 +106,9 @@ from jax.experimental.shard_map import shard_map
 
 from ..graph.subgraph import SubgraphBatch
 from .feature_cache import (CacheConfig, CacheStats, FeatureCache,
-                            cache_insert, cache_probe, init_worker_caches,
-                            restore_worker_axis, shard_of,
-                            squeeze_worker_axis)
+                            TieredCache, cache_insert, cache_probe,
+                            init_cache_state, restore_worker_axis, shard_of,
+                            squeeze_worker_axis, tiered_probe)
 from .partition import PartitionedGraph
 from .tree_reduce import axis_size, tree_allreduce, tree_reduce_scatter
 
@@ -161,6 +174,11 @@ def dedup_requests(ids: jax.Array):
     slot (``uniq[inverse] == ids``), and ``valid[i] = i < n_unique``.
     """
     r = ids.shape[0]
+    if r == 0:
+        # the group-start marker below concatenates a length-1 sentinel,
+        # which has no length-0 analogue — an empty batch has no uniques
+        return (ids, jnp.zeros((0,), jnp.int32),
+                jnp.zeros((0,), jnp.bool_), jnp.int32(0))
     order = jnp.argsort(ids)
     s = ids[order]
     is_first = jnp.concatenate(
@@ -320,6 +338,119 @@ def _shard_admit(
     return cache_insert(cache, ids_f, recv_rows.reshape(-1, d), offer, cfg)
 
 
+class _TierProbe(NamedTuple):
+    """What a cache-mode strategy's probe stage hands back to ``fetch_rows``.
+
+    ``l1_hit``/``local``/(``hit`` minus both) are the disjoint hit
+    populations ``CacheStats`` reports; ``ctx`` is mode-private state the
+    matching admit stage consumes (e.g. the shard-probe ``_RoutePlan``)."""
+    hit: jax.Array       # [R] served by ANY cache tier
+    rows: jax.Array      # [R, D] the serving tier's row copies
+    l1_hit: jax.Array    # [R] subset served by the replicated L1 (tiered)
+    local: jax.Array     # [R] subset served by THIS worker's main tier
+    ctx: tuple           # opaque probe context for the admit stage
+
+
+def _zeros_like_hits(ids):
+    return jnp.zeros(ids.shape, jnp.bool_)
+
+
+class _ReplicatedTier:
+    """mode="replicated": local probe, local admission."""
+
+    @staticmethod
+    def probe(cache, cfg, ids, valid, axis_name, cap, w):
+        hit, rows = cache_probe(cache, ids, valid, cfg=cfg)
+        return _TierProbe(hit, rows, _zeros_like_hits(ids), hit, ())
+
+    @staticmethod
+    def admit(cache, cfg, probe, ids, fetched, should, axis_name, w):
+        return cache_insert(cache, ids, fetched, should, cfg)
+
+
+class _ShardedTier:
+    """mode="sharded": one probe round to the shard holders, admission
+    routed back on the same plan.  W == 1 degenerates to the replicated
+    behavior (the single worker owns every shard)."""
+
+    @staticmethod
+    def probe(cache, cfg, ids, valid, axis_name, cap, w):
+        if w == 1:
+            hit, rows = cache_probe(cache, ids, valid, cfg=cfg)
+            return _TierProbe(hit, rows, _zeros_like_hits(ids), hit, ())
+        hit, rows, plan, recv = _shard_probe(cache, cfg, ids, valid,
+                                             axis_name, cap, w)
+        local = jnp.logical_and(hit,
+                                shard_of(ids, w) == lax.axis_index(axis_name))
+        return _TierProbe(hit, rows, _zeros_like_hits(ids), local,
+                          (plan, recv))
+
+    @staticmethod
+    def admit(cache, cfg, probe, ids, fetched, should, axis_name, w):
+        if w == 1:
+            return cache_insert(cache, ids, fetched, should, cfg)
+        plan, recv = probe.ctx
+        return _shard_admit(cache, cfg, plan, recv, fetched, should,
+                            axis_name, w)
+
+
+class _TieredTier:
+    """mode="tiered": the three-stage composition — local L1 probe, shard
+    probe (L2) for the L1 misses, owner fetch for the rest; admission
+    updates the authoritative L2 shard AND offers the L2-served rows to
+    the requester's L1 (installed after ``l1_promote`` observations)."""
+
+    @staticmethod
+    def probe(cache, cfg, ids, valid, axis_name, cap, w):
+        if w == 1:
+            # single worker owns both tiers: the fused local probe (the
+            # two-tier Pallas kernel when set_probe_impl('pallas'))
+            l1_hit, l2_hit, rows = tiered_probe(cache, ids, valid, cfg=cfg)
+            return _TierProbe(jnp.logical_or(l1_hit, l2_hit), rows,
+                              l1_hit, l2_hit, (None, None, l2_hit))
+        l1_hit, l1_rows = cache_probe(cache.l1, ids, valid,
+                                      cfg=cfg.l1_config())
+        # only L1 misses enter the probe round — the wire-byte win
+        l2_valid = jnp.logical_and(valid, ~l1_hit)
+        l2_hit, l2_rows, plan, recv = _shard_probe(
+            cache.l2, cfg.l2_config(), ids, l2_valid, axis_name, cap, w)
+        rows = jnp.where(l1_hit[:, None], l1_rows, l2_rows)
+        local = jnp.logical_and(
+            l2_hit, shard_of(ids, w) == lax.axis_index(axis_name))
+        return _TierProbe(jnp.logical_or(l1_hit, l2_hit), rows, l1_hit,
+                          local, (plan, recv, l2_hit))
+
+    @staticmethod
+    def admit(cache, cfg, probe, ids, fetched, should, axis_name, w):
+        plan, recv, l2_hit = probe.ctx
+        if w == 1:
+            new_l2, n_l2 = cache_insert(cache.l2, ids, fetched, should,
+                                        cfg.l2_config())
+        else:
+            new_l2, n_l2 = _shard_admit(cache.l2, cfg.l2_config(), plan,
+                                        recv, fetched, should, axis_name, w)
+        # L1 promotion is strictly L2 -> L1: only rows the L2 tier SERVED
+        # this round (verbatim table copies that already survived the L2's
+        # frequency admission — the proven-hot population) are offered to
+        # the local L1, installing after l1_promote observations.  Owner-
+        # fetched rows are deliberately NOT offered: they missed both
+        # tiers, so letting them compete would churn the small L1's
+        # admission tags with exactly the cold tail the threshold exists
+        # to keep out.
+        new_l1, n_l1 = cache_insert(cache.l1, ids, probe.rows, l2_hit,
+                                    cfg.l1_config())
+        return TieredCache(l1=new_l1, l2=new_l2), n_l2 + n_l1
+
+
+#: mode -> (probe, admit) strategy — the SINGLE dispatch point; components
+#: downstream of it (stats, routing, admission plumbing) are mode-agnostic
+_CACHE_TIERS = {
+    "replicated": _ReplicatedTier,
+    "sharded": _ShardedTier,
+    "tiered": _TieredTier,
+}
+
+
 def fetch_rows(
     table_local: jax.Array,
     ids: jax.Array,
@@ -346,20 +477,20 @@ def fetch_rows(
     destination's ``rows``, the default capacity is clamped to ``rows``
     (shrinking the static exchange buffers).
 
-    With ``cache`` (a per-worker ``FeatureCache``; requires dedup AND
-    ``cache_cfg`` — the ``CacheConfig`` the state was populated under,
-    since the slot layout is a property of the state) the distinct ids are
-    first probed against the device-resident hot-node cache tier.
-    In **replicated** mode the
-    probe is local; in **sharded** mode (W > 1) the probe is the two-stage
-    routing described in the module docstring: ids first ride one
-    all_to_all round to their cache-shard workers, shard-misses fall
-    through to the owner fetch, and served misses ride back to the shard
-    holders for admission.  Either way only the cache-tier **misses**
-    enter the owner all_to_all, the returned rows are bit-identical to
-    the uncached path (cached rows are verbatim table copies), the return
-    value becomes ``(out, new_cache, FetchStats, CacheStats)``, and
-    ``n_unique`` counts only the ids that went to their owner.
+    With ``cache`` (a per-worker ``FeatureCache``/``TieredCache``; requires
+    dedup AND ``cache_cfg`` — the ``CacheConfig`` the state was populated
+    under, since the slot layout is a property of the state) the distinct
+    ids are first probed against the device-resident hot-node cache tier,
+    through the mode's (probe, admit) strategy pair (``_CACHE_TIERS``):
+    **replicated** probes locally; **sharded** (W > 1) rides one all_to_all
+    probe round to the cache-shard workers; **tiered** probes the local
+    replicated L1 first (zero network) and sends only L1 misses on the
+    probe round — the three-stage flow in the module docstring.  In every
+    mode only the cache-tier **misses** enter the owner all_to_all, the
+    returned rows are bit-identical to the uncached path (cached rows are
+    verbatim table copies), the return value becomes
+    ``(out, new_cache, FetchStats, CacheStats)``, and ``n_unique`` counts
+    only the ids that went to their owner.
 
     Per-destination OWNER capacity defaults to ``ceil(R/W) * slack``
     (clamped as above when dedup is on); pass an explicit ``capacity`` —
@@ -389,6 +520,18 @@ def fetch_rows(
     w = axis_size(axis_name)
     rows = table_local.shape[0]
     r = ids.shape[0]
+    if r == 0:
+        # empty request batch: nothing to route (uniform across workers —
+        # the request shape is static — so skipping the collectives is
+        # safe); counters are all zero by conservation
+        out = jnp.zeros((0, table_local.shape[1]), table_local.dtype)
+        stats = FetchStats(jnp.int32(0), jnp.int32(0), jnp.int32(0))
+        if cache is not None:
+            z = jnp.int32(0)
+            return out, cache, stats, CacheStats(z, z, z, z, z, z, z)
+        if return_stats:
+            return out, stats
+        return out
     if w == 1 and cache is None:
         out = table_local[jnp.clip(ids, 0, rows - 1)]
         if return_stats:
@@ -413,20 +556,21 @@ def fetch_rows(
         req_ids, inverse = ids, None
         req_valid = jnp.ones((r,), jnp.bool_)
         n_unique = jnp.int32(r)
-    sharded = (cache is not None and cache_cfg.mode == "sharded" and w > 1)
     # --- cache probe: hits never reach the owner fetch -------------------
-    probe_plan = probe_recv = None
+    # the mode's (probe, admit) strategy pair is the only mode dispatch —
+    # routing, admission plumbing, and stats below are mode-agnostic
+    tier = None
     if cache is not None:
-        if sharded:
-            hit, hit_rows, probe_plan, probe_recv = _shard_probe(
-                cache, cache_cfg, req_ids, req_valid, axis_name,
-                slack_cap, w)
-        else:
-            hit, hit_rows = cache_probe(cache, req_ids, req_valid,
-                                        cfg=cache_cfg)
-        route_valid = jnp.logical_and(req_valid, ~hit)
+        if cache_cfg.mode not in _CACHE_TIERS:
+            raise ValueError(f"unknown cache mode {cache_cfg.mode!r}; "
+                             f"expected one of {sorted(_CACHE_TIERS)}")
+        tier = _CACHE_TIERS[cache_cfg.mode]
+    if tier is not None:
+        probe = tier.probe(cache, cache_cfg, req_ids, req_valid,
+                           axis_name, slack_cap, w)
+        route_valid = jnp.logical_and(req_valid, ~probe.hit)
     else:
-        hit = jnp.zeros(req_ids.shape, jnp.bool_)
+        probe = None
         route_valid = req_valid
     # --- route the (remaining) requests to their owners ------------------
     if w == 1:
@@ -440,26 +584,20 @@ def fetch_rows(
     # --- merge hits back, offer served misses for admission --------------
     new_cache = None
     cstats = None
-    if cache is not None:
-        out_u = jnp.where(hit[:, None], hit_rows, fetched)
-        served_u = jnp.logical_or(hit, served_r)
+    if tier is not None:
+        out_u = jnp.where(probe.hit[:, None], probe.rows, fetched)
+        served_u = jnp.logical_or(probe.hit, served_r)
         should = jnp.logical_and(route_valid, served_r)
-        if sharded:
-            new_cache, n_ins = _shard_admit(
-                cache, cache_cfg, probe_plan, probe_recv, fetched, should,
-                axis_name, w)
-            local = shard_of(req_ids, w) == lax.axis_index(axis_name)
-            n_local = jnp.sum(jnp.logical_and(hit, local)).astype(jnp.int32)
-        else:
-            new_cache, n_ins = cache_insert(cache, req_ids, fetched,
-                                            should, cache_cfg)
-            n_local = jnp.sum(hit).astype(jnp.int32)
-        n_hits = jnp.sum(hit).astype(jnp.int32)
+        new_cache, n_ins = tier.admit(cache, cache_cfg, probe, req_ids,
+                                      fetched, should, axis_name, w)
+        n_hits = jnp.sum(probe.hit).astype(jnp.int32)
+        n_l1 = jnp.sum(probe.l1_hit).astype(jnp.int32)
+        n_local = jnp.sum(probe.local).astype(jnp.int32)
         row_bytes = table_local.shape[1] * jnp.dtype(table_local.dtype).itemsize
         cstats = CacheStats(
             n_hits=n_hits, n_misses=n_routed, n_inserted=n_ins,
-            bytes_saved=n_local * row_bytes, n_local_hits=n_local,
-            n_shard_hits=n_hits - n_local)
+            bytes_saved=(n_l1 + n_local) * row_bytes, n_local_hits=n_local,
+            n_shard_hits=n_hits - n_l1 - n_local, n_l1_hits=n_l1)
         n_unique = n_routed          # ids that went to their owner
     else:
         out_u, served_u = fetched, served_r
@@ -632,9 +770,11 @@ def make_generator_fn(
     With a ``cache_cfg`` (a ``CacheConfig`` with ``n_rows > 0``) the
     generator becomes stateful-by-threading:
     ``gen_fn(device_args, seeds, rng, cache) -> (SubgraphBatch, cache)``
-    where ``cache`` is a [W, ...] ``FeatureCache`` pytree sharded
-    ``P(axis_name)`` on its leading axis — one replica per worker in
-    replicated mode, one authoritative shard per worker in sharded mode.
+    where ``cache`` is a [W, ...] cache-state pytree (``FeatureCache``,
+    or ``TieredCache`` in tiered mode) sharded ``P(axis_name)`` on its
+    leading axis — one replica per worker in replicated mode, one
+    authoritative shard per worker in sharded mode, and both at once
+    (L1 replica + L2 shard) in tiered mode.
     ``fetch_capacity`` (optional) pins the per-destination owner-exchange
     capacity; the warm re-calibration hook uses it to shrink the static
     all_to_all buffers to the steady-state cache-miss count."""
@@ -728,6 +868,6 @@ def make_distributed_generator(
     )
     if cache_cfg is not None and cache_cfg.n_rows > 0:
         cache0 = jax.device_put(
-            init_worker_caches(cache_cfg.n_rows, x.shape[1], w), spec)
+            init_cache_state(cache_cfg.validated(), x.shape[1], w), spec)
         return jax.jit(gen_fn), device_args, cache0
     return jax.jit(gen_fn), device_args

@@ -40,7 +40,7 @@ def make_pipelined_step(
     stateful form ``gen_fn(device_args, seeds, rng, cache) -> (batch,
     cache)``; the cache rides across iterations in device memory exactly
     like optimizer state.  The carry shape is identical for replicated and
-    sharded cache placement (both are a [W, ...] ``FeatureCache`` pytree
+    sharded/tiered cache placement (all are a [W, ...] cache-state pytree
     sharded on the worker axis — only the MEANING of worker ``i``'s block
     changes: its own replica vs the authoritative shard of
     ``shard_of(id, W) == i``), so the pipelined step needs no mode switch.

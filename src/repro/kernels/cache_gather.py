@@ -21,6 +21,13 @@ the full [C] key vector — the gather never touches HBM, which is the point
 of the cache tier.  Grid: (R blocks, D blocks); the hit vector is written
 once per D block (identical values, same revisiting pattern the other
 kernels in this package use).
+
+``cache_probe_tiered_pallas`` is the hierarchical sibling: ONE kernel
+probes the small replicated L1 and this worker's L2 block in the same
+VMEM residency (tiered mode's single-worker degenerate and the shard
+holder's local two-tier probe).  L1 takes priority; the source vector
+reports which tier served each id (0 = miss, 1 = L1, 2 = L2) so the
+caller can split the telemetry without a second pass.
 """
 from __future__ import annotations
 
@@ -34,17 +41,27 @@ from jax.experimental import pallas as pl
 from ..core.feature_cache import _HASH_K, VALID_ASSOC
 
 
+def _shift_for(n_sets: int) -> int:
+    """Hash shift for a power-of-two set count; 32 signals the degenerate
+    single-set cache (a literal 32-bit shift would be out of range for
+    uint32 — ``_sets_of`` short-circuits to set 0 instead, mirroring
+    feature_cache.hash_slots).  Shared by both probe kernels so their
+    hashes cannot silently diverge."""
+    return 32 if n_sets == 1 else 32 - (int(n_sets).bit_length() - 1)
+
+
+def _sets_of(ids, shift: int):
+    """Set index of each id inside a kernel body (static ``shift``)."""
+    if shift >= 32:
+        return jnp.zeros(ids.shape, jnp.int32)
+    h = ids.astype(jnp.uint32) * jnp.uint32(_HASH_K)
+    return jax.lax.shift_right_logical(h, jnp.uint32(shift)).astype(jnp.int32)
+
+
 def _probe_gather_kernel(keys_ref, rows_ref, ids_ref, hit_ref, out_ref,
                          *, shift: int, assoc: int):
     ids = ids_ref[...]                              # [br] int32
-    if shift >= 32:
-        # single-set cache: a 32-bit shift on uint32 is out of range —
-        # every id lives in set 0 (mirrors feature_cache.hash_slots)
-        sets = jnp.zeros(ids.shape, jnp.int32)
-    else:
-        h = ids.astype(jnp.uint32) * jnp.uint32(_HASH_K)
-        sets = jax.lax.shift_right_logical(
-            h, jnp.uint32(shift)).astype(jnp.int32)
+    sets = _sets_of(ids, shift)
     keys = keys_ref[...]
     rows = rows_ref[...]
     hit = jnp.zeros(ids.shape, jnp.bool_)
@@ -84,9 +101,7 @@ def cache_probe_gather_pallas(
     r = ids.shape[0]
     d = rows.shape[1]
     br, bd = min(block_r, r), min(block_d, d)
-    # 32 signals the degenerate single-set cache to the kernel (a literal
-    # 32-bit shift would be out of range for uint32)
-    shift = 32 if n_sets == 1 else 32 - (int(n_sets).bit_length() - 1)
+    shift = _shift_for(n_sets)
     grid = (pl.cdiv(r, br), pl.cdiv(d, bd))
     return pl.pallas_call(
         functools.partial(_probe_gather_kernel, shift=shift, assoc=assoc),
@@ -106,3 +121,89 @@ def cache_probe_gather_pallas(
         ],
         interpret=interpret,
     )(keys, rows, ids)
+
+
+def _probe_tiered_kernel(l1k_ref, l1r_ref, l2k_ref, l2r_ref, ids_ref,
+                         src_ref, out_ref, *, shift1: int, shift2: int,
+                         l1_assoc: int, l2_assoc: int):
+    ids = ids_ref[...]                              # [br] int32
+    sets1 = _sets_of(ids, shift1)
+    sets2 = _sets_of(ids, shift2)
+    src = jnp.zeros(ids.shape, jnp.int32)
+    out = jnp.zeros(ids.shape + (l1r_ref.shape[1],), out_ref.dtype)
+    # L2 first, then L1 overwrites — L1 takes priority on a double hit
+    l2k = l2k_ref[...]
+    l2r = l2r_ref[...]
+    for j in range(l2_assoc):                       # static unrolled ways
+        slot = sets2 * l2_assoc + j
+        m = l2k[slot] == ids
+        out = jnp.where(m[:, None], l2r[slot].astype(out_ref.dtype), out)
+        src = jnp.where(m, jnp.int32(2), src)
+    l1k = l1k_ref[...]
+    l1r = l1r_ref[...]
+    for j in range(l1_assoc):
+        slot = sets1 * l1_assoc + j
+        m = l1k[slot] == ids
+        out = jnp.where(m[:, None], l1r[slot].astype(out_ref.dtype), out)
+        src = jnp.where(m, jnp.int32(1), src)
+    src_ref[...] = src
+    out_ref[...] = out
+
+
+def cache_probe_tiered_pallas(
+    l1_keys: jax.Array,  # [C1] int32 L1 resident id per slot (-1 = empty)
+    l1_rows: jax.Array,  # [C1, D] L1 resident feature rows
+    l2_keys: jax.Array,  # [C2] int32 L2 resident id per slot
+    l2_rows: jax.Array,  # [C2, D] L2 resident feature rows
+    ids: jax.Array,      # [R] int32 probe ids
+    *,
+    l1_assoc: int = 1,
+    l2_assoc: int = 1,
+    block_r: int = 256,
+    block_d: int = 128,
+    interpret: bool = True,
+):
+    """Fused two-tier probe: ``(src [R] int32, out [R, D])``.
+
+    ``src`` is 0 where both tiers miss, 1 where the L1 serves the id, 2
+    where (only) the L2 does; ``out`` carries the serving tier's row copy,
+    zeros on a miss.  Bit-identical to ``ref.cache_probe_tiered_ref`` and
+    to ``feature_cache.tiered_probe``'s jnp path.
+    """
+    c1, c2 = l1_keys.shape[0], l2_keys.shape[0]
+    for c, a, name in ((c1, l1_assoc, "l1"), (c2, l2_assoc, "l2")):
+        if c & (c - 1):
+            raise ValueError(f"{name} size must be a power of two, got {c}")
+        if a not in VALID_ASSOC or a > c:
+            raise ValueError(f"{name} assoc must be one of {VALID_ASSOC} "
+                             f"and <= {c}, got {a}")
+    if l1_rows.shape[1] != l2_rows.shape[1]:
+        raise ValueError(f"tier row widths differ: {l1_rows.shape[1]} vs "
+                         f"{l2_rows.shape[1]}")
+    r = ids.shape[0]
+    d = l2_rows.shape[1]
+    br, bd = min(block_r, r), min(block_d, d)
+    grid = (pl.cdiv(r, br), pl.cdiv(d, bd))
+    return pl.pallas_call(
+        functools.partial(_probe_tiered_kernel,
+                          shift1=_shift_for(c1 // l1_assoc),
+                          shift2=_shift_for(c2 // l2_assoc),
+                          l1_assoc=l1_assoc, l2_assoc=l2_assoc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c1,), lambda i, j: (0,)),       # full L1 keys
+            pl.BlockSpec((c1, bd), lambda i, j: (0, j)),  # L1 column block
+            pl.BlockSpec((c2,), lambda i, j: (0,)),       # full L2 keys
+            pl.BlockSpec((c2, bd), lambda i, j: (0, j)),  # L2 column block
+            pl.BlockSpec((br,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br,), lambda i, j: (i,)),
+            pl.BlockSpec((br, bd), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+            jax.ShapeDtypeStruct((r, d), l2_rows.dtype),
+        ],
+        interpret=interpret,
+    )(l1_keys, l1_rows, l2_keys, l2_rows, ids)

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .cache_gather import cache_probe_gather_pallas
+from .cache_gather import cache_probe_gather_pallas, cache_probe_tiered_pallas
 from .flash_attention import flash_attention_pallas
 from .gather_reduce import fanout_mean_pallas, gather_reduce_pallas
 from .ssd_scan import ssd_scan_pallas
@@ -46,6 +46,21 @@ def cache_probe_gather(
         return cache_probe_gather_pallas(keys, rows, ids, assoc=assoc,
                                          interpret=_interpret())
     return ref.cache_probe_gather_ref(keys, rows, ids, assoc=assoc)
+
+
+def cache_probe_tiered(
+    l1_keys: jax.Array, l1_rows: jax.Array,
+    l2_keys: jax.Array, l2_rows: jax.Array, ids: jax.Array,
+    l1_assoc: int = 1, l2_assoc: int = 1, use_kernel: bool = False,
+):
+    """Fused hierarchical L1/L2 probe: (src [R] 0=miss/1=L1/2=L2, rows)."""
+    if use_kernel:
+        return cache_probe_tiered_pallas(
+            l1_keys, l1_rows, l2_keys, l2_rows, ids,
+            l1_assoc=l1_assoc, l2_assoc=l2_assoc, interpret=_interpret())
+    return ref.cache_probe_tiered_ref(l1_keys, l1_rows, l2_keys, l2_rows,
+                                      ids, l1_assoc=l1_assoc,
+                                      l2_assoc=l2_assoc)
 
 
 def flash_attention(

@@ -49,6 +49,29 @@ def cache_probe_gather_ref(
     return hit, out
 
 
+def cache_probe_tiered_ref(
+    l1_keys: jax.Array, l1_rows: jax.Array,
+    l2_keys: jax.Array, l2_rows: jax.Array,
+    ids: jax.Array, l1_assoc: int = 1, l2_assoc: int = 1,
+) -> tuple:
+    """Hierarchical two-tier cache probe: ``(src [R] int32, out [R, D])``.
+
+    Probes the small replicated L1 and the local L2 block in one pass —
+    the L1 takes priority on a double hit.  ``src`` reports the serving
+    tier (0 = miss, 1 = L1, 2 = L2); ``out`` is the serving tier's row
+    copy, zeros where both tiers miss.  Semantic ground truth for the
+    fused tiered probe kernel (``cache_probe_tiered_pallas``) and the
+    shape ``feature_cache.tiered_probe``'s jnp path takes."""
+    l1_hit, l1_out = cache_probe_gather_ref(l1_keys, l1_rows, ids,
+                                            assoc=l1_assoc)
+    l2_hit, l2_out = cache_probe_gather_ref(l2_keys, l2_rows, ids,
+                                            assoc=l2_assoc)
+    src = jnp.where(l1_hit, 1, jnp.where(l2_hit, 2, 0)).astype(jnp.int32)
+    out = jnp.where(l1_hit[:, None], l1_out,
+                    jnp.where(l2_hit[:, None], l2_out, 0))
+    return src, out
+
+
 def flash_attention_ref(
     q: jax.Array,      # [B, Hq, Lq, Dh]
     k: jax.Array,      # [B, Hkv, Lk, Dh]

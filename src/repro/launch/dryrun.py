@@ -64,7 +64,8 @@ def _artifact_stats(compiled, chips: int, t_lower: float, t_compile: float) -> d
 
 def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
                    merge_mode: str = "butterfly",
-                   cache_rows: int = None, cache_mode: str = None) -> dict:
+                   cache_rows: int = None, cache_mode: str = None,
+                   l1_rows: int = None) -> dict:
     """The paper's own workload at production scale: one synchronized
     generation+training step on a 530M-node / 5B-edge graph (the paper's
     evaluation graph).  The sampling depth comes from the arch config —
@@ -74,7 +75,7 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
     replicates over 'model'.  When the config enables the hot-node feature
     cache, its per-worker state rides in the pipelined carry —
     ``(params, opt, batch, cache)`` — and must partition/compile too."""
-    from ..core.feature_cache import CacheConfig, cache_specs
+    from ..core.feature_cache import CacheConfig, cache_state_specs
     from ..core.generation import make_generator_fn
     from ..core.pipeline import make_pipelined_step
     from ..graph.subgraph import batch_specs, slots_per_seed
@@ -90,6 +91,8 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
         cfg = dataclasses.replace(cfg, cache_rows=cache_rows)
     if cache_mode is not None:
         cfg = dataclasses.replace(cfg, cache_mode=cache_mode)
+    if l1_rows is not None:
+        cfg = dataclasses.replace(cfg, cache_l1_rows=l1_rows)
     cache_cfg = CacheConfig.from_model(cfg)
     cached = cache_cfg is not None
     fanouts = cfg.fanouts
@@ -125,7 +128,7 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
     batch0 = batch_specs(w * b, fanouts, cfg.gcn_in_dim, n_workers=w)
     step = make_pipelined_step(gen_fn, train_fn, cached=cached)
     if cached:
-        cache0 = cache_specs(cfg.cache_rows, cfg.gcn_in_dim, n_workers=w)
+        cache0 = cache_state_specs(cache_cfg, cfg.gcn_in_dim, n_workers=w)
         carry0 = (params, opt, batch0, cache0)
     else:
         carry0 = (params, opt, batch0)
@@ -141,6 +144,7 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
         active_params=cfg.param_count(),
         cache_rows=cfg.cache_rows,
         cache_mode=cfg.cache_mode if cached else None,
+        cache_l1_rows=cache_cfg.l1_rows if cached else 0,
         tokens=w * b * slots_per_seed(fanouts),   # padded node slots per iter
     )
     return rec
@@ -151,7 +155,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                variant: str = "baseline", shard_heads: bool = False,
                gen_merge: str = "butterfly", moe_impl: str = "gather",
                seq_parallel: bool = False, compress: bool = False,
-               cache_rows: int = None, cache_mode: str = None) -> dict:
+               cache_rows: int = None, cache_mode: str = None,
+               l1_rows: int = None) -> dict:
     cfg = get_config(arch)
     rec = {
         "arch": arch, "shape": shape_name,
@@ -161,7 +166,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     if cfg.family == "gcn":
         rec["kind"] = "train"
         return lower_gcn_cell(rec, arch, multi_pod, merge_mode=gen_merge,
-                              cache_rows=cache_rows, cache_mode=cache_mode)
+                              cache_rows=cache_rows, cache_mode=cache_mode,
+                              l1_rows=l1_rows)
     shape = SHAPES[shape_name]
     rec["kind"] = shape.kind
     if shape_name == "long_500k" and arch not in SUBQUADRATIC:
@@ -283,8 +289,11 @@ def main() -> None:
                     help="GCN cells: hot-node feature cache rows/worker "
                          "(0 disables; default from the arch config)")
     ap.add_argument("--cache-mode", default=None,
-                    choices=["replicated", "sharded"],
+                    choices=["replicated", "sharded", "tiered"],
                     help="GCN cells: cache placement override")
+    ap.add_argument("--l1-rows", type=int, default=None,
+                    help="GCN cells, tiered mode: replicated L1 "
+                         "rows/worker (0 auto-sizes to cache_rows/8)")
     ap.add_argument("--out", default=None, help="append JSONL here")
     args = ap.parse_args()
     rec = lower_cell(args.arch, args.shape, args.multi_pod,
@@ -292,7 +301,7 @@ def main() -> None:
                      shard_heads=args.shard_heads, gen_merge=args.gen_merge,
                      moe_impl=args.moe, seq_parallel=args.seq_parallel,
                      compress=args.compress, cache_rows=args.cache_rows,
-                     cache_mode=args.cache_mode)
+                     cache_mode=args.cache_mode, l1_rows=args.l1_rows)
     line = json.dumps(rec)
     print(line)
     if args.out:

@@ -71,7 +71,7 @@ def calibrate_capacity_slack(mesh, device_args, fanouts, probes,
     drop requests on the real run's first iterations.  (Within a rung the
     cache threads across the probes, exactly as the real run warms up.)
     """
-    from ..core.feature_cache import init_worker_caches
+    from ..core.feature_cache import init_cache_state
     from ..core.generation import make_generator_fn
     from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -83,9 +83,10 @@ def calibrate_capacity_slack(mesh, device_args, fanouts, probes,
             mesh, fanouts=fanouts, capacity_slack=slack,
             cache_cfg=cache_cfg if cached else None))
         if cached:
-            # COLD cache per rung (see docstring)
+            # COLD cache per rung (see docstring); init_cache_state is
+            # mode-polymorphic (flat state or tiered (l1, l2) pytree)
             cache = jax.device_put(
-                init_worker_caches(cache_cfg.n_rows, feat_dim, w),
+                init_cache_state(cache_cfg, feat_dim, w),
                 NamedSharding(mesh, P("data")))
         dropped = 0
         for seeds, rng in probes:
@@ -142,6 +143,10 @@ def train_gcn(args) -> dict:
         cfg = dataclasses.replace(cfg, cache_assoc=args.cache_assoc)
     if args.cache_mode is not None:
         cfg = dataclasses.replace(cfg, cache_mode=args.cache_mode)
+    if args.l1_rows is not None:
+        cfg = dataclasses.replace(cfg, cache_l1_rows=args.l1_rows)
+    if args.l1_promote is not None:
+        cfg = dataclasses.replace(cfg, cache_l1_promote=args.l1_promote)
     if args.smoke:
         cfg = smoke_config(cfg)
     fanouts = cfg.fanouts
@@ -189,9 +194,13 @@ def train_gcn(args) -> dict:
     )
     if cached:
         gen_fn, device_args, cache = gen_out
-        print(f"hot-node cache: {cache_cfg.n_rows} rows/worker "
-              f"({cache_cfg.assoc}-way, {cache_cfg.mode}), "
-              f"admit-after-{cache_cfg.admit}")
+        line = (f"hot-node cache: {cache_cfg.n_rows} rows/worker "
+                f"({cache_cfg.assoc}-way, {cache_cfg.mode}), "
+                f"admit-after-{cache_cfg.admit}")
+        if cache_cfg.mode == "tiered":
+            line += (f" + {cache_cfg.l1_rows}-row replicated L1 "
+                     f"(promote-after-{cache_cfg.l1_promote})")
+        print(line)
     else:
         gen_fn, device_args = gen_out
         cache = None
@@ -372,9 +381,17 @@ def main() -> None:
                     choices=[1, 2, 4],
                     help="cache ways per set (1 = direct-mapped)")
     ap.add_argument("--cache-mode", default=None,
-                    choices=["replicated", "sharded"],
-                    help="cache placement: per-worker replicas or "
-                         "id-space shards with cache-aware routing")
+                    choices=["replicated", "sharded", "tiered"],
+                    help="cache placement: per-worker replicas, id-space "
+                         "shards with cache-aware routing, or a "
+                         "replicated L1 head in front of the sharded L2")
+    ap.add_argument("--l1-rows", type=int, default=None,
+                    help="tiered mode: replicated L1 rows/worker (rounded "
+                         "UP to a power of two; 0 auto-sizes to "
+                         "cache_rows/8)")
+    ap.add_argument("--l1-promote", type=int, default=None,
+                    help="tiered mode: observations of a row before it is "
+                         "promoted into the local L1")
     ap.add_argument("--warm-recalibrate", type=int, default=0,
                     help="after N warm steps, shrink the owner-exchange "
                          "capacity to the observed steady-state cache-miss "

@@ -217,64 +217,103 @@ def test_fetch_rows_shard_boundary_ids_route_correctly():
     assert "BOUNDARY_OK" in out
 
 
-def test_cached_generation_multiworker_bit_identical():
-    """The hot-node cache on 8 workers: recurring seeds drive the hit rate
-    up across iterations while every feature row stays bit-identical to the
-    uncached generator under the same rng — the cache changes WHERE rows
-    come from, never WHAT they are."""
-    out = run_forced("""
+#: the cross-mode differential matrix: every cache placement x every
+#: associativity x every worker count, each cell checked bit-for-bit
+#: against the uncached oracle (the raw host feature table) AND for
+#: training-loss equality — the single harness that replaces the old
+#: scattered per-mode bit-identity tests
+CACHE_MODES = ("none", "replicated", "sharded", "tiered")
+
+
+@pytest.mark.parametrize("w", [1, 2, 4])
+@pytest.mark.parametrize("assoc", [1, 2, 4])
+@pytest.mark.parametrize("mode", CACHE_MODES)
+def test_cross_mode_differential_matrix(mode, assoc, w):
+    """THE cache contract, swept as one property over the whole design
+    space: for every mode x assoc x W cell, the generation engine's
+    fetched feature rows are bit-identical to the uncached oracle
+    (features gathered straight from the host table), padded slots are
+    exactly zero, labels match, nothing drops, and the training loss
+    computed from the generated batch equals the loss computed from the
+    oracle batch bit-for-bit.  Recurring rngs warm the cache so every
+    cached cell also proves hits appear without perturbing the rows."""
+    out = run_forced(f"""
+        MODE, ASSOC, W = {mode!r}, {assoc}, {w}
+        import dataclasses
         import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
         from repro.graph.synthetic import powerlaw_graph, node_features, node_labels
         from repro.core.partition import partition_edges
         from repro.core.balance import balance_table
+        from repro.core.feature_cache import CacheConfig
         from repro.core.generation import make_distributed_generator
         from repro.launch.mesh import make_mesh
+        from repro.models import gcn as gcn_mod
 
-        W = 8
+        N, D, C = 600, 8, 7
         mesh = make_mesh((W,), ("data",))
-        g = powerlaw_graph(2000, avg_degree=8, n_hot=3, hot_degree=500, seed=0)
+        g = powerlaw_graph(N, avg_degree=8, n_hot=3, hot_degree=200, seed=0)
         part = partition_edges(g, W)
-        X = node_features(2000, 16); Y = node_labels(2000, 7)
-        table = balance_table(np.arange(2000), W, seed=0)
-        seeds = jnp.asarray(table.per_worker[:, :16])
-        from repro.core.feature_cache import CacheConfig
-        gen_nc, dev_nc = make_distributed_generator(mesh, part, X, Y,
-                                                    fanouts=(8, 4))
-        gen_c, dev_c, cache = make_distributed_generator(
-            mesh, part, X, Y, fanouts=(8, 4),
-            cache_cfg=CacheConfig(1024, admit=1))
-        hit_rates = []
-        for t in range(4):
-            rng = jax.random.PRNGKey(t % 2)   # recurring rngs -> recurring ids
-            b_nc = gen_nc(dev_nc, seeds, rng)
-            b_c, cache = gen_c(dev_c, seeds, rng, cache)
-            np.testing.assert_array_equal(np.asarray(b_nc.x_seed),
-                                          np.asarray(b_c.x_seed))
-            for a, b in zip(b_nc.x_hops, b_c.x_hops):
-                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-            assert (np.asarray(b_c.labels) == np.asarray(b_nc.labels)).all()
-            assert np.asarray(b_c.n_dropped).sum() == 0
-            hits = np.asarray(b_c.n_cache_hits).sum()
-            total = hits + np.asarray(b_c.n_cache_misses).sum()
-            hit_rates.append(hits / total)
-        assert hit_rates[0] == 0.0                   # cold cache
-        assert hit_rates[-1] > 0.5, hit_rates        # recurring ids now local
-        assert b_c.n_cache_hits.shape == (W,)
-        print("CACHE_OK", [round(h, 3) for h in hit_rates])
-    """)
-    assert "CACHE_OK" in out
+        X = node_features(N, D); Y = node_labels(N, C)
+        table = balance_table(np.arange(N), W, seed=0)
+        seeds = jnp.asarray(table.per_worker[:, :6])
+        cc = None if MODE == "none" else CacheConfig(
+            128, admit=1, assoc=ASSOC, mode=MODE,
+            l1_rows=32 if MODE == "tiered" else 0, l1_promote=2)
+        out = make_distributed_generator(mesh, part, X, Y, fanouts=(5, 3),
+                                         cache_cfg=cc)
+        gen, dev = out[0], out[1]
+        cache = out[2] if cc is not None else None
+        mcfg = dataclasses.replace(get_config("graphgen-gcn"), gcn_in_dim=D,
+                                   gcn_hidden=16, n_classes=C, fanouts=(5, 3))
+        params = gcn_mod.init_gcn(mcfg, jax.random.PRNGKey(1))
+        loss_fn = jax.jit(gcn_mod.gcn_loss)
+        hits = 0
+        for t in range(3):
+            rng = jax.random.PRNGKey(t % 2)   # recurring ids warm the cache
+            if cache is None:
+                b = gen(dev, seeds, rng)
+            else:
+                b, cache = gen(dev, seeds, rng, cache)
+            b = jax.tree.map(np.asarray, b)
+            assert b.n_dropped.sum() == 0, b.n_dropped
+            # --- bit-identical rows vs the uncached oracle (the table) ---
+            np.testing.assert_array_equal(b.x_seed, X[b.seeds])
+            oracle_hops = []
+            for h, m, x in zip(b.hops, b.masks, b.x_hops):
+                want = X[h] * m[..., None]          # padded slots exactly 0
+                np.testing.assert_array_equal(x, want)
+                oracle_hops.append(want)
+            assert (b.labels == Y[b.seeds]).all()
+            # --- bit-identical training loss vs the oracle batch ---------
+            oracle = b._replace(x_seed=X[b.seeds],
+                                x_hops=tuple(oracle_hops))
+            l_got = np.asarray(loss_fn(params, jax.tree.map(jnp.asarray, b)))
+            l_want = np.asarray(loss_fn(params,
+                                        jax.tree.map(jnp.asarray, oracle)))
+            assert l_got.tobytes() == l_want.tobytes(), (l_got, l_want)
+            assert np.isfinite(l_got)
+            hits += int(b.n_cache_hits.sum())
+        if cc is not None:
+            assert hits > 0, "cache never warmed on recurring ids"
+        else:
+            assert hits == 0
+        print("MATRIX_OK", MODE, ASSOC, W, hits)
+    """, devices=w)
+    assert "MATRIX_OK" in out
 
 
-def test_sharded_cached_fetch_bit_identical_property():
-    """THE sharded contract, property-style on a W=4 mesh: across random
-    seeds, request mixes, cache sizes, and associativities, the two-stage
-    (shard-probe -> owner-fetch -> shard-admit) cached fetch returns rows
-    bit-identical to the raw table, with zero drops."""
+def test_cached_fetch_all_modes_bit_identical_w4():
+    """Fetch-level complement of the matrix on one W=4 mesh: random request
+    mixes against every (mode, assoc) cell return rows bit-identical to
+    the raw table with zero drops, the hit split stays consistent
+    (l1 + local + shard == hits), and the conservation invariant
+    l1 + local + shard + misses == distinct holds per worker."""
     out = run_forced("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.experimental.shard_map import shard_map
         from jax.sharding import NamedSharding, PartitionSpec as P
-        from repro.core.feature_cache import CacheConfig, init_worker_caches
+        from repro.core.feature_cache import CacheConfig, init_cache_state
         from repro.core.generation import fetch_rows
         from repro.launch.mesh import make_mesh
 
@@ -283,8 +322,13 @@ def test_sharded_cached_fetch_bit_identical_property():
         table = np.arange(W * rows_pw * d,
                           dtype=np.float32).reshape(W * rows_pw, d)
         spec = NamedSharding(mesh, P("data"))
-        for trial, (c, assoc) in enumerate([(16, 1), (32, 2), (64, 4)]):
-            cfg = CacheConfig(c, admit=1, assoc=assoc, mode="sharded")
+        cells = [("replicated", 1), ("replicated", 4), ("sharded", 1),
+                 ("sharded", 2), ("sharded", 4), ("tiered", 1),
+                 ("tiered", 2), ("tiered", 4)]
+        for trial, (mode, assoc) in enumerate(cells):
+            cfg = CacheConfig(32, admit=1, assoc=assoc, mode=mode,
+                              l1_rows=16 if mode == "tiered" else 0,
+                              l1_promote=2).validated()
 
             def worker(t, i, cc):
                 cc = jax.tree.map(lambda a: a[0], cc)
@@ -298,9 +342,9 @@ def test_sharded_cached_fetch_bit_identical_property():
                 in_specs=(P("data"), P("data"), P("data")),
                 out_specs=(P("data"), P("data"), P("data")),
                 check_rep=False))
-            state = jax.device_put(init_worker_caches(c, d, W), spec)
+            state = jax.device_put(init_cache_state(cfg, d, W), spec)
             rng = np.random.default_rng(trial)
-            total_hits = 0
+            total_hits = total_l1 = 0
             for it in range(6):
                 ids = rng.integers(0, W * rows_pw, (W, 48)).astype(np.int32)
                 out, state, (fs, cs) = run(
@@ -310,15 +354,24 @@ def test_sharded_cached_fetch_bit_identical_property():
                     np.asarray(out).reshape(W, 48, d),
                     table[ids])
                 assert int(np.asarray(fs.n_dropped).sum()) == 0
+                l1 = np.asarray(cs.n_l1_hits)
+                loc = np.asarray(cs.n_local_hits)
+                sh = np.asarray(cs.n_shard_hits)
+                ms = np.asarray(cs.n_misses)
+                assert (l1 + loc + sh == np.asarray(cs.n_hits)).all()
+                distinct = np.asarray(
+                    [len(np.unique(ids[k])) for k in range(W)])
+                assert (l1 + loc + sh + ms == distinct).all(), (mode, assoc)
+                if mode != "tiered":
+                    assert (l1 == 0).all()
                 total_hits += int(np.asarray(cs.n_hits).sum())
-                # telemetry consistency: hits split exactly local/shard
-                assert (np.asarray(cs.n_local_hits)
-                        + np.asarray(cs.n_shard_hits)
-                        == np.asarray(cs.n_hits)).all()
-            assert total_hits > 0, (c, assoc)
-        print("SHARDED_BITWISE_OK")
+                total_l1 += int(l1.sum())
+            assert total_hits > 0, (mode, assoc)
+            if mode == "tiered":
+                assert total_l1 > 0, "L1 never promoted"
+        print("ALL_MODES_FETCH_OK")
     """, devices=4)
-    assert "SHARDED_BITWISE_OK" in out
+    assert "ALL_MODES_FETCH_OK" in out
 
 
 def test_sharded_cache_beats_replicated_capacity():
@@ -383,10 +436,12 @@ def test_sharded_cache_beats_replicated_capacity():
     assert "SHARDED_CAPACITY_OK" in out
 
 
-def test_sharded_cached_generation_multiworker_bit_identical():
-    """End-to-end: the full generation engine with the SHARDED cache on 8
-    workers stays bit-identical to the uncached generator under the same
-    rng, while remote-shard hits appear in the telemetry."""
+def test_tiered_cached_generation_multiworker_warms_l1():
+    """End-to-end: the full generation engine with the TIERED cache on 8
+    workers — the rows stay bit-identical to the uncached generator under
+    the same rng (the matrix covers the sweep; this pins the 8-worker
+    scale), the hit rate climbs on recurring ids, AND a promoted-L1 hit
+    population appears, serving part of the stream with zero network."""
     out = run_forced("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.graph.synthetic import powerlaw_graph, node_features, node_labels
@@ -407,9 +462,10 @@ def test_sharded_cached_generation_multiworker_bit_identical():
                                                     fanouts=(8, 4))
         gen_c, dev_c, cache = make_distributed_generator(
             mesh, part, X, Y, fanouts=(8, 4),
-            cache_cfg=CacheConfig(256, admit=1, assoc=2, mode="sharded"))
+            cache_cfg=CacheConfig(256, admit=1, assoc=2, mode="tiered",
+                                  l1_rows=64, l1_promote=2))
         hit_rates = []
-        for t in range(4):
+        for t in range(5):
             rng = jax.random.PRNGKey(t % 2)   # recurring rngs -> recurring ids
             b_nc = gen_nc(dev_nc, seeds, rng)
             b_c, cache = gen_c(dev_c, seeds, rng, cache)
@@ -424,9 +480,11 @@ def test_sharded_cached_generation_multiworker_bit_identical():
             hit_rates.append(hits / total)
         assert hit_rates[0] == 0.0                   # cold cache
         assert hit_rates[-1] > 0.5, hit_rates        # recurring ids now cached
-        print("SHARDED_GEN_OK", [round(h, 3) for h in hit_rates])
+        # the promoted head is resident in (at least one) L1 replica
+        assert int(np.asarray(cache.l1.keys >= 0).sum()) > 0
+        print("TIERED_GEN_OK", [round(h, 3) for h in hit_rates])
     """)
-    assert "SHARDED_GEN_OK" in out
+    assert "TIERED_GEN_OK" in out
 
 
 def test_generation_three_hop_multiworker():

@@ -50,6 +50,18 @@ def test_dryrun_gcn_production_cell():
     assert rec["collective_bytes_per_device"]["collective-permute"] > 0  # tree merge
 
 
+@pytest.mark.slow
+def test_dryrun_gcn_tiered_cell():
+    """The deep-GCN config's TIERED cache (replicated L1 + sharded L2)
+    must partition and compile at the production 16x16 mesh — the tiered
+    state pytree rides the pipelined carry through shard_map."""
+    rec = _run(["--arch", "graphgen-gcn-deep", "--shape", "train_4k"])
+    assert rec["status"] == "ok"
+    assert rec["cache_mode"] == "tiered"
+    assert rec["cache_l1_rows"] == 512
+    assert rec["collective_bytes_per_device"]["all-to-all"] > 0
+
+
 def test_long500k_skip_policy():
     rec = _run(["--arch", "llama3-405b", "--shape", "long_500k"])
     assert rec["status"] == "skipped"

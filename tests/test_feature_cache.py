@@ -9,11 +9,12 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.feature_cache import (CacheConfig, FeatureCache,
+from repro.core.feature_cache import (CacheConfig, FeatureCache, TieredCache,
                                       cache_insert, cache_probe, hash_slots,
-                                      init_cache, init_worker_caches,
+                                      init_cache, init_cache_state,
+                                      init_worker_caches,
                                       restore_worker_axis, shard_of,
-                                      squeeze_worker_axis)
+                                      squeeze_worker_axis, tiered_probe)
 from repro.core.generation import fetch_rows
 
 
@@ -374,6 +375,240 @@ def test_worker_axis_roundtrip():
     assert c.keys.shape == (32,)
     r = restore_worker_axis(c)
     assert r.keys.shape == (1, 32) and r.rows.shape == (1, 32, 4)
+
+
+def test_worker_axis_shape_contract_is_explicit():
+    """Regression for the silent-acceptance bug: squeezing an
+    already-squeezed cache used to index keys[0] — a SCALAR — and corrupt
+    every downstream probe; restoring an already-stacked cache grew a
+    bogus axis.  Both now raise, for the flat AND the tiered state."""
+    stacked = jax.tree.map(jnp.asarray, init_worker_caches(32, 4, 1))
+    per_worker = squeeze_worker_axis(stacked)
+    with pytest.raises(ValueError, match="already squeezed"):
+        squeeze_worker_axis(per_worker)
+    with pytest.raises(ValueError, match="already\\s+stacked"):
+        restore_worker_axis(stacked)
+    # roundtrip identity both ways
+    rt = squeeze_worker_axis(restore_worker_axis(per_worker))
+    for a, b in zip(rt, per_worker):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the worker axis must be the size-1 shard_map block, not a [W>1] stack
+    with pytest.raises(ValueError, match="size 1"):
+        squeeze_worker_axis(jax.tree.map(jnp.asarray,
+                                         init_worker_caches(32, 4, 4)))
+    # tiered state: same contract through the (l1, l2) pytree
+    tcfg = CacheConfig(32, assoc=2, mode="tiered", l1_rows=8).validated()
+    tstacked = jax.tree.map(jnp.asarray, init_cache_state(tcfg, 4, 1))
+    tper = squeeze_worker_axis(tstacked)
+    assert tper.l1.keys.shape == (8,) and tper.l2.keys.shape == (32,)
+    with pytest.raises(ValueError, match="already squeezed"):
+        squeeze_worker_axis(tper)
+    with pytest.raises(ValueError, match="already\\s+stacked"):
+        restore_worker_axis(tstacked)
+    assert restore_worker_axis(tper).l1.keys.shape == (1, 8)
+
+
+# ------------------------------------------------------------- tiered tier
+
+def test_tiered_config_validation_and_tier_views():
+    with pytest.raises(ValueError):
+        CacheConfig(64, mode="tiered").validated()          # no L1
+    with pytest.raises(ValueError):
+        CacheConfig(64, mode="tiered", l1_rows=12).validated()  # not pow2
+    with pytest.raises(ValueError):
+        CacheConfig(64, mode="sharded", l1_rows=8).validated()  # wrong mode
+    with pytest.raises(ValueError):
+        CacheConfig(64, mode="tiered", l1_rows=8,
+                    l1_promote=0).validated()
+    cfg = CacheConfig(64, admit=2, assoc=4, mode="tiered", l1_rows=8,
+                      l1_promote=3).validated()
+    # tier views: L1 is a standalone replicated policy with the promotion
+    # threshold as its admission knob and capped 2-way sets; L2 is the
+    # pre-tiered sharded policy unchanged
+    assert cfg.l1_assoc == 2
+    assert cfg.l1_config() == CacheConfig(8, admit=3, assoc=2,
+                                          mode="replicated")
+    assert cfg.l2_config() == CacheConfig(64, admit=2, assoc=4,
+                                          mode="sharded")
+    assert CacheConfig(64, assoc=1, mode="tiered",
+                       l1_rows=8).validated().l1_assoc == 1
+
+
+def test_tiered_from_model_auto_sizes_l1():
+    from repro.core.config import ModelConfig
+    cfg = CacheConfig.from_model(ModelConfig(
+        name="t", family="gcn", cache_rows=4096, cache_mode="tiered"))
+    assert cfg.mode == "tiered" and cfg.l1_rows == 4096 // 8
+    cfg2 = CacheConfig.from_model(ModelConfig(
+        name="t", family="gcn", cache_rows=4096, cache_mode="tiered",
+        cache_l1_rows=1000, cache_l1_promote=2))
+    assert cfg2.l1_rows == 1024 and cfg2.l1_promote == 2   # rounded up
+    # the auto floor respects the L1's way count: a tiny set-associative
+    # tiered cache must still produce a VALID config
+    tiny = CacheConfig.from_model(ModelConfig(
+        name="t", family="gcn", cache_rows=8, cache_mode="tiered",
+        cache_assoc=2))
+    assert tiny.l1_rows == 2 and tiny.l1_assoc == 2
+    # non-tiered modes IGNORE leftover L1 knobs instead of raising — the
+    # launchers override cache_mode field-by-field on tiered arch configs
+    # (e.g. --cache-mode sharded on graphgen-gcn-deep), so a cross-field
+    # check at ModelConfig construction would break every such override
+    sharded = CacheConfig.from_model(ModelConfig(
+        name="t", family="gcn", cache_rows=64, cache_mode="sharded",
+        cache_l1_rows=8))
+    assert sharded.mode == "sharded" and sharded.l1_rows == 0
+    with pytest.raises(ValueError):
+        ModelConfig(name="t", family="gcn", cache_l1_promote=0)
+    with pytest.raises(ValueError):
+        ModelConfig(name="t", family="gcn", cache_l1_rows=-2)
+
+
+def test_tiered_probe_l1_priority_and_bit_identity():
+    """The fused local probe: an id resident in BOTH tiers is reported as
+    an L1 hit (the cheaper tier wins), rows are verbatim copies from the
+    serving tier, and the jnp and pallas paths agree bit-for-bit."""
+    cfg = CacheConfig(32, admit=1, assoc=2, mode="tiered", l1_rows=8,
+                      l1_promote=1).validated()
+    state = TieredCache(l1=init_cache(8, 2), l2=init_cache(32, 2))
+    both = jnp.asarray([3], jnp.int32)
+    l2_only = jnp.asarray([100], jnp.int32)
+    row_a, row_b = jnp.full((1, 2), 1.0), jnp.full((1, 2), 2.0)
+    l1, _ = cache_insert(state.l1, both, row_a, jnp.ones(1, bool),
+                         cfg.l1_config())
+    l2, _ = cache_insert(state.l2, both, row_a, jnp.ones(1, bool),
+                         cfg.l2_config())
+    l2, _ = cache_insert(l2, l2_only, row_b, jnp.ones(1, bool),
+                         cfg.l2_config())
+    state = TieredCache(l1=l1, l2=l2)
+    ids = jnp.asarray([3, 100, 999], jnp.int32)
+    l1_hit, l2_hit, rows = tiered_probe(state, ids, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(l1_hit), [True, False, False])
+    np.testing.assert_array_equal(np.asarray(l2_hit), [False, True, False])
+    np.testing.assert_array_equal(np.asarray(rows),
+                                  np.asarray([[1., 1.], [2., 2.], [0., 0.]]))
+    p1, p2, pr = tiered_probe(state, ids, cfg=cfg, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(l1_hit))
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(l2_hit))
+    np.testing.assert_array_equal(np.asarray(pr), np.asarray(rows))
+    # layout mismatch rejected, like the flat probe
+    with pytest.raises(ValueError):
+        tiered_probe(state, ids,
+                     cfg=CacheConfig(32, mode="tiered", l1_rows=16))
+    with pytest.raises(ValueError):
+        tiered_probe(state, ids, cfg=CacheConfig(32))   # not tiered
+
+
+def test_l1_promotion_requires_repeat_observations():
+    """The L2 -> L1 migration gate: with l1_promote=2, one observation of
+    an L2-served row only tracks it in the L1; the second installs it —
+    after which the id is served with zero network (an L1 hit)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = CacheConfig(64, admit=1, assoc=2, mode="tiered", l1_rows=16,
+                      l1_promote=2).validated()
+    n, d = 40, 3
+    rng = np.random.default_rng(3)
+    table = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    mesh = make_local_mesh(1, 1)
+
+    def worker(t, i, c):
+        out, c, fs, cs = fetch_rows(t, i, "data",
+                                    cache=squeeze_worker_axis(c),
+                                    cache_cfg=cfg)
+        return (out, restore_worker_axis(c),
+                jax.tree.map(lambda a: a[None], (fs, cs)))
+
+    run = jax.jit(shard_map(
+        worker, mesh=mesh, in_specs=(P(), P(), P("data")),
+        out_specs=(P(), P("data"), P("data")), check_rep=False))
+    state = jax.tree.map(jnp.asarray, init_cache_state(cfg, d, 1))
+    ids = jnp.asarray(np.arange(10, dtype=np.int32))
+    l1_hits = []
+    for it in range(4):
+        out, state, (fs, cs) = run(table, ids, state)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(table)[:10])
+        l1_hits.append(int(cs.n_l1_hits[0]))
+    # it0: owner fetch (L2 admission).  it1: L2 serves -> first L1
+    # observation, only tracked.  it2: probe still misses (the second
+    # observation installs AFTER it2's probe).  it3: the L1 now serves
+    # the stream network-free.
+    assert l1_hits[0] == l1_hits[1] == l1_hits[2] == 0, l1_hits
+    assert l1_hits[3] > 0, l1_hits
+
+
+# --------------------------------------------------- conservation invariant
+
+@pytest.mark.parametrize("mode", ["none", "replicated", "sharded", "tiered"])
+def test_hit_conservation_invariant_adversarial_streams(mode):
+    """For EVERY cache mode, ``n_l1_hits + n_local_hits + n_shard_hits +
+    n_misses == n_distinct`` on each fetch — including the adversarial
+    stream shapes where counter bookkeeping slips: all-duplicate,
+    all-distinct, single-id, and the empty batch.  Each stream runs cold
+    AND warm (the warm pass moves population between the categories; the
+    sum must not move), and rows stay bit-identical throughout."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_local_mesh
+
+    n, d = 64, 3
+    table = jnp.asarray(
+        np.arange(n * d, dtype=np.float32).reshape(n, d))
+    mesh = make_local_mesh(1, 1)
+    cfg = None if mode == "none" else CacheConfig(
+        16, admit=1, assoc=2, mode=mode,
+        l1_rows=8 if mode == "tiered" else 0, l1_promote=1).validated()
+    if cfg is None:
+        run = jax.jit(shard_map(
+            lambda t, i: fetch_rows(t, i, "data", return_stats=True),
+            mesh=mesh, in_specs=(P(), P()), out_specs=P(), check_rep=False))
+        state = None
+    else:
+        def worker(t, i, c):
+            out, c, fs, cs = fetch_rows(t, i, "data",
+                                        cache=squeeze_worker_axis(c),
+                                        cache_cfg=cfg)
+            return (out, restore_worker_axis(c),
+                    jax.tree.map(lambda a: a[None], (fs, cs)))
+
+        run = jax.jit(shard_map(
+            worker, mesh=mesh, in_specs=(P(), P(), P("data")),
+            out_specs=(P(), P("data"), P("data")), check_rep=False))
+        state = jax.tree.map(jnp.asarray, init_cache_state(cfg, d, 1))
+    streams = [
+        np.full(64, 7, np.int32),          # all-duplicate
+        np.arange(48, dtype=np.int32),     # all-distinct
+        np.asarray([5], np.int32),         # single id
+        np.zeros(0, np.int32),             # empty batch
+    ]
+    for ids_np in streams:
+        distinct = len(np.unique(ids_np))
+        for _ in range(2):                 # cold pass, then warm pass
+            ids = jnp.asarray(ids_np)
+            if cfg is None:
+                out, fs = run(table, ids)
+                np.testing.assert_array_equal(np.asarray(out),
+                                              np.asarray(table)[ids_np])
+                # no cache tier: everything distinct is a "miss"
+                assert int(fs.n_unique) == distinct
+                continue
+            out, state, (fs, cs) = run(table, ids, state)
+            np.testing.assert_array_equal(np.asarray(out),
+                                          np.asarray(table)[ids_np])
+            l1 = int(cs.n_l1_hits[0])
+            loc = int(cs.n_local_hits[0])
+            sh = int(cs.n_shard_hits[0])
+            ms = int(cs.n_misses[0])
+            assert l1 + loc + sh + ms == distinct, (
+                mode, ids_np.shape, l1, loc, sh, ms, distinct)
+            assert int(cs.n_hits[0]) == l1 + loc + sh
+            assert l1 >= 0 and loc >= 0 and sh >= 0 and ms >= 0
+            if mode != "tiered":
+                assert l1 == 0
+            # single worker owns every shard: nothing is remote
+            assert sh == 0
 
 
 # ------------------------------------------------- cache-aware fetch_rows
