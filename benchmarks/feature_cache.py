@@ -19,13 +19,27 @@ power-of-two budget — is half L1, half L2).  Each replica of a replicated
 cache converges on the same Zipf head, so total distinct capacity stays
 ~C; the sharded cache partitions the id-space and reaches W*C; the tiered
 cache trades half the L2 capacity for serving the global head with ZERO
-probe-round traffic.  ``probe_round_bytes`` counts the ids each mode
-actually carries on the shard-probe all_to_all (occupied wire slots x
-(id up + hit flag and row down) — what a compacted transport would ship;
-empty slack slots carry only the -1 sentinel): sharded ships EVERY
-distinct id, tiered only the L1 misses, so at equal total rows the tiered
-probe round is strictly cheaper (the gate ``main`` enforces, together
-with the L1 serving >= 20% of all hits network-free).
+probe-round traffic.
+
+Both probe-round modes are measured under BOTH wire formats
+(``CacheConfig.wire``): a **dense** pass first (full [W, cap, D] response
+block — it also observes ``CacheStats.probe_hit_peak``, the largest
+per-destination hit count any holder produced), then a **compact** pass
+with ``hit_cap`` sized to that peak plus a margin (mirroring the
+launcher's calibration ladder).  ``probe_round_bytes`` is MEASURED — the
+sum of ``FetchStats.probe_round_bytes``, i.e. the byte size of the
+exchange buffers the compiled program actually ships — not an
+occupied-slot estimate.  Gates ``main`` enforces at ``--workers > 1``:
+
+  * compact probe bytes strictly below dense for BOTH sharded and tiered
+    at every size, AND the reduction is at least the probe round's
+    measured miss fraction (the compact claim: response bytes scale with
+    hits, and on this stream most probe slots are not hits);
+  * tiered compact probe bytes strictly below sharded compact at equal
+    total rows (the L1 filter keeps the head off the round, so its hit
+    peak — and therefore its payload — is smaller);
+  * sharded hits strictly above replicated per size; the L1 serves
+    >= 20% of tiered hits network-free.
 
     PYTHONPATH=src python -m benchmarks.feature_cache [--smoke] \
         [--out BENCH_feature_cache.json] [--workers N] [--iters K] \
@@ -33,13 +47,11 @@ with the L1 serving >= 20% of all hits network-free).
 
 Emits the ``name,us_per_call,derived`` CSV rows the benchmark harness
 expects and (with ``--out``) a JSON artifact so CI can accumulate the perf
-trajectory.  ``--baseline`` compares each mode's unique_reduction against
-a checked-in reference and fails on a >5% relative regression (the
-nightly job's gate).  Acceptance anchors: at ``cache_rows=4096`` on
-Zipf(1.1) over >= 20 iterations the routed-unique reduction vs cache-off
-is >= 30%; at ``--workers > 1`` sharded hits strictly exceed replicated
-hits per size, tiered probe-round bytes stay strictly below sharded, and
-the L1 serves >= 20% of tiered hits.
+trajectory.  ``--baseline`` compares each (size, mode, wire) cell's
+unique_reduction against a checked-in reference and fails on a >5%
+relative regression (the nightly job's gate).  Acceptance anchors: at
+``cache_rows=4096`` on Zipf(1.1) over >= 20 iterations the routed-unique
+reduction vs cache-off is >= 30%, plus the wire gates above.
 """
 from __future__ import annotations
 
@@ -72,6 +84,7 @@ def zipf_requests(rng, n_nodes: int, size: int, a: float = 1.1):
 def measure(n_nodes: int, dim: int, requests: int, iters: int,
             cache_rows: int, *, admit: int = 2, assoc: int = 1,
             mode: str = "replicated", l1_rows: int = 0, l1_promote: int = 2,
+            wire: str = "dense", hit_cap: int = 0,
             zipf_a: float = 1.1, seed: int = 0, workers: int = 1,
             time_it: bool = False) -> dict:
     """Run ``iters`` cached fetches over a Zipf stream; count routed uniques.
@@ -79,12 +92,17 @@ def measure(n_nodes: int, dim: int, requests: int, iters: int,
     Runs the REAL ``fetch_rows`` path under shard_map (the all_to_all
     routes between ``workers`` devices when more than one is forced), so
     ``FetchStats.n_unique`` is the number of ids that genuinely went — or,
-    at W=1, would go — to their owner.  Every worker draws its own iid
-    Zipf stream (distinct per-worker request mixes are exactly what
-    separates sharded from replicated placement).  Counters are summed
-    over ALL workers.  ``cache_rows`` is the main-tier (L2) size; tiered
-    mode adds ``l1_rows`` replicated L1 slots, so total per-worker rows
-    are ``cache_rows + l1_rows``.
+    at W=1, would go — to their owner, and ``probe_round_bytes`` is the
+    byte size of the buffers the probe round actually shipped.  Every
+    worker draws its own iid Zipf stream (distinct per-worker request
+    mixes are exactly what separates sharded from replicated placement).
+    Counters are summed over ALL workers except ``probe_hit_peak``, which
+    is max-reduced (it bounds the ``hit_cap`` a compact response needs).
+    ``cache_rows`` is the main-tier (L2) size; tiered mode adds
+    ``l1_rows`` replicated L1 slots, so total per-worker rows are
+    ``cache_rows + l1_rows``.  ``wire``/``hit_cap`` select the probe-round
+    response format (``CacheConfig.wire``; dense here by default so the
+    sweep's first pass can observe the hit peak the compact pass needs).
     """
     import jax
     import jax.numpy as jnp
@@ -104,7 +122,8 @@ def measure(n_nodes: int, dim: int, requests: int, iters: int,
     cached = cache_rows > 0
     cfg = CacheConfig(n_rows=cache_rows, admit=admit, assoc=assoc,
                       mode=mode, l1_rows=l1_rows if mode == "tiered" else 0,
-                      l1_promote=l1_promote).validated() if cached else None
+                      l1_promote=l1_promote, wire=wire,
+                      hit_cap=hit_cap).validated() if cached else None
 
     # each worker fetches rows for ITS OWN stream, so the fetched block is
     # per-worker data — it must leave the shard_map sharded, not stamped
@@ -146,30 +165,27 @@ def measure(n_nodes: int, dim: int, requests: int, iters: int,
     sum_local_hits = 0
     sum_l1_hits = 0
     sum_bytes_saved = 0
-    probe_round_ids = 0
+    probe_round_bytes = 0
+    probe_demoted = 0
+    probe_hit_peak = 0
     dropped = 0
     for ids in streams:
         if cached:
             out, state, (fs, cs) = run(table_j, ids, state)
-            n_hits = int(np.asarray(cs.n_hits).sum())
-            n_l1 = int(np.asarray(cs.n_l1_hits).sum())
-            n_miss = int(np.asarray(cs.n_misses).sum())
-            sum_hits += n_hits
-            sum_l1_hits += n_l1
+            sum_hits += int(np.asarray(cs.n_hits).sum())
+            sum_l1_hits += int(np.asarray(cs.n_l1_hits).sum())
             sum_local_hits += int(np.asarray(cs.n_local_hits).sum())
             sum_bytes_saved += int(np.asarray(cs.bytes_saved).sum())
-            if mode in ("sharded", "tiered"):
-                # ids this mode carried on the shard-probe round: every
-                # distinct id (= hits + misses, by conservation) minus the
-                # L1 hits that never left the requester
-                probe_round_ids += n_hits + n_miss - n_l1
+            probe_demoted += int(np.asarray(cs.n_probe_demoted).sum())
+            probe_hit_peak = max(probe_hit_peak,
+                                 int(np.asarray(cs.probe_hit_peak).max()))
+            # MEASURED: the byte size of the buffers every worker actually
+            # shipped on the shard-probe all_to_all this iteration
+            probe_round_bytes += int(np.asarray(fs.probe_round_bytes).sum())
         else:
             out, fs = run(table_j, ids)
         sum_unique += int(np.asarray(fs.n_unique).sum())
         dropped += int(np.asarray(fs.n_dropped).sum())
-    # per probed id: the int32 id rides out, a hit byte and the [D] f32
-    # row ride back (what a compacted probe transport would ship)
-    probe_slot_bytes = 4 + 1 + 4 * dim
     rec = {
         "cache_rows": cache_rows,
         "l1_rows": l1_rows if (cached and mode == "tiered") else 0,
@@ -178,14 +194,18 @@ def measure(n_nodes: int, dim: int, requests: int, iters: int,
         "admit": admit,
         "assoc": assoc,
         "mode": mode if cached else None,
+        "wire": (wire if (cached and mode in ("sharded", "tiered")
+                          and workers > 1) else None),
+        "hit_cap": hit_cap if cached else 0,
         "sum_n_unique": sum_unique,
         "sum_hits": sum_hits,
         "sum_l1_hits": sum_l1_hits,
         "sum_local_hits": sum_local_hits,
         "sum_shard_hits": sum_hits - sum_local_hits - sum_l1_hits,
         "sum_bytes_saved": sum_bytes_saved,
-        "probe_round_ids": probe_round_ids,
-        "probe_round_bytes": probe_round_ids * probe_slot_bytes,
+        "probe_round_bytes": probe_round_bytes,
+        "probe_demoted": probe_demoted,
+        "probe_hit_peak": probe_hit_peak,
         "dropped": dropped,
         "hit_rate": sum_hits / max(sum_hits + sum_unique, 1),
     }
@@ -198,15 +218,29 @@ def measure(n_nodes: int, dim: int, requests: int, iters: int,
     return rec
 
 
+def calibrated_hit_cap(peak: int) -> int:
+    """Compact payload bound from a dense pass's observed hit peak.
+
+    Peak plus a ~12% skew margin (floored at 8 rows): the compact pass
+    must not demote on the same stream the peak was measured on, but a
+    bound tracking the peak tightly is exactly what makes the response
+    scale with hits."""
+    return max(peak + max(peak // 8, 8), 1)
+
+
 def sweep(*, smoke: bool = False, workers: int = 1, iters: int = None,
           seed: int = 0, assoc: int = 2, time_it: bool = False) -> dict:
-    """Three-way placement sweep at EQUAL total per-worker rows.
+    """Three-way placement sweep at EQUAL total per-worker rows, each
+    probe-round mode under both wire formats.
 
     Every swept size ``c`` is the TOTAL per-worker row budget: replicated
     and sharded spend all of it on their single tier; tiered splits it
     half L1 / half L2 (the only power-of-two partition of a power-of-two
     budget — both tiers hash with the top-bits trick, so both must be
-    powers of two)."""
+    powers of two).  Sharded/tiered cells run twice: a dense pass that
+    also observes the per-destination hit peak, then a compact pass with
+    ``hit_cap = calibrated_hit_cap(peak)`` — the same peak-plus-margin
+    policy the launcher's ladder converges to."""
     n_nodes = 20_000 if smoke else 200_000
     dim = 32 if smoke else 128
     requests = 4_096 if smoke else 16_384
@@ -227,6 +261,16 @@ def sweep(*, smoke: bool = False, workers: int = 1, iters: int = None,
             rec["unique_reduction"] = 1.0 - rec["sum_n_unique"] / max(
                 base["sum_n_unique"], 1)
             results.append(rec)
+            if rec["wire"] is None:
+                continue        # no probe round -> nothing to compact
+            hc = calibrated_hit_cap(rec["probe_hit_peak"])
+            crec = measure(n_nodes, dim, requests, iters, l2, seed=seed,
+                           assoc=assoc, mode=mode, l1_rows=l1,
+                           wire="compact", hit_cap=hc,
+                           workers=workers, time_it=time_it)
+            crec["unique_reduction"] = 1.0 - crec["sum_n_unique"] / max(
+                base["sum_n_unique"], 1)
+            results.append(crec)
     return {
         "benchmark": "feature_cache",
         "zipf_a": 1.1,
@@ -244,17 +288,19 @@ def _row_name(r: dict) -> str:
     name = f"feature_cache_rows_{r['total_rows']}"
     if r.get("mode"):
         name += f"_{r['mode']}"
+    if r.get("wire"):
+        name += f"_{r['wire']}"
     return name
 
 
 def check_baseline(rec: dict, baseline: dict, tol: float = 0.05) -> list:
-    """Compare each (total_rows, mode) cell's unique_reduction against a
-    checked-in baseline; return failure strings for any cell whose
-    reduction fell more than ``tol`` RELATIVE (the nightly regression
-    gate).  Cells missing on either side are skipped — adding a new size
-    or mode must not fail the old baseline."""
+    """Compare each (total_rows, mode, wire) cell's unique_reduction
+    against a checked-in baseline; return failure strings for any cell
+    whose reduction fell more than ``tol`` RELATIVE (the nightly
+    regression gate).  Cells missing on either side are skipped — adding
+    a new size, mode, or wire must not fail the old baseline."""
     def key(r):
-        return (r.get("total_rows"), r.get("mode"))
+        return (r.get("total_rows"), r.get("mode"), r.get("wire"))
 
     have = {key(r): r for r in rec["results"] if r.get("mode")}
     failures = []
@@ -319,8 +365,12 @@ def main() -> None:
                 f",hit_rate={r['hit_rate']:.3f}")
         if red is not None:
             line += f",unique_reduction={red:.3f}"
-        if r.get("mode") in ("sharded", "tiered"):
-            line += f",probe_round_bytes={r['probe_round_bytes']}"
+        if r.get("wire"):
+            line += (f",wire={r['wire']}"
+                     f",probe_round_bytes={r['probe_round_bytes']}")
+            if r["wire"] == "compact":
+                line += (f",hit_cap={r['hit_cap']}"
+                         f",demoted={r['probe_demoted']}")
         if r.get("mode") == "tiered":
             line += (f",l1_hit_share="
                      f"{r['sum_l1_hits'] / max(r['sum_hits'], 1):.3f}")
@@ -337,31 +387,63 @@ def main() -> None:
               file=sys.stderr)
         failed = True
     if args.workers > 1:
-        by_size = {}
+        cells = {}
         for r in rec["results"]:
             if r.get("mode"):
-                by_size.setdefault(r["total_rows"], {})[r["mode"]] = r
-        for c, recs in sorted(by_size.items()):
-            rep, sh = recs.get("replicated"), recs.get("sharded")
-            ti = recs.get("tiered")
+                cells[(r["total_rows"], r["mode"], r.get("wire"))] = r
+        for c in sorted({k[0] for k in cells}):
+            rep = cells.get((c, "replicated", None))
+            sh_d = cells.get((c, "sharded", "dense"))
+            sh_c = cells.get((c, "sharded", "compact"))
+            ti_d = cells.get((c, "tiered", "dense"))
+            ti_c = cells.get((c, "tiered", "compact"))
             # the sharded claim: strictly more unique hits than replication
             # at EQUAL total per-worker rows, for every swept size
-            if rep and sh and sh["sum_hits"] <= rep["sum_hits"]:
-                print(f"WARNING: sharded hits {sh['sum_hits']} <= replicated "
-                      f"{rep['sum_hits']} at total_rows={c}", file=sys.stderr)
+            if rep and sh_d and sh_d["sum_hits"] <= rep["sum_hits"]:
+                print(f"WARNING: sharded hits {sh_d['sum_hits']} <= "
+                      f"replicated {rep['sum_hits']} at total_rows={c}",
+                      file=sys.stderr)
                 failed = True
-            # the tiered claim: the L1 head keeps distinct ids OFF the
-            # probe round — strictly fewer probe-round bytes than sharded
-            # at equal total rows, with the L1 serving >= 20% of all hits
-            # without any network at all
-            if sh and ti:
-                if ti["probe_round_bytes"] >= sh["probe_round_bytes"]:
-                    print(f"WARNING: tiered probe bytes "
-                          f"{ti['probe_round_bytes']} >= sharded "
-                          f"{sh['probe_round_bytes']} at total_rows={c}",
+            # the compact-wire claim, per probe-round mode: MEASURED bytes
+            # strictly below dense, by at least the probe round's miss
+            # fraction (the response is the dominant direction, and only
+            # its hit slots carry data)
+            for mode, d, k in (("sharded", sh_d, sh_c),
+                               ("tiered", ti_d, ti_c)):
+                if not (d and k):
+                    continue
+                if k["probe_round_bytes"] >= d["probe_round_bytes"]:
+                    print(f"WARNING: {mode} compact probe bytes "
+                          f"{k['probe_round_bytes']} >= dense "
+                          f"{d['probe_round_bytes']} at total_rows={c}",
                           file=sys.stderr)
                     failed = True
-                l1_share = ti["sum_l1_hits"] / max(ti["sum_hits"], 1)
+                # ids the probe round carried = hits it served (L1 hits
+                # never enter it) + misses; the miss fraction of THOSE
+                carried = (d["sum_hits"] - d["sum_l1_hits"]
+                           + d["sum_n_unique"])
+                miss_frac = d["sum_n_unique"] / max(carried, 1)
+                reduction = 1.0 - (k["probe_round_bytes"]
+                                   / max(d["probe_round_bytes"], 1))
+                if reduction < miss_frac:
+                    print(f"WARNING: {mode} compact reduction "
+                          f"{reduction:.1%} < probe-round miss fraction "
+                          f"{miss_frac:.1%} at total_rows={c}",
+                          file=sys.stderr)
+                    failed = True
+            # the tiered claim: the L1 head keeps distinct ids OFF the
+            # probe round, so its hit peak — and therefore its compact
+            # payload — stays strictly below sharded at equal total rows,
+            # with the L1 serving >= 20% of all hits without any network
+            if sh_c and ti_c:
+                if ti_c["probe_round_bytes"] >= sh_c["probe_round_bytes"]:
+                    print(f"WARNING: tiered compact probe bytes "
+                          f"{ti_c['probe_round_bytes']} >= sharded "
+                          f"{sh_c['probe_round_bytes']} at total_rows={c}",
+                          file=sys.stderr)
+                    failed = True
+            if ti_d:
+                l1_share = ti_d["sum_l1_hits"] / max(ti_d["sum_hits"], 1)
                 if l1_share < 0.20:
                     print(f"WARNING: L1 serves only {l1_share:.1%} of tiered "
                           f"hits at total_rows={c} (need >= 20%)",

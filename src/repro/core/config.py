@@ -11,11 +11,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
-#: cache associativities the probe/insert paths implement and the cache
-#: placement modes — defined HERE (jax-free) so ModelConfig validation and
-#: core/feature_cache.py (which imports jax) share one source of truth
+#: cache associativities the probe/insert paths implement, the cache
+#: placement modes, and the shard-probe wire formats — defined HERE
+#: (jax-free) so ModelConfig validation and core/feature_cache.py (which
+#: imports jax) share one source of truth
 VALID_CACHE_ASSOC = (1, 2, 4)
 VALID_CACHE_MODES = ("replicated", "sharded", "tiered")
+VALID_CACHE_WIRES = ("dense", "compact")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +95,20 @@ class ModelConfig:
                                # promoted into its L1 — the frequency
                                # threshold that migrates the hottest rows
                                # to every worker without a broadcast
+    cache_wire: str = "compact"
+                               # shard-probe response wire format (sharded/
+                               # tiered modes, W > 1): "dense" ships the
+                               # full [W, cap, D] row block back even
+                               # though only hit slots carry data;
+                               # "compact" ships a packed hit bitmap plus
+                               # a row payload bounded by cache_hit_cap —
+                               # stage-1 bytes then scale with hits, not
+                               # with the probe capacity
+    cache_hit_cap: int = 0     # compact wire: per-destination row-payload
+                               # slots of the probe response; 0 = auto
+                               # (half the probe capacity; launch/train.py
+                               # calibrates a tighter bound from observed
+                               # hit peaks, with a dense-fallback rung)
     capacity_slack: Optional[float] = None
                                # per-destination shuffle capacity slack;
                                # None = launcher auto-sizes from n_dropped
@@ -134,6 +150,14 @@ class ModelConfig:
         if self.cache_l1_promote < 1:
             raise ValueError(
                 f"cache_l1_promote must be >= 1, got {self.cache_l1_promote}")
+        if self.cache_wire not in VALID_CACHE_WIRES:
+            raise ValueError(
+                f"cache_wire must be one of {VALID_CACHE_WIRES}, "
+                f"got {self.cache_wire!r}")
+        if self.cache_hit_cap < 0:
+            raise ValueError(
+                f"cache_hit_cap must be >= 0 (0 = auto), "
+                f"got {self.cache_hit_cap}")
         # deliberately NO cross-field mode check here: launchers override
         # one field at a time with dataclasses.replace, so a tiered arch
         # config being switched to --cache-mode sharded must not trip over

@@ -59,6 +59,17 @@ Three placement modes (``CacheConfig.mode``):
            the ``TieredCache`` pytree ``(l1, l2)`` of two
            ``FeatureCache``s.
 
+Two probe-round wire formats (``CacheConfig.wire``, sharded/tiered at
+W > 1): **dense** ships the full ``[W, cap, D]`` row block back from the
+shard holders even though only hit slots carry data; **compact** (the
+default) ships a packed hit bitmap plus a row payload bounded by
+``hit_cap`` rows per destination — stage-1 bytes then scale with hits
+instead of probe capacity.  The codec lives here
+(``pack_hit_bitmap``/``unpack_hit_bitmap``,
+``compact_hit_rows``/``expand_hit_rows``); the routing that uses it is
+``generation._shard_probe``, and docs/ARCHITECTURE.md has the per-mode
+byte table.
+
 The cache is **per-worker state**: every worker keeps its own [C] keys +
 [C, D] rows, threaded *functionally* through the generation step
 (shard_map worker takes and returns it), the pipelined step (the carry
@@ -91,7 +102,8 @@ _SHARD_K = np.uint32(0x85EBCA6B)
 # jax-free config module (ModelConfig validates against the same tuples);
 # re-exported here under the names the kernels import
 from .config import (VALID_CACHE_ASSOC as VALID_ASSOC,
-                     VALID_CACHE_MODES as VALID_MODES)
+                     VALID_CACHE_MODES as VALID_MODES,
+                     VALID_CACHE_WIRES as VALID_WIRES)
 
 
 class CacheConfig(NamedTuple):
@@ -110,9 +122,21 @@ class CacheConfig(NamedTuple):
                          # total device rows become l1_rows + n_rows)
     l1_promote: int = 3  # tiered mode only: observations of a row before
                          # it is promoted into this worker's L1
+    wire: str = "compact"      # shard-probe response wire format,
+                               # "dense" | "compact" (see module doc; only
+                               # meaningful where a probe round runs —
+                               # sharded/tiered modes at W > 1)
+    hit_cap: int = 0     # compact wire only: per-destination row-payload
+                         # slots of the probe response (0 = auto: half the
+                         # probe capacity).  Hits beyond the bound are
+                         # DEMOTED to misses by the shard holder — they
+                         # fall through to the owner fetch, a lost hit
+                         # opportunity but never a correctness loss.
 
     @property
     def n_sets(self) -> int:
+        """Hash sets of the main tier: ``n_rows // assoc`` (set ``s``
+        owns the ``assoc`` consecutive slots starting at ``s * assoc``)."""
         return self.n_rows // self.assoc
 
     @property
@@ -132,11 +156,18 @@ class CacheConfig(NamedTuple):
 
     def l2_config(self) -> "CacheConfig":
         """The L2 tier as a standalone sharded policy (the pre-tiered
-        sharded cache, unchanged)."""
+        sharded cache, unchanged); the wire format travels with it —
+        the L2's probe round is the one the codec compacts."""
         return CacheConfig(n_rows=self.n_rows, admit=self.admit,
-                           assoc=self.assoc, mode="sharded")
+                           assoc=self.assoc, mode="sharded",
+                           wire=self.wire, hit_cap=self.hit_cap)
 
     def validated(self) -> "CacheConfig":
+        """Self after strict cross-field validation (raises ``ValueError``
+        on any inconsistent policy — e.g. a non-power-of-two tier size,
+        an L1 knob outside tiered mode, or an unknown wire format).
+        Call it wherever a ``CacheConfig`` is final; ``from_model``
+        already does."""
         if self.n_rows <= 0:
             raise ValueError(f"cache n_rows must be > 0, got {self.n_rows}")
         if self.n_rows & (self.n_rows - 1):
@@ -171,6 +202,12 @@ class CacheConfig(NamedTuple):
         elif self.l1_rows:
             raise ValueError(
                 f"l1_rows is a tiered-mode knob; mode is {self.mode!r}")
+        if self.wire not in VALID_WIRES:
+            raise ValueError(
+                f"cache wire must be one of {VALID_WIRES}, got {self.wire!r}")
+        if self.hit_cap < 0:
+            raise ValueError(
+                f"hit_cap must be >= 0 (0 = auto), got {self.hit_cap}")
         return self
 
     @classmethod
@@ -189,7 +226,9 @@ class CacheConfig(NamedTuple):
             l1 = cfg.cache_l1_rows or max(cfg.cache_rows // 8, l1_assoc)
         return cls(n_rows=cfg.cache_rows, admit=cfg.cache_admit,
                    assoc=cfg.cache_assoc, mode=cfg.cache_mode,
-                   l1_rows=l1, l1_promote=cfg.cache_l1_promote).validated()
+                   l1_rows=l1, l1_promote=cfg.cache_l1_promote,
+                   wire=cfg.cache_wire,
+                   hit_cap=cfg.cache_hit_cap).validated()
 
 
 class FeatureCache(NamedTuple):
@@ -211,6 +250,7 @@ class FeatureCache(NamedTuple):
 
     @property
     def n_rows(self) -> int:
+        """Slot count ``C`` of this cache state (``keys.shape[-1]``)."""
         return self.keys.shape[-1]
 
 
@@ -245,7 +285,17 @@ class CacheStats(NamedTuple):
     ``n_misses`` (unique probes routed to their owner) the conservation
     invariant ``n_l1_hits + n_local_hits + n_shard_hits + n_misses ==
     n_unique`` holds for every mode.  ``bytes_saved`` counts only the
-    network-free populations (L1 + local)."""
+    network-free populations (L1 + local).
+
+    The last two fields are HOLDER-side probe-round telemetry (this
+    worker acting as a shard holder, not as a requester):
+    ``n_probe_demoted`` counts hits the compact wire's ``hit_cap`` bound
+    demoted to misses this round (they fall through to the requester's
+    owner fetch — sum over workers for the global count; always 0 on the
+    dense wire), and ``probe_hit_peak`` is the largest per-destination
+    hit count this holder produced BEFORE demotion (max — not sum — over
+    workers bounds the ``hit_cap`` a compact probe response needs; the
+    hit-cap calibration reads it off a dense measurement pass)."""
     n_hits: jax.Array        # unique probes served from the cache tier
     n_misses: jax.Array      # unique probes routed to their owner
     n_inserted: jax.Array    # rows admitted into THIS worker's tiers
@@ -254,6 +304,12 @@ class CacheStats(NamedTuple):
     n_shard_hits: jax.Array  # hits served by a remote cache shard
     n_l1_hits: jax.Array     # hits served by the replicated L1 (no probe
                              # round either; 0 outside tiered mode)
+    n_probe_demoted: jax.Array
+                             # holder-side: probe hits demoted to misses
+                             # by the compact wire's hit_cap bound
+    probe_hit_peak: jax.Array
+                             # holder-side: max per-destination probe hits
+                             # before demotion (0 when no probe round ran)
 
 
 def hash_slots(ids: jax.Array, n_sets: int) -> jax.Array:
@@ -284,6 +340,114 @@ def shard_of(ids: jax.Array, n_workers: int) -> jax.Array:
     h = ids.astype(jnp.uint32) * _SHARD_K
     h = jax.lax.shift_right_logical(h, jnp.uint32(16))
     return (h % np.uint32(n_workers)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Probe-round wire codec (``CacheConfig.wire == "compact"``)
+#
+# The dense shard-probe response ships a full [cap, D] row block per
+# destination even though only the hit slots carry data.  The compact
+# format ships (a) a PACKED hit bitmap — one bit per probe slot, 32 slots
+# per uint32 word — and (b) a row payload holding only the hit rows, in
+# slot order, bounded by ``hit_cap``.  The holder compacts (prefix-sum
+# gather), the requester re-expands (prefix-sum scatter-free gather), and
+# the rows are bit-identical to the dense response for every slot whose
+# bit survives.  Hits beyond ``hit_cap`` are DEMOTED: the holder clears
+# their bit, so the requester treats them as misses and owner-fetches —
+# a lost hit opportunity, never a correctness loss (the same contract as
+# probe-capacity overflow).
+# ---------------------------------------------------------------------------
+
+#: probe slots per packed bitmap word (the bitmap dtype is uint32)
+WIRE_WORD_BITS = 32
+
+
+def hit_bitmap_words(n_slots: int) -> int:
+    """uint32 words a packed bitmap of ``n_slots`` probe slots occupies."""
+    if n_slots < 0:
+        raise ValueError(f"n_slots must be >= 0, got {n_slots}")
+    return -(-n_slots // WIRE_WORD_BITS)
+
+
+def pack_hit_bitmap(hit: jax.Array) -> jax.Array:
+    """Pack a hit vector into bitmap words: [..., R] bool -> [..., W] uint32.
+
+    Slot ``s`` maps to bit ``s % 32`` of word ``s // 32``
+    (``W == hit_bitmap_words(R)``); pad bits beyond ``R`` are zero.
+    Inverse of ``unpack_hit_bitmap``."""
+    r = hit.shape[-1]
+    words = hit_bitmap_words(r)
+    pad = words * WIRE_WORD_BITS - r
+    if pad:
+        hit = jnp.concatenate(
+            [hit, jnp.zeros(hit.shape[:-1] + (pad,), jnp.bool_)], axis=-1)
+    bits = hit.reshape(hit.shape[:-1] + (words, WIRE_WORD_BITS))
+    weight = jnp.left_shift(
+        jnp.uint32(1), jnp.arange(WIRE_WORD_BITS, dtype=jnp.uint32))
+    return jnp.sum(bits.astype(jnp.uint32) * weight, axis=-1,
+                   dtype=jnp.uint32)
+
+
+def unpack_hit_bitmap(words: jax.Array, n_slots: int) -> jax.Array:
+    """Unpack bitmap words back to a hit vector:
+    [..., W] uint32 -> [..., n_slots] bool (pad bits discarded).
+    Inverse of ``pack_hit_bitmap``."""
+    if hit_bitmap_words(n_slots) != words.shape[-1]:
+        raise ValueError(
+            f"{words.shape[-1]} bitmap words cannot encode {n_slots} slots "
+            f"(expected {hit_bitmap_words(n_slots)})")
+    shift = jnp.arange(WIRE_WORD_BITS, dtype=jnp.uint32)
+    bits = jnp.bitwise_and(
+        jnp.right_shift(words[..., :, None], shift), jnp.uint32(1))
+    flat = bits.reshape(words.shape[:-1]
+                        + (words.shape[-1] * WIRE_WORD_BITS,))
+    return flat[..., :n_slots].astype(jnp.bool_)
+
+
+def compact_hit_rows(
+    hit: jax.Array, rows: jax.Array, hit_cap: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Holder-side payload compaction (per destination).
+
+    ``hit`` [..., R] bool, ``rows`` [..., R, D] -> ``(kept [..., R] bool,
+    payload [..., hit_cap, D])``: ``kept`` marks the first ``hit_cap``
+    hits per destination (later hits are demoted — their rows are NOT in
+    the payload, so the bitmap shipped over the wire must be ``kept``,
+    never the raw ``hit``); ``payload[..., p, :]`` is the row of the
+    ``p``-th kept slot in slot order, zeros beyond the kept count.
+
+    ``hit_cap`` is clamped to the slot count ``R`` (a payload bound wider
+    than the probe block cannot ship more rows than the dense response —
+    at ``hit_cap >= R`` nothing is ever demoted)."""
+    if hit_cap < 0:
+        raise ValueError(f"hit_cap must be >= 0, got {hit_cap}")
+    hit_cap = min(hit_cap, hit.shape[-1])
+    cs = jnp.cumsum(hit.astype(jnp.int32), axis=-1)        # inclusive
+    kept = jnp.logical_and(hit, cs <= hit_cap)
+    # slot indices of the hits, first, in slot order (stable sort keeps
+    # ascending slot order inside the hit group)
+    order = jnp.argsort(~hit, axis=-1, stable=True)
+    sel = order[..., :hit_cap]                             # [..., hit_cap]
+    n_kept = jnp.minimum(cs[..., -1:], hit_cap)            # [..., 1]
+    pvalid = jnp.arange(hit_cap, dtype=jnp.int32) < n_kept
+    payload = jnp.take_along_axis(rows, sel[..., None], axis=-2)
+    return kept, jnp.where(pvalid[..., None], payload, 0)
+
+
+def expand_hit_rows(kept: jax.Array, payload: jax.Array) -> jax.Array:
+    """Requester-side payload re-expansion (per holder).
+
+    Inverse of ``compact_hit_rows``: ``kept`` [..., R] bool (the unpacked
+    wire bitmap), ``payload`` [..., hit_cap, D] -> ``rows`` [..., R, D]
+    with the ``p``-th kept slot carrying ``payload[..., p, :]`` and zeros
+    everywhere else — bit-identical to the dense response on kept slots."""
+    hit_cap = payload.shape[-2]
+    if hit_cap == 0:
+        return jnp.zeros(kept.shape + (payload.shape[-1],), payload.dtype)
+    pos = jnp.cumsum(kept.astype(jnp.int32), axis=-1) - 1  # exclusive rank
+    idx = jnp.clip(pos, 0, hit_cap - 1)
+    rows = jnp.take_along_axis(payload, idx[..., None], axis=-2)
+    return jnp.where(kept[..., None], rows, 0)
 
 
 def init_cache(n_rows: int, dim: int, dtype=jnp.float32) -> FeatureCache:
@@ -362,6 +526,13 @@ def set_probe_impl(impl: str) -> None:
     if impl not in ("jnp", "pallas"):
         raise ValueError(f"probe impl must be 'jnp' or 'pallas', got {impl!r}")
     _PROBE_IMPL = impl
+
+
+def get_probe_impl() -> str:
+    """The module-level probe implementation (``"jnp"`` | ``"pallas"``)
+    cached fetches trace with when the caller does not pick one
+    explicitly — see ``set_probe_impl`` for the trace-time contract."""
+    return _PROBE_IMPL
 
 
 def cache_probe(

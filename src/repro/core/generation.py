@@ -66,10 +66,18 @@ tiered flow (the other modes run a subset of it):
   stage 1 (shard probe)  — the remaining ids are routed to their
            *cache-shard* worker (``shard_of(id, W)``) with one
            ``all_to_all`` probe round; the shard holder probes its local
-           tier and returns (hit, row) — DistDGL-style "ask the worker
-           whose CACHE holds a hot row, not its owner".  In tiered mode
-           the round carries only L1 *misses*, so its wire bytes shrink
-           by the L1 hit fraction.  [sharded + tiered]
+           tier and responds — DistDGL-style "ask the worker whose CACHE
+           holds a hot row, not its owner".  The RESPONSE rides one of
+           two wire formats (``CacheConfig.wire``): **dense** ships the
+           full ``[W, cap, D]`` row block back even though only hit
+           slots carry data, **compact** (the default) ships a packed
+           hit bitmap plus a row payload compacted to ``hit_cap`` rows
+           per destination — stage-1 bytes then scale with *hits*, not
+           with the probe capacity.  In tiered mode the round carries
+           only L1 *misses*, so its wire bytes shrink by the L1 hit
+           fraction — and the compact payload compounds the saving
+           (fewer probe hits support a tighter ``hit_cap``).
+           [sharded + tiered]
   stage 2 (owner fetch)  — only shard-*misses* fall through to the routed
            owner fetch; the served rows then ride one more ``all_to_all``
            back to the shard holders (reusing the probe round's slot
@@ -107,8 +115,12 @@ from jax.experimental.shard_map import shard_map
 from ..graph.subgraph import SubgraphBatch
 from .feature_cache import (CacheConfig, CacheStats, FeatureCache,
                             TieredCache, cache_insert, cache_probe,
-                            init_cache_state, restore_worker_axis, shard_of,
-                            squeeze_worker_axis, tiered_probe)
+                            compact_hit_rows, expand_hit_rows,
+                            get_probe_impl, hit_bitmap_words,
+                            init_cache_state, pack_hit_bitmap,
+                            restore_worker_axis, shard_of,
+                            squeeze_worker_axis, tiered_probe,
+                            unpack_hit_bitmap)
 from .partition import PartitionedGraph
 from .tree_reduce import axis_size, tree_allreduce, tree_reduce_scatter
 
@@ -119,12 +131,23 @@ class Candidates(NamedTuple):
 
 
 class FetchStats(NamedTuple):
-    """Telemetry from one ``fetch_rows`` shuffle (per-worker scalars)."""
+    """Telemetry from one ``fetch_rows`` shuffle (per-worker scalars).
+
+    ``probe_round_bytes`` is MEASURED, not estimated: it is the byte size
+    of the buffers this worker actually ships on the stage-1 shard-probe
+    round (ids up, plus the hit/row response down — dense or compact per
+    ``CacheConfig.wire``), computed from the static exchange shapes the
+    compiled program moves.  It is 0 whenever no probe round runs
+    (uncached, replicated mode, or W == 1); summing it over workers and
+    iterations gives the total probe-round wire volume a run paid."""
     n_requests: jax.Array   # request slots presented (incl. duplicates)
     n_unique: jax.Array     # distinct ids actually routed over the wire
     n_dropped: jax.Array    # request SLOTS zero-filled by the capacity
                             # bound (a dropped unique id counts once per
                             # duplicate slot it would have served)
+    probe_round_bytes: jax.Array
+                            # bytes this worker shipped on the shard-probe
+                            # all_to_all round (0 = no probe round ran)
 
 
 def local_candidates(
@@ -189,6 +212,21 @@ def dedup_requests(ids: jax.Array):
     inverse = jnp.zeros((r,), jnp.int32).at[order].set(group)
     valid = jnp.arange(r, dtype=jnp.int32) < n_unique
     return uniq, inverse, valid, n_unique
+
+
+def probe_round_capacity(n_requests: int, n_workers: int,
+                         capacity_slack: float = 2.0) -> int:
+    """Per-destination slot count of the slack-sized exchange rounds.
+
+    THE sizing formula ``fetch_rows`` uses for the owner exchange (before
+    dedup clamping / explicit ``capacity``) and for the shard-probe round
+    (always — the probe round carries ALL distinct ids, see
+    ``fetch_rows``): ``min(R, ceil(R / W) * slack + 8)``.  Exposed so the
+    launcher's hit-cap calibration derives its ladder rungs from the SAME
+    capacity the compiled fetch will use — a reimplementation that
+    drifted would calibrate a bound for buffers that do not exist."""
+    return int(min(n_requests,
+                   -(-n_requests // n_workers) * capacity_slack + 8))
 
 
 class _RoutePlan(NamedTuple):
@@ -261,6 +299,28 @@ def _routed_fetch(
     return out.at[plan.order].set(got), served
 
 
+class _WireStats(NamedTuple):
+    """Holder-side probe-round telemetry one ``_shard_probe`` produces.
+
+    ``n_demoted``/``hit_peak`` are per-worker int32 scalars (see
+    ``CacheStats``); ``probe_bytes`` is the MEASURED per-worker byte cost
+    of the round — a static python int derived from the exchange buffer
+    shapes the compiled program actually ships."""
+    n_demoted: jax.Array    # hits the compact hit_cap bound demoted
+    hit_peak: jax.Array     # max per-destination hits before demotion
+    probe_bytes: int        # bytes this worker ships on the round
+
+
+def probe_hit_cap(cfg: CacheConfig, cap: int) -> int:
+    """Resolved compact-wire payload bound for a probe capacity ``cap``.
+
+    ``CacheConfig.hit_cap == 0`` auto-sizes to half the probe capacity —
+    a conservative 2x response-row saving that never demotes while fewer
+    than half the probe slots hit; an explicit (calibrated) ``hit_cap``
+    is clamped into ``[1, cap]``."""
+    return max(min(cfg.hit_cap or max(cap // 2, 1), cap), 1)
+
+
 def _shard_probe(
     cache: FeatureCache,
     cfg: CacheConfig,
@@ -273,12 +333,27 @@ def _shard_probe(
     """Stage-1 routing: probe each id against its CACHE-SHARD worker.
 
     One all_to_all round trip — ids ride to their shard holders, every
-    holder probes its local shard for everything it received, and
-    (hit, row) ride back.  Returns ``(hit [R], rows [R, D], plan,
-    recv_ids [w, cap])``; ids beyond the probe capacity simply miss (they
-    fall through to the owner fetch — a lost hit opportunity, never a
-    correctness loss).  ``plan``/``recv_ids`` feed ``_shard_admit`` so the
-    admission round reuses this round's slot assignment.
+    holder probes its local shard for everything it received, and the
+    response rides back in the wire format ``cfg.wire`` selects:
+
+      dense    — ``(hit [w, cap] bool, rows [w, cap, D])``: every probe
+                 slot ships a row slot back, hit or not.
+      compact  — ``(bitmap [w, words] uint32, payload [w, hit_cap, D])``:
+                 one bit per probe slot plus only the hit rows, compacted
+                 in slot order by the holder (``compact_hit_rows``) and
+                 re-expanded by the requester via the bitmap's prefix
+                 sums (``expand_hit_rows``) — bit-identical to the dense
+                 response for every surviving hit.  Hits beyond
+                 ``hit_cap`` per destination are DEMOTED to misses by
+                 the holder (bit cleared), falling through to the owner
+                 fetch exactly like probe-capacity overflow.
+
+    Returns ``(hit [R], rows [R, D], plan, recv_ids [w, cap], wire)``
+    where ``wire`` is the ``_WireStats`` telemetry; ids beyond the probe
+    capacity simply miss (they fall through to the owner fetch — a lost
+    hit opportunity, never a correctness loss).  ``plan``/``recv_ids``
+    feed ``_shard_admit`` so the admission round reuses this round's
+    slot assignment.
     """
     r = ids.shape[0]
     dest = jnp.where(valid, shard_of(ids, w), w)
@@ -290,18 +365,61 @@ def _shard_probe(
                                                       mode="drop")
     recv = lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0, tiled=True)
     flat = recv.reshape(-1)
-    hit_f, rows_f = cache_probe(cache, flat, valid=flat >= 0, cfg=cfg)
-    d = rows_f.shape[1]
-    hit_b = lax.all_to_all(hit_f.reshape(w, cap), axis_name,
-                           split_axis=0, concat_axis=0, tiled=True)
-    rows_b = lax.all_to_all(rows_f.reshape(w, cap, d), axis_name,
-                            split_axis=0, concat_axis=0, tiled=True)
+    d = cache.rows.shape[-1]
+    item = jnp.dtype(cache.rows.dtype).itemsize
+    probe_bytes = w * cap * 4                    # ids up, int32
+    if cfg.wire == "compact":
+        hc = probe_hit_cap(cfg, cap)
+        n_words = hit_bitmap_words(cap)
+        if get_probe_impl() == "pallas":
+            # fused probe+compact: never materializes the dense [w, cap, D]
+            # response block the compact wire exists to not ship; the
+            # raw (pre-demotion) bitmap rides along as a second kernel
+            # output, so ONE probe serves both the wire and the
+            # demotion/hit-peak telemetry
+            from ..kernels.ops import cache_probe_compact
+            words, raw_words, payload = cache_probe_compact(
+                cache.keys, cache.rows, recv, assoc=cfg.assoc, hit_cap=hc,
+                use_kernel=True)
+            kept = unpack_hit_bitmap(words, cap)
+            raw_hit = unpack_hit_bitmap(raw_words, cap)
+        else:
+            hit_f, rows_f = cache_probe(cache, flat, valid=flat >= 0,
+                                        cfg=cfg)
+            raw_hit = hit_f.reshape(w, cap)
+            kept, payload = compact_hit_rows(raw_hit,
+                                             rows_f.reshape(w, cap, d), hc)
+            words = pack_hit_bitmap(kept)
+        wire = _WireStats(
+            n_demoted=jnp.sum(jnp.logical_and(raw_hit, ~kept))
+            .astype(jnp.int32),
+            hit_peak=jnp.max(jnp.sum(raw_hit, axis=1)).astype(jnp.int32),
+            probe_bytes=probe_bytes + w * n_words * 4 + w * hc * d * item)
+        words_b = lax.all_to_all(words, axis_name,
+                                 split_axis=0, concat_axis=0, tiled=True)
+        pay_b = lax.all_to_all(payload, axis_name,
+                               split_axis=0, concat_axis=0, tiled=True)
+        hit_b = unpack_hit_bitmap(words_b, cap)
+        rows_b = expand_hit_rows(hit_b, pay_b)
+        row_dtype = payload.dtype
+    else:
+        hit_f, rows_f = cache_probe(cache, flat, valid=flat >= 0, cfg=cfg)
+        hit2 = hit_f.reshape(w, cap)
+        wire = _WireStats(
+            n_demoted=jnp.int32(0),
+            hit_peak=jnp.max(jnp.sum(hit2, axis=1)).astype(jnp.int32),
+            probe_bytes=probe_bytes + w * cap * 1 + w * cap * d * item)
+        hit_b = lax.all_to_all(hit2, axis_name,
+                               split_axis=0, concat_axis=0, tiled=True)
+        rows_b = lax.all_to_all(rows_f.reshape(w, cap, d), axis_name,
+                                split_axis=0, concat_axis=0, tiled=True)
+        row_dtype = rows_f.dtype
     g = (jnp.clip(plan.sorted_dest, 0, w - 1), jnp.clip(plan.slot_c, 0, cap - 1))
     got_hit = jnp.logical_and(hit_b[g], plan.ok)
     got_rows = jnp.where(got_hit[:, None], rows_b[g], 0)
     hit = jnp.zeros((r,), jnp.bool_).at[plan.order].set(got_hit)
-    hit_rows = jnp.zeros((r, d), rows_f.dtype).at[plan.order].set(got_rows)
-    return hit, hit_rows, plan, recv
+    hit_rows = jnp.zeros((r, d), row_dtype).at[plan.order].set(got_rows)
+    return hit, hit_rows, plan, recv, wire
 
 
 def _shard_admit(
@@ -342,17 +460,25 @@ class _TierProbe(NamedTuple):
     """What a cache-mode strategy's probe stage hands back to ``fetch_rows``.
 
     ``l1_hit``/``local``/(``hit`` minus both) are the disjoint hit
-    populations ``CacheStats`` reports; ``ctx`` is mode-private state the
-    matching admit stage consumes (e.g. the shard-probe ``_RoutePlan``)."""
+    populations ``CacheStats`` reports; ``wire`` is the probe round's
+    ``_WireStats`` telemetry (zeros / 0 bytes when no probe round ran);
+    ``ctx`` is mode-private state the matching admit stage consumes
+    (e.g. the shard-probe ``_RoutePlan``)."""
     hit: jax.Array       # [R] served by ANY cache tier
     rows: jax.Array      # [R, D] the serving tier's row copies
     l1_hit: jax.Array    # [R] subset served by the replicated L1 (tiered)
     local: jax.Array     # [R] subset served by THIS worker's main tier
+    wire: _WireStats     # probe-round wire telemetry (see _WireStats)
     ctx: tuple           # opaque probe context for the admit stage
 
 
 def _zeros_like_hits(ids):
     return jnp.zeros(ids.shape, jnp.bool_)
+
+
+def _no_wire() -> _WireStats:
+    """Wire telemetry of a fetch with no probe round (local probes only)."""
+    return _WireStats(jnp.int32(0), jnp.int32(0), 0)
 
 
 class _ReplicatedTier:
@@ -361,7 +487,8 @@ class _ReplicatedTier:
     @staticmethod
     def probe(cache, cfg, ids, valid, axis_name, cap, w):
         hit, rows = cache_probe(cache, ids, valid, cfg=cfg)
-        return _TierProbe(hit, rows, _zeros_like_hits(ids), hit, ())
+        return _TierProbe(hit, rows, _zeros_like_hits(ids), hit,
+                          _no_wire(), ())
 
     @staticmethod
     def admit(cache, cfg, probe, ids, fetched, should, axis_name, w):
@@ -377,12 +504,13 @@ class _ShardedTier:
     def probe(cache, cfg, ids, valid, axis_name, cap, w):
         if w == 1:
             hit, rows = cache_probe(cache, ids, valid, cfg=cfg)
-            return _TierProbe(hit, rows, _zeros_like_hits(ids), hit, ())
-        hit, rows, plan, recv = _shard_probe(cache, cfg, ids, valid,
-                                             axis_name, cap, w)
+            return _TierProbe(hit, rows, _zeros_like_hits(ids), hit,
+                              _no_wire(), ())
+        hit, rows, plan, recv, wire = _shard_probe(cache, cfg, ids, valid,
+                                                   axis_name, cap, w)
         local = jnp.logical_and(hit,
                                 shard_of(ids, w) == lax.axis_index(axis_name))
-        return _TierProbe(hit, rows, _zeros_like_hits(ids), local,
+        return _TierProbe(hit, rows, _zeros_like_hits(ids), local, wire,
                           (plan, recv))
 
     @staticmethod
@@ -407,18 +535,20 @@ class _TieredTier:
             # two-tier Pallas kernel when set_probe_impl('pallas'))
             l1_hit, l2_hit, rows = tiered_probe(cache, ids, valid, cfg=cfg)
             return _TierProbe(jnp.logical_or(l1_hit, l2_hit), rows,
-                              l1_hit, l2_hit, (None, None, l2_hit))
+                              l1_hit, l2_hit, _no_wire(),
+                              (None, None, l2_hit))
         l1_hit, l1_rows = cache_probe(cache.l1, ids, valid,
                                       cfg=cfg.l1_config())
-        # only L1 misses enter the probe round — the wire-byte win
+        # only L1 misses enter the probe round — the wire-byte win the
+        # compact codec compounds (fewer probe hits -> a tighter hit_cap)
         l2_valid = jnp.logical_and(valid, ~l1_hit)
-        l2_hit, l2_rows, plan, recv = _shard_probe(
+        l2_hit, l2_rows, plan, recv, wire = _shard_probe(
             cache.l2, cfg.l2_config(), ids, l2_valid, axis_name, cap, w)
         rows = jnp.where(l1_hit[:, None], l1_rows, l2_rows)
         local = jnp.logical_and(
             l2_hit, shard_of(ids, w) == lax.axis_index(axis_name))
         return _TierProbe(jnp.logical_or(l1_hit, l2_hit), rows, l1_hit,
-                          local, (plan, recv, l2_hit))
+                          local, wire, (plan, recv, l2_hit))
 
     @staticmethod
     def admit(cache, cfg, probe, ids, fetched, should, axis_name, w):
@@ -492,6 +622,17 @@ def fetch_rows(
     ``(out, new_cache, FetchStats, CacheStats)``, and ``n_unique`` counts
     only the ids that went to their owner.
 
+    The shard-probe round's RESPONSE rides the wire format
+    ``cache_cfg.wire`` selects: ``"dense"`` ships a full ``[W, cap, D]``
+    row block back (every probe slot pays a row slot, hit or not);
+    ``"compact"`` ships a packed hit bitmap plus a row payload bounded by
+    ``probe_hit_cap(cache_cfg, cap)`` rows per destination, so stage-1
+    bytes scale with hits instead of capacity (see ``_shard_probe``).
+    Hits beyond the bound are demoted to owner-fetched misses
+    (``CacheStats.n_probe_demoted``) — never a correctness loss.
+    ``FetchStats.probe_round_bytes`` reports the bytes the chosen format
+    actually shipped, measured from the static exchange buffer shapes.
+
     Per-destination OWNER capacity defaults to ``ceil(R/W) * slack``
     (clamped as above when dedup is on); pass an explicit ``capacity`` —
     e.g. sized to the steady-state cache-miss count by the warm
@@ -525,10 +666,11 @@ def fetch_rows(
         # the request shape is static — so skipping the collectives is
         # safe); counters are all zero by conservation
         out = jnp.zeros((0, table_local.shape[1]), table_local.dtype)
-        stats = FetchStats(jnp.int32(0), jnp.int32(0), jnp.int32(0))
+        stats = FetchStats(jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                           jnp.int32(0))
         if cache is not None:
             z = jnp.int32(0)
-            return out, cache, stats, CacheStats(z, z, z, z, z, z, z)
+            return out, cache, stats, CacheStats(z, z, z, z, z, z, z, z, z)
         if return_stats:
             return out, stats
         return out
@@ -539,12 +681,13 @@ def fetch_rows(
                 n_unique = dedup_requests(ids)[3].astype(jnp.int32)
             else:
                 n_unique = jnp.int32(r)
-            return out, FetchStats(jnp.int32(r), n_unique, jnp.int32(0))
+            return out, FetchStats(jnp.int32(r), n_unique, jnp.int32(0),
+                                   jnp.int32(0))
         return out
     # the probe round carries ALL distinct ids, so it is sized from the
     # request count even when an explicit miss-sized `capacity` shrinks
     # the owner exchange (see docstring)
-    slack_cap = int(min(r, -(-r // w) * capacity_slack + 8))
+    slack_cap = probe_round_capacity(r, w, capacity_slack)
     cap = capacity
     if cap is None:
         cap = slack_cap
@@ -597,7 +740,9 @@ def fetch_rows(
         cstats = CacheStats(
             n_hits=n_hits, n_misses=n_routed, n_inserted=n_ins,
             bytes_saved=(n_l1 + n_local) * row_bytes, n_local_hits=n_local,
-            n_shard_hits=n_hits - n_l1 - n_local, n_l1_hits=n_l1)
+            n_shard_hits=n_hits - n_l1 - n_local, n_l1_hits=n_l1,
+            n_probe_demoted=probe.wire.n_demoted,
+            probe_hit_peak=probe.wire.hit_peak)
         n_unique = n_routed          # ids that went to their owner
     else:
         out_u, served_u = fetched, served_r
@@ -610,7 +755,9 @@ def fetch_rows(
         out = out_u
         dropped = jnp.sum(~served_u)
     stats = FetchStats(jnp.int32(r), jnp.int32(n_unique),
-                       dropped.astype(jnp.int32))
+                       dropped.astype(jnp.int32),
+                       jnp.int32(probe.wire.probe_bytes if tier is not None
+                                 else 0))
     if cache is not None:
         return out, new_cache, stats, cstats
     if return_stats:
@@ -702,12 +849,14 @@ def _worker_generate(
             x_local, need, axis_name, capacity_slack=capacity_slack,
             capacity=fetch_capacity, cache=cache, cache_cfg=cache_cfg)
         n_hits, n_misses = cstats.n_hits, cstats.n_misses
+        n_demoted = cstats.n_probe_demoted
     else:
         feats, fstats = fetch_rows(x_local, need, axis_name,
                                    capacity_slack=capacity_slack,
                                    capacity=fetch_capacity,
                                    return_stats=True)
         n_hits, n_misses = jnp.int32(0), fstats.n_unique
+        n_demoted = jnp.int32(0)
     d = x_local.shape[1]
     x_seed = feats[:b]
     x_hops = []
@@ -735,6 +884,7 @@ def _worker_generate(
         n_dropped=(fstats.n_dropped + ystats.n_dropped)[None],
         n_cache_hits=n_hits[None],
         n_cache_misses=n_misses[None],
+        n_probe_demoted=n_demoted[None],
     )
     if cache is not None:
         return batch, cache

@@ -26,6 +26,13 @@ A batch of B seeds with fanouts ``(k_1, ..., k_L)`` is:
                                         cache (0 when the cache is off)
     n_cache_misses [W]                  int32 per-worker unique feature
                                         requests routed over the wire
+    n_probe_demoted [W]                 int32 per-worker (holder-side)
+                                        probe hits demoted to misses by
+                                        the compact wire's hit_cap bound
+                                        (0 on the dense wire / no cache;
+                                        a lost hit opportunity, never a
+                                        correctness loss — the launcher
+                                        calibrates hit_cap against it)
 """
 from __future__ import annotations
 
@@ -45,6 +52,7 @@ class SubgraphBatch(NamedTuple):
     n_dropped: jax.Array
     n_cache_hits: Optional[jax.Array] = None
     n_cache_misses: Optional[jax.Array] = None
+    n_probe_demoted: Optional[jax.Array] = None
 
     def cache_hit_rate(self) -> float:
         """Fraction of unique feature requests served device-locally."""
@@ -56,39 +64,48 @@ class SubgraphBatch(NamedTuple):
 
     @property
     def batch_size(self) -> int:
+        """Seeds in the batch (``B``, the leading axis of every field)."""
         return self.seeds.shape[0]
 
     @property
     def depth(self) -> int:
+        """Sampled hop count ``L`` (``len(hops)``)."""
         return len(self.hops)
 
     @property
     def fanouts(self) -> Tuple[int, ...]:
+        """Per-hop fanouts ``(k_1, ..., k_L)`` recovered from the shapes."""
         return tuple(h.shape[-1] for h in self.hops)
 
     # ---- 2-hop conveniences (the paper's benchmark layout) ----------------
     @property
     def hop1(self) -> jax.Array:
+        """First-hop neighbor ids ``hops[0]`` ([B, k_1]; 2-hop shorthand)."""
         return self.hops[0]
 
     @property
     def mask1(self) -> jax.Array:
+        """First-hop validity mask ``masks[0]`` ([B, k_1] bool)."""
         return self.masks[0]
 
     @property
     def x_hop1(self) -> jax.Array:
+        """First-hop features ``x_hops[0]`` ([B, k_1, D]; padded rows 0)."""
         return self.x_hops[0]
 
     @property
     def hop2(self) -> jax.Array:
+        """Second-hop neighbor ids ``hops[1]`` ([B, k_1, k_2])."""
         return self.hops[1]
 
     @property
     def mask2(self) -> jax.Array:
+        """Second-hop validity mask ``masks[1]`` ([B, k_1, k_2] bool)."""
         return self.masks[1]
 
     @property
     def x_hop2(self) -> jax.Array:
+        """Second-hop features ``x_hops[1]`` ([B, k_1, k_2, D])."""
         return self.x_hops[1]
 
     def nodes_per_iteration(self) -> int:
@@ -128,4 +145,5 @@ def batch_specs(batch: int, fanouts: Tuple[int, ...], dim: int,
         n_dropped=s((n_workers,), i32),
         n_cache_hits=s((n_workers,), i32),
         n_cache_misses=s((n_workers,), i32),
+        n_probe_demoted=s((n_workers,), i32),
     )

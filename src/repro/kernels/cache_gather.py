@@ -38,7 +38,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 # keep the hash bit-compatible with the jnp probe (core/feature_cache.py)
-from ..core.feature_cache import _HASH_K, VALID_ASSOC
+from ..core.feature_cache import (_HASH_K, VALID_ASSOC, WIRE_WORD_BITS,
+                                  hit_bitmap_words)
 
 
 def _shift_for(n_sets: int) -> int:
@@ -118,6 +119,134 @@ def cache_probe_gather_pallas(
         out_shape=[
             jax.ShapeDtypeStruct((r,), jnp.bool_),
             jax.ShapeDtypeStruct((r, d), rows.dtype),
+        ],
+        interpret=interpret,
+    )(keys, rows, ids)
+
+
+def _probe_compact_kernel(keys_ref, rows_ref, ids_ref, words_ref, raw_ref,
+                          pay_ref, *, shift: int, assoc: int, hit_cap: int):
+    ids = ids_ref[0, :]                             # [R] one destination
+    sets = _sets_of(ids, shift)
+    keys = keys_ref[...]
+    rows = rows_ref[...]
+    hit = jnp.zeros(ids.shape, jnp.bool_)
+    way = jnp.zeros(ids.shape, jnp.int32)
+    for j in range(assoc):                          # static unrolled ways
+        m = jnp.logical_and(keys[sets * assoc + j] == ids, ~hit)
+        way = jnp.where(m, jnp.int32(j), way)       # first-match way
+        hit = jnp.logical_or(hit, m)
+    # empty probe slots carry -1, which must not alias empty cache slots
+    # (their resident key is also -1)
+    hit = jnp.logical_and(hit, ids >= 0)
+    # keep the first hit_cap hits in slot order; later hits are demoted
+    cs = jnp.cumsum(hit.astype(jnp.int32))
+    kept = jnp.logical_and(hit, cs <= hit_cap)
+    # pack both vectors into bitmap words (bit s%32 of word s//32);
+    # R is padded to a word multiple by the wrapper, so the reshape is
+    # exact and pad slots (ids == -1) contribute zero bits.  ``kept`` is
+    # the wire bitmap; ``hit`` (pre-demotion) stays on the holder as the
+    # demotion/hit-peak telemetry — one probe serves both
+    weight = jax.lax.shift_left(
+        jnp.uint32(1), jnp.arange(WIRE_WORD_BITS, dtype=jnp.uint32))
+
+    def pack(v):
+        bits = v.reshape(-1, WIRE_WORD_BITS).astype(jnp.uint32)
+        return jnp.sum(bits * weight, axis=-1, dtype=jnp.uint32)
+
+    words_ref[0, :] = pack(kept)
+    raw_ref[0, :] = pack(hit)
+    # payload slot p <- the (p+1)-th hit's row: cs increments by 0/1, so
+    # the first index with cs >= p+1 equals |{j : cs[j] <= p}| — a
+    # comparison-matrix sum, no sort and no scatter on the accelerator
+    p = jnp.arange(hit_cap, dtype=jnp.int32)
+    sel = jnp.sum((cs[None, :] <= p[:, None]).astype(jnp.int32), axis=-1)
+    sel = jnp.clip(sel, 0, ids.shape[0] - 1)
+    pvalid = p < jnp.minimum(cs[-1], hit_cap)
+    src = rows[sets[sel] * assoc + way[sel]].astype(pay_ref.dtype)
+    pay_ref[0, :, :] = jnp.where(pvalid[:, None], src, 0)
+
+
+def cache_probe_compact_pallas(
+    keys: jax.Array,     # [C] int32 resident id per slot (-1 = empty)
+    rows: jax.Array,     # [C, D] resident feature rows
+    ids: jax.Array,      # [W, R] int32 probe ids, one row per destination
+                         # (-1 = empty probe slot)
+    *,
+    assoc: int = 1,
+    hit_cap: int = 1,
+    block_d: int = 128,
+    interpret: bool = True,
+):
+    """Fused probe + compact-wire encode for the shard-probe response.
+
+    Probes every destination's [R] probe block against the ``assoc``-way
+    cache and emits the compact wire format directly — ``(words
+    [W, ceil(R/32)] uint32, raw_words [W, ceil(R/32)] uint32, payload
+    [W, min(hit_cap, R), D])`` — without ever materializing the dense
+    [W, R, D] response block (the point: the dense block is exactly what
+    the compact wire exists to not ship).  ``words`` is the
+    post-demotion bitmap that rides the wire; ``raw_words`` packs the
+    PRE-demotion hits and stays on the holder (the
+    ``n_probe_demoted``/``probe_hit_peak`` telemetry — emitting it from
+    the same probe avoids a second keys pass).  Bit-identical to
+    ``ref.cache_probe_compact_ref``; hits beyond ``hit_cap`` per
+    destination are demoted (bit cleared, row dropped), matching the
+    holder side of ``generation._shard_probe``.
+
+    Grid: (W destinations, D blocks); the bitmap words are written once
+    per D block (identical values — the same revisiting pattern the
+    other kernels in this package use).  The [hit_cap, R] rank-selection
+    compare lives in VMEM alongside the [C, block_d] row block; both are
+    small by construction (``R`` is the probe capacity, a few thousand
+    at most).
+    """
+    c = keys.shape[0]
+    if c & (c - 1):
+        raise ValueError(f"cache size must be a power of two, got {c}")
+    if assoc not in VALID_ASSOC or assoc > c:
+        raise ValueError(f"assoc must be one of {VALID_ASSOC} and <= {c}, "
+                         f"got {assoc}")
+    if ids.ndim != 2:
+        raise ValueError(f"ids must be [W, R] (one row per destination), "
+                         f"got shape {tuple(ids.shape)}")
+    w, r = ids.shape
+    if r < 1 or w < 1:
+        raise ValueError(f"need at least one destination and one probe "
+                         f"slot, got ids shape {tuple(ids.shape)}")
+    hit_cap = min(hit_cap, r)
+    if hit_cap < 1:
+        raise ValueError("hit_cap must be >= 1 (a zero-row payload cannot "
+                         "ship hits; use the dense wire to disable)")
+    n_words = hit_bitmap_words(r)
+    pad = n_words * WIRE_WORD_BITS - r
+    if pad:
+        # pad probe slots with the -1 sentinel so the in-kernel reshape
+        # to [n_words, 32] is exact; pad bits can never hit
+        ids = jnp.concatenate(
+            [ids, jnp.full((w, pad), -1, ids.dtype)], axis=1)
+    d = rows.shape[1]
+    bd = min(block_d, d)
+    shift = _shift_for(c // assoc)
+    grid = (w, pl.cdiv(d, bd))
+    return pl.pallas_call(
+        functools.partial(_probe_compact_kernel, shift=shift, assoc=assoc,
+                          hit_cap=hit_cap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c,), lambda i, j: (0,)),        # full key vector
+            pl.BlockSpec((c, bd), lambda i, j: (0, j)),   # VMEM column block
+            pl.BlockSpec((1, n_words * WIRE_WORD_BITS), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_words), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, n_words), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, hit_cap, bd), lambda i, j: (i, 0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((w, n_words), jnp.uint32),
+            jax.ShapeDtypeStruct((w, n_words), jnp.uint32),
+            jax.ShapeDtypeStruct((w, hit_cap, d), rows.dtype),
         ],
         interpret=interpret,
     )(keys, rows, ids)

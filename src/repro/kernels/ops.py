@@ -13,7 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .cache_gather import cache_probe_gather_pallas, cache_probe_tiered_pallas
+from .cache_gather import (cache_probe_compact_pallas,
+                           cache_probe_gather_pallas,
+                           cache_probe_tiered_pallas)
 from .flash_attention import flash_attention_pallas
 from .gather_reduce import fanout_mean_pallas, gather_reduce_pallas
 from .ssd_scan import ssd_scan_pallas
@@ -24,6 +26,8 @@ def _interpret() -> bool:
 
 
 def fanout_mean(x: jax.Array, mask: jax.Array, use_kernel: bool = False) -> jax.Array:
+    """Masked mean over the fanout axis: x [M, K, D], mask [M, K] -> [M, D]
+    (the GCN aggregation step on a padded fanout tree)."""
     if use_kernel:
         return fanout_mean_pallas(x, mask, interpret=_interpret())
     return ref.fanout_mean_ref(x, mask)
@@ -32,6 +36,8 @@ def fanout_mean(x: jax.Array, mask: jax.Array, use_kernel: bool = False) -> jax.
 def gather_reduce(
     table: jax.Array, idx: jax.Array, mask: jax.Array, use_kernel: bool = False
 ) -> jax.Array:
+    """Fused gather + masked mean: table [N, D], idx/mask [M, K] -> [M, D]
+    (the per-worker hot spot of edge-centric collection + aggregation)."""
     if use_kernel:
         return gather_reduce_pallas(table, idx, mask, interpret=_interpret())
     return ref.gather_reduce_ref(table, idx, mask)
@@ -46,6 +52,26 @@ def cache_probe_gather(
         return cache_probe_gather_pallas(keys, rows, ids, assoc=assoc,
                                          interpret=_interpret())
     return ref.cache_probe_gather_ref(keys, rows, ids, assoc=assoc)
+
+
+def cache_probe_compact(
+    keys: jax.Array, rows: jax.Array, ids: jax.Array,
+    assoc: int = 1, hit_cap: int = 1, use_kernel: bool = False,
+):
+    """Fused probe + compact-wire encode of a [W, R] probe block:
+    ``(words [W, ceil(R/32)] uint32, raw_words [W, ceil(R/32)] uint32,
+    payload [W, min(hit_cap, R), D])`` — the post-demotion wire bitmap,
+    the pre-demotion telemetry bitmap, and the compacted hit rows.
+
+    The holder side of the compact shard-probe response
+    (``generation._shard_probe`` with ``CacheConfig.wire == "compact"``);
+    hits beyond ``hit_cap`` per destination are demoted to misses."""
+    if use_kernel:
+        return cache_probe_compact_pallas(keys, rows, ids, assoc=assoc,
+                                          hit_cap=hit_cap,
+                                          interpret=_interpret())
+    return ref.cache_probe_compact_ref(keys, rows, ids, assoc=assoc,
+                                       hit_cap=hit_cap)
 
 
 def cache_probe_tiered(
@@ -68,6 +94,9 @@ def flash_attention(
     causal: bool = True, use_kernel: bool = False,
     block_q: int = 128, block_k: int = 128,
 ) -> jax.Array:
+    """Softmax attention with GQA head grouping: q [B, Hq, Lq, Dh],
+    k/v [B, Hkv, Lk, Dh] -> [B, Hq, Lq, Dh] (online-softmax tiles when
+    ``use_kernel``)."""
     if use_kernel:
         return flash_attention_pallas(
             q, k, v, causal=causal, block_q=block_q, block_k=block_k,
@@ -81,6 +110,8 @@ def ssd_scan(
     b_mat: jax.Array, c_mat: jax.Array,
     use_kernel: bool = False, chunk: int = 128,
 ) -> jax.Array:
+    """Mamba-2 SSD recurrence: x [B, L, H, P], dt [B, L, H], a [H],
+    b/c [B, L, N] -> y [B, L, H, P] (chunked scan when ``use_kernel``)."""
     if use_kernel:
         return ssd_scan_pallas(x, dt, a, b_mat, c_mat, chunk=chunk,
                                interpret=_interpret())

@@ -49,6 +49,37 @@ def cache_probe_gather_ref(
     return hit, out
 
 
+def cache_probe_compact_ref(
+    keys: jax.Array, rows: jax.Array, ids: jax.Array,
+    assoc: int = 1, hit_cap: int = 1,
+) -> tuple:
+    """Fused probe + compact-wire encode: keys [C], rows [C, D],
+    ids [W, R] -> ``(words [W, ceil(R/32)] uint32, raw_words
+    [W, ceil(R/32)] uint32, payload [W, hc, D])`` with
+    ``hc = min(hit_cap, R)``.
+
+    Per destination row ``w``: probe the ``assoc``-way cache exactly as
+    ``cache_probe_gather_ref`` does (ids ``< 0`` never hit — they are the
+    empty-probe-slot sentinel and must not alias empty cache slots, whose
+    resident key is also -1), KEEP the first ``hit_cap`` hits in slot
+    order (later hits are demoted to misses — their bits are cleared and
+    their rows never enter the payload), pack the kept vector into uint32
+    bitmap words (bit ``s % 32`` of word ``s // 32``), and gather the
+    kept rows into the ``p``-th payload slot by hit rank, zeros beyond
+    the kept count.  ``raw_words`` packs the PRE-demotion hit vector —
+    the holder-side demotion/hit-peak telemetry.  Semantic ground truth
+    for the fused probe+compact kernel (``cache_probe_compact_pallas``)
+    and for the holder side of the compact shard-probe wire
+    (``generation._shard_probe``)."""
+    from ..core.feature_cache import compact_hit_rows, pack_hit_bitmap
+    hit, out = jax.vmap(
+        lambda i: cache_probe_gather_ref(keys, rows, i, assoc=assoc))(ids)
+    hit = jnp.logical_and(hit, ids >= 0)
+    out = jnp.where(hit[..., None], out, 0)
+    kept, payload = compact_hit_rows(hit, out, hit_cap)
+    return pack_hit_bitmap(kept), pack_hit_bitmap(hit), payload
+
+
 def cache_probe_tiered_ref(
     l1_keys: jax.Array, l1_rows: jax.Array,
     l2_keys: jax.Array, l2_rows: jax.Array,

@@ -65,7 +65,7 @@ def _artifact_stats(compiled, chips: int, t_lower: float, t_compile: float) -> d
 def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
                    merge_mode: str = "butterfly",
                    cache_rows: int = None, cache_mode: str = None,
-                   l1_rows: int = None) -> dict:
+                   l1_rows: int = None, probe_wire: str = None) -> dict:
     """The paper's own workload at production scale: one synchronized
     generation+training step on a 530M-node / 5B-edge graph (the paper's
     evaluation graph).  The sampling depth comes from the arch config —
@@ -93,6 +93,8 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
         cfg = dataclasses.replace(cfg, cache_mode=cache_mode)
     if l1_rows is not None:
         cfg = dataclasses.replace(cfg, cache_l1_rows=l1_rows)
+    if probe_wire is not None:
+        cfg = dataclasses.replace(cfg, cache_wire=probe_wire)
     cache_cfg = CacheConfig.from_model(cfg)
     cached = cache_cfg is not None
     fanouts = cfg.fanouts
@@ -156,7 +158,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                gen_merge: str = "butterfly", moe_impl: str = "gather",
                seq_parallel: bool = False, compress: bool = False,
                cache_rows: int = None, cache_mode: str = None,
-               l1_rows: int = None) -> dict:
+               l1_rows: int = None, probe_wire: str = None) -> dict:
     cfg = get_config(arch)
     rec = {
         "arch": arch, "shape": shape_name,
@@ -167,7 +169,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["kind"] = "train"
         return lower_gcn_cell(rec, arch, multi_pod, merge_mode=gen_merge,
                               cache_rows=cache_rows, cache_mode=cache_mode,
-                              l1_rows=l1_rows)
+                              l1_rows=l1_rows, probe_wire=probe_wire)
     shape = SHAPES[shape_name]
     rec["kind"] = shape.kind
     if shape_name == "long_500k" and arch not in SUBQUADRATIC:
@@ -294,6 +296,10 @@ def main() -> None:
     ap.add_argument("--l1-rows", type=int, default=None,
                     help="GCN cells, tiered mode: replicated L1 "
                          "rows/worker (0 auto-sizes to cache_rows/8)")
+    ap.add_argument("--probe-wire", default=None,
+                    choices=["dense", "compact"],
+                    help="GCN cells: shard-probe response wire format "
+                         "override (sharded/tiered modes)")
     ap.add_argument("--out", default=None, help="append JSONL here")
     args = ap.parse_args()
     rec = lower_cell(args.arch, args.shape, args.multi_pod,
@@ -301,7 +307,8 @@ def main() -> None:
                      shard_heads=args.shard_heads, gen_merge=args.gen_merge,
                      moe_impl=args.moe, seq_parallel=args.seq_parallel,
                      compress=args.compress, cache_rows=args.cache_rows,
-                     cache_mode=args.cache_mode, l1_rows=args.l1_rows)
+                     cache_mode=args.cache_mode, l1_rows=args.l1_rows,
+                     probe_wire=args.probe_wire)
     line = json.dumps(rec)
     print(line)
     if args.out:

@@ -50,6 +50,11 @@ SLACK_LADDER = (0.25, 0.5, 1.0, 1.5, 2.0)
 #: calibration batches per rung — a single probe has no safety margin
 #: against seed/rng draws with more uniques per destination
 CALIBRATION_PROBES = 3
+#: ascending hit-cap ladder (fractions of the probe-round capacity)
+#: probed by the compact-wire calibration; a rung is accepted when no
+#: probe demotes a hit, and a run that demotes on EVERY rung falls back
+#: to the dense wire (the dense-fallback rung)
+HIT_CAP_LADDER = (0.125, 0.25, 0.5)
 
 
 def calibrate_capacity_slack(mesh, device_args, fanouts, probes,
@@ -103,6 +108,58 @@ def calibrate_capacity_slack(mesh, device_args, fanouts, probes,
     return ladder[-1]
 
 
+def calibrate_probe_hit_cap(mesh, device_args, fanouts, probes, slack,
+                            cache_cfg, ladder=HIT_CAP_LADDER):
+    """Compact-wire hit-cap calibration (the probe-compaction ROADMAP item).
+
+    Probes an ascending ladder of ``hit_cap`` rungs — fractions of the
+    probe-round capacity the compiled fetch will actually use
+    (``generation.probe_round_capacity``) — and returns the ``CacheConfig``
+    of the smallest rung whose probes report ZERO demoted hits
+    (``SubgraphBatch.n_probe_demoted``): the compact probe response then
+    ships the fewest payload rows that still carry every hit the cache
+    produced during calibration.  The cache warms WITHIN a rung (state
+    threads across the probes), so later probes see warm-ish hit counts;
+    steady-state hit excursions beyond the calibrated bound only demote
+    (lost hit opportunity, logged by the training loop), never corrupt.
+
+    If every rung demotes, the DENSE wire is the fallback rung: the hit
+    population is too large for a payload bound to pay off, so the run
+    keeps the format that can never demote.
+    """
+    from ..core.feature_cache import init_cache_state
+    from ..core.generation import make_generator_fn, probe_round_capacity
+    from ..graph.subgraph import slots_per_seed
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    w = mesh.shape["data"]
+    feat_dim = device_args[2].shape[1]
+    b = probes[0][0].shape[1]              # seeds are [W, b]
+    n_requests = b * slots_per_seed(fanouts)
+    cap = probe_round_capacity(n_requests, w, slack)
+    for frac in ladder:
+        hc = max(int(cap * frac), 1)
+        cfg = cache_cfg._replace(wire="compact", hit_cap=hc)
+        gen_fn = jax.jit(make_generator_fn(
+            mesh, fanouts=fanouts, capacity_slack=slack, cache_cfg=cfg))
+        cache = jax.device_put(init_cache_state(cfg, feat_dim, w),
+                               NamedSharding(mesh, P("data")))
+        demoted = 0
+        for seeds, rng in probes:
+            batch, cache = gen_fn(device_args, seeds, rng, cache)
+            demoted += int(np.asarray(batch.n_probe_demoted).sum())
+        if demoted == 0:
+            print(f"probe hit-cap auto-sized to {hc} rows/destination "
+                  f"({frac:.0%} of the {cap}-slot probe round; override "
+                  f"with --probe-hit-cap)")
+            return cfg
+        print(f"hit-cap calibration: hit_cap={hc} demoted {demoted} hits "
+              f"over {len(probes)} probes")
+    print(f"hit-cap calibration: even {ladder[-1]:.0%} of the probe round "
+          f"demotes hits; falling back to the dense wire")
+    return cache_cfg._replace(wire="dense", hit_cap=0)
+
+
 def warm_capacity(miss_peak: int, w: int, slack: float, rows: int,
                   margin: int = 8) -> int:
     """Steady-state owner-exchange capacity from a warm miss measurement.
@@ -147,6 +204,10 @@ def train_gcn(args) -> dict:
         cfg = dataclasses.replace(cfg, cache_l1_rows=args.l1_rows)
     if args.l1_promote is not None:
         cfg = dataclasses.replace(cfg, cache_l1_promote=args.l1_promote)
+    if args.probe_wire is not None:
+        cfg = dataclasses.replace(cfg, cache_wire=args.probe_wire)
+    if args.probe_hit_cap is not None:
+        cfg = dataclasses.replace(cfg, cache_hit_cap=args.probe_hit_cap)
     if args.smoke:
         cfg = smoke_config(cfg)
     fanouts = cfg.fanouts
@@ -169,6 +230,24 @@ def train_gcn(args) -> dict:
         cols = (np.arange(b) + t * b) % sw.shape[1]
         return jnp.asarray(sw[:, cols])
 
+    need_slack_cal = (args.capacity_slack is None
+                      and cfg.capacity_slack is None and w > 1)
+    # the compact probe wire needs a hit_cap; calibrate one unless the
+    # config pins it or --probe-hit-cap was given (any explicit value —
+    # including 0, which selects the uncalibrated half-capacity auto
+    # bound — skips the ladder; replicated mode and W == 1 run no probe
+    # round, so there is nothing to compact)
+    need_hit_cap = (cached and w > 1 and cache_cfg.mode != "replicated"
+                    and cache_cfg.wire == "compact"
+                    and cache_cfg.hit_cap == 0
+                    and args.probe_hit_cap is None)
+    cal_args = probes = None
+    if need_slack_cal or need_hit_cap:
+        # place the graph+tables once; every ladder rung (slack AND
+        # hit-cap) only re-jits against the same placement
+        _, cal_args = make_distributed_generator(
+            mesh, part, feats, labels, fanouts=fanouts)
+        probes = [(seeds_for(t), rngs[t]) for t in range(CALIBRATION_PROBES)]
     if args.capacity_slack is not None:
         slack = args.capacity_slack
     elif cfg.capacity_slack is not None:
@@ -176,17 +255,16 @@ def train_gcn(args) -> dict:
     elif w == 1:
         slack = 2.0      # W=1 fetch is a local gather: capacity never binds
     else:
-        # place the graph+tables once; each ladder rung only re-jits —
         # probing the CACHED generator (cold cache per rung) so the slack
         # covers the configured path's cold-start miss traffic
-        _, cal_args = make_distributed_generator(
-            mesh, part, feats, labels, fanouts=fanouts)
-        probes = [(seeds_for(t), rngs[t]) for t in range(CALIBRATION_PROBES)]
         slack = calibrate_capacity_slack(mesh, cal_args, fanouts, probes,
                                          cache_cfg=cache_cfg)
-        del cal_args
         print(f"capacity_slack auto-sized to {slack} "
               f"(override with --capacity-slack)")
+    if need_hit_cap:
+        cache_cfg = calibrate_probe_hit_cap(mesh, cal_args, fanouts, probes,
+                                            slack, cache_cfg)
+    del cal_args, probes
 
     gen_out = make_distributed_generator(                  # step 3
         mesh, part, feats, labels, fanouts=fanouts, capacity_slack=slack,
@@ -200,6 +278,10 @@ def train_gcn(args) -> dict:
         if cache_cfg.mode == "tiered":
             line += (f" + {cache_cfg.l1_rows}-row replicated L1 "
                      f"(promote-after-{cache_cfg.l1_promote})")
+        if cache_cfg.mode != "replicated" and w > 1:
+            line += f", {cache_cfg.wire} probe wire"
+            if cache_cfg.wire == "compact" and cache_cfg.hit_cap:
+                line += f" (hit_cap {cache_cfg.hit_cap})"
         print(line)
     else:
         gen_fn, device_args = gen_out
@@ -303,6 +385,12 @@ def train_gcn(args) -> dict:
             dropped = int(np.asarray(nb.n_dropped).sum())
             if dropped:
                 line += f" DROPPED={dropped}"
+            if cached and nb.n_probe_demoted is not None:
+                demoted = int(np.asarray(nb.n_probe_demoted).sum())
+                if demoted:
+                    # a hit excursion beyond the calibrated hit_cap: those
+                    # ids were owner-fetched instead (lost hit, not a bug)
+                    line += f" demoted={demoted}"
             print(line)
     jax.block_until_ready(carry[0])
     dt = time.perf_counter() - t0
@@ -392,6 +480,17 @@ def main() -> None:
     ap.add_argument("--l1-promote", type=int, default=None,
                     help="tiered mode: observations of a row before it is "
                          "promoted into the local L1")
+    ap.add_argument("--probe-wire", default=None,
+                    choices=["dense", "compact"],
+                    help="shard-probe response wire format: dense ships "
+                         "the full [W, cap, D] row block, compact (the "
+                         "config default) ships a hit bitmap + a row "
+                         "payload bounded by the calibrated hit cap")
+    ap.add_argument("--probe-hit-cap", type=int, default=None,
+                    help="compact wire: pin the probe-response payload "
+                         "rows per destination (skips the hit-cap "
+                         "calibration ladder; 0 = auto, half the probe "
+                         "capacity)")
     ap.add_argument("--warm-recalibrate", type=int, default=0,
                     help="after N warm steps, shrink the owner-exchange "
                          "capacity to the observed steady-state cache-miss "

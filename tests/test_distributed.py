@@ -218,27 +218,33 @@ def test_fetch_rows_shard_boundary_ids_route_correctly():
 
 
 #: the cross-mode differential matrix: every cache placement x every
-#: associativity x every worker count, each cell checked bit-for-bit
-#: against the uncached oracle (the raw host feature table) AND for
-#: training-loss equality — the single harness that replaces the old
-#: scattered per-mode bit-identity tests
+#: associativity x every worker count x every probe wire format, each
+#: cell checked bit-for-bit against the uncached oracle (the raw host
+#: feature table) AND for training-loss equality — the single harness
+#: that replaces the old scattered per-mode bit-identity tests
 CACHE_MODES = ("none", "replicated", "sharded", "tiered")
+CACHE_WIRES = ("dense", "compact")
 
 
 @pytest.mark.parametrize("w", [1, 2, 4])
 @pytest.mark.parametrize("assoc", [1, 2, 4])
+@pytest.mark.parametrize("wire", CACHE_WIRES)
 @pytest.mark.parametrize("mode", CACHE_MODES)
-def test_cross_mode_differential_matrix(mode, assoc, w):
+def test_cross_mode_differential_matrix(mode, wire, assoc, w):
     """THE cache contract, swept as one property over the whole design
-    space: for every mode x assoc x W cell, the generation engine's
-    fetched feature rows are bit-identical to the uncached oracle
-    (features gathered straight from the host table), padded slots are
-    exactly zero, labels match, nothing drops, and the training loss
-    computed from the generated batch equals the loss computed from the
-    oracle batch bit-for-bit.  Recurring rngs warm the cache so every
-    cached cell also proves hits appear without perturbing the rows."""
+    space: for every mode x assoc x W x wire cell, the generation
+    engine's fetched feature rows are bit-identical to the uncached
+    oracle (features gathered straight from the host table), padded
+    slots are exactly zero, labels match, nothing drops, and the
+    training loss computed from the generated batch equals the loss
+    computed from the oracle batch bit-for-bit.  Recurring rngs warm the
+    cache so every cached cell also proves hits appear without
+    perturbing the rows; the compact cells run with a DELIBERATELY tiny
+    hit_cap so demotion itself is inside the bit-identity sweep."""
+    if wire == "compact" and (mode in ("none", "replicated") or w == 1):
+        pytest.skip("no shard-probe round to compact in this cell")
     out = run_forced(f"""
-        MODE, ASSOC, W = {mode!r}, {assoc}, {w}
+        MODE, ASSOC, W, WIRE = {mode!r}, {assoc}, {w}, {wire!r}
         import dataclasses
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_config
@@ -257,9 +263,12 @@ def test_cross_mode_differential_matrix(mode, assoc, w):
         X = node_features(N, D); Y = node_labels(N, C)
         table = balance_table(np.arange(N), W, seed=0)
         seeds = jnp.asarray(table.per_worker[:, :6])
+        # compact cells pin hit_cap=4 — far below the warm hit count, so
+        # holder-side demotion provably fires inside the identity sweep
         cc = None if MODE == "none" else CacheConfig(
             128, admit=1, assoc=ASSOC, mode=MODE,
-            l1_rows=32 if MODE == "tiered" else 0, l1_promote=2)
+            l1_rows=32 if MODE == "tiered" else 0, l1_promote=2,
+            wire=WIRE, hit_cap=4 if WIRE == "compact" else 0)
         out = make_distributed_generator(mesh, part, X, Y, fanouts=(5, 3),
                                          cache_cfg=cc)
         gen, dev = out[0], out[1]
@@ -298,7 +307,7 @@ def test_cross_mode_differential_matrix(mode, assoc, w):
             assert hits > 0, "cache never warmed on recurring ids"
         else:
             assert hits == 0
-        print("MATRIX_OK", MODE, ASSOC, W, hits)
+        print("MATRIX_OK", MODE, ASSOC, W, WIRE, hits)
     """, devices=w)
     assert "MATRIX_OK" in out
 
@@ -570,6 +579,56 @@ def test_calibration_probes_cached_generator_cold():
         print("CALIBRATION_COLD_OK", slack)
     """, devices=4)
     assert "CALIBRATION_COLD_OK" in out
+
+
+def test_hit_cap_calibration_ladder_and_dense_fallback():
+    """The compact-wire calibration: the ladder returns a compact config
+    whose hit_cap demotes nothing on the probes (re-checked from cold),
+    and a ladder whose every rung demotes falls back to the dense wire —
+    the rung that can never demote."""
+    out = run_forced("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.graph.synthetic import powerlaw_graph, node_features, node_labels
+        from repro.core.balance import balance_table
+        from repro.core.feature_cache import CacheConfig, init_cache_state
+        from repro.core.generation import (make_distributed_generator,
+                                           make_generator_fn)
+        from repro.core.partition import partition_edges
+        from repro.launch.mesh import make_mesh
+        from repro.launch.train import calibrate_probe_hit_cap
+
+        W, n, dim = 4, 2000, 8
+        mesh = make_mesh((W,), ("data",))
+        g = powerlaw_graph(n, avg_degree=8, n_hot=3, hot_degree=400, seed=0)
+        part = partition_edges(g, W)
+        X = node_features(n, dim); Y = node_labels(n, 5)
+        table = balance_table(np.arange(n), W, seed=0)
+        cfg = CacheConfig(256, admit=1, assoc=2, mode="sharded",
+                          wire="compact")
+        _, dev = make_distributed_generator(mesh, part, X, Y, fanouts=(6, 4))
+        # recurring seeds across probes: the cache warms and the probe
+        # round produces real hits for the ladder to bound
+        probes = [(jnp.asarray(table.per_worker[:, :8]),
+                   jax.random.PRNGKey(0)) for _ in range(3)]
+        cal = calibrate_probe_hit_cap(mesh, dev, (6, 4), probes, 2.0, cfg)
+        assert cal.wire == "compact" and cal.hit_cap > 0, cal
+        # the calibrated config demotes nothing from a cold start
+        gen = jax.jit(make_generator_fn(mesh, fanouts=(6, 4),
+                                        capacity_slack=2.0, cache_cfg=cal))
+        cache = jax.device_put(init_cache_state(cal, dim, W),
+                               NamedSharding(mesh, P("data")))
+        for seeds, rng in probes:
+            batch, cache = gen(dev, seeds, rng, cache)
+            assert int(np.asarray(batch.n_probe_demoted).sum()) == 0
+            assert int(np.asarray(batch.n_dropped).sum()) == 0
+        # a ladder whose only rung is ~zero must demote and fall back
+        dense = calibrate_probe_hit_cap(mesh, dev, (6, 4), probes, 2.0,
+                                        cfg, ladder=(0.0001,))
+        assert dense.wire == "dense" and dense.hit_cap == 0, dense
+        print("HIT_CAP_CAL_OK", cal.hit_cap)
+    """, devices=4)
+    assert "HIT_CAP_CAL_OK" in out
 
 
 def test_elastic_checkpoint_reshard():

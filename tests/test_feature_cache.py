@@ -10,11 +10,14 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.feature_cache import (CacheConfig, FeatureCache, TieredCache,
-                                      cache_insert, cache_probe, hash_slots,
+                                      cache_insert, cache_probe,
+                                      compact_hit_rows, expand_hit_rows,
+                                      hash_slots, hit_bitmap_words,
                                       init_cache, init_cache_state,
-                                      init_worker_caches,
+                                      init_worker_caches, pack_hit_bitmap,
                                       restore_worker_axis, shard_of,
-                                      squeeze_worker_axis, tiered_probe)
+                                      squeeze_worker_axis, tiered_probe,
+                                      unpack_hit_bitmap)
 from repro.core.generation import fetch_rows
 
 
@@ -769,6 +772,120 @@ def test_pallas_probe_impl_serves_cached_fetch():
                                   np.asarray(table)[np.asarray(ids)])
     with pytest.raises(ValueError):
         set_probe_impl("cuda")
+
+
+# ------------------------------------------------- probe-round wire codec
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_bitmap_pack_unpack_roundtrip(seed):
+    """Property: pack then unpack reproduces ANY hit vector exactly, for
+    slot counts on and off the 32-bit word boundary, and the packed form
+    occupies exactly ceil(R/32) uint32 words."""
+    rng = np.random.default_rng(seed)
+    r = int(rng.integers(1, 130))
+    b = int(rng.integers(1, 5))
+    hit = jnp.asarray(rng.random((b, r)) < rng.random())
+    words = pack_hit_bitmap(hit)
+    assert words.dtype == jnp.uint32
+    assert words.shape == (b, hit_bitmap_words(r)) == (b, -(-r // 32))
+    np.testing.assert_array_equal(np.asarray(unpack_hit_bitmap(words, r)),
+                                  np.asarray(hit))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_compact_expand_roundtrip_property(seed):
+    """Property: expand(compact(hit, rows)) reproduces the rows of every
+    KEPT slot bit-for-bit and zeros everywhere else, where kept is hit
+    truncated to the first hit_cap hits per destination."""
+    rng = np.random.default_rng(seed)
+    b, r, d = (int(rng.integers(1, 5)), int(rng.integers(1, 80)),
+               int(rng.integers(1, 6)))
+    hit_cap = int(rng.integers(0, r + 20))
+    hit = jnp.asarray(rng.random((b, r)) < rng.random())
+    rows = jnp.asarray(rng.standard_normal((b, r, d)).astype(np.float32))
+    rows = jnp.where(hit[..., None], rows, 0)
+    kept, payload = compact_hit_rows(hit, rows, hit_cap)
+    assert payload.shape == (b, min(hit_cap, r), d)
+    # kept truncates each destination's hits at hit_cap, in slot order
+    want_kept = np.asarray(hit) & (np.cumsum(np.asarray(hit), axis=-1)
+                                   <= hit_cap)
+    np.testing.assert_array_equal(np.asarray(kept), want_kept)
+    out = expand_hit_rows(kept, payload)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.where(want_kept[..., None], np.asarray(rows), 0))
+
+
+def test_compact_zero_hit_batch_ships_empty_payload():
+    """All-miss destination: the bitmap is all-zero words and the payload
+    carries nothing but zeros — the compact response of a cold cache."""
+    hit = jnp.zeros((3, 40), jnp.bool_)
+    rows = jnp.ones((3, 40, 4))
+    kept, payload = compact_hit_rows(hit, rows, 8)
+    assert not np.asarray(kept).any()
+    assert np.abs(np.asarray(payload)).max() == 0
+    words = pack_hit_bitmap(kept)
+    assert np.asarray(words).sum() == 0
+    assert np.abs(np.asarray(expand_hit_rows(kept, payload))).max() == 0
+
+
+def test_compact_all_hit_batch_payload_equals_rows():
+    """All-hit destination at hit_cap == R: nothing demotes and the
+    payload IS the dense response, in slot order."""
+    rng = np.random.default_rng(3)
+    rows = jnp.asarray(rng.standard_normal((2, 24, 5)).astype(np.float32))
+    hit = jnp.ones((2, 24), jnp.bool_)
+    kept, payload = compact_hit_rows(hit, rows, 24)
+    assert np.asarray(kept).all()
+    np.testing.assert_array_equal(np.asarray(payload), np.asarray(rows))
+    np.testing.assert_array_equal(
+        np.asarray(expand_hit_rows(kept, payload)), np.asarray(rows))
+
+
+def test_compact_overflow_demotes_in_slot_order():
+    """hit_cap overflow: exactly the FIRST hit_cap hits (slot order)
+    survive; demoted slots read back as misses after the roundtrip —
+    the requester owner-fetches them, never sees wrong rows."""
+    hit = jnp.asarray([[True, False, True, True, True, False, True, True]])
+    rows = jnp.arange(8, dtype=jnp.float32).reshape(1, 8, 1) + 1.0
+    kept, payload = compact_hit_rows(hit, rows, 3)
+    np.testing.assert_array_equal(
+        np.asarray(kept),
+        [[True, False, True, True, False, False, False, False]])
+    np.testing.assert_array_equal(np.asarray(payload).ravel(), [1., 3., 4.])
+    out = expand_hit_rows(kept, payload)
+    np.testing.assert_array_equal(np.asarray(out).ravel(),
+                                  [1., 0., 3., 4., 0., 0., 0., 0.])
+
+
+def test_unpack_rejects_mismatched_word_count():
+    with pytest.raises(ValueError):
+        unpack_hit_bitmap(jnp.zeros((2, 3), jnp.uint32), 32)
+
+
+def test_wire_config_validation():
+    """CacheConfig and ModelConfig both reject unknown wire formats and
+    negative hit caps at construction, and thread valid ones through."""
+    from repro.core.config import ModelConfig
+
+    with pytest.raises(ValueError):
+        CacheConfig(64, wire="zstd").validated()
+    with pytest.raises(ValueError):
+        CacheConfig(64, hit_cap=-1).validated()
+    cfg = CacheConfig(64, mode="tiered", l1_rows=8, wire="compact",
+                      hit_cap=40).validated()
+    # the wire travels with the L2 tier view (whose probe round it is)
+    assert cfg.l2_config().wire == "compact"
+    assert cfg.l2_config().hit_cap == 40
+    with pytest.raises(ValueError):
+        ModelConfig(name="x", family="gcn", cache_wire="zstd")
+    with pytest.raises(ValueError):
+        ModelConfig(name="x", family="gcn", cache_hit_cap=-2)
+    m = ModelConfig(name="x", family="gcn", cache_rows=64,
+                    cache_mode="sharded", cache_wire="dense", cache_hit_cap=7)
+    cc = CacheConfig.from_model(m)
+    assert cc.wire == "dense" and cc.hit_cap == 7
 
 
 def test_zipf_wire_slot_reduction_meets_criterion():

@@ -104,6 +104,97 @@ def test_cache_probe_gather_degenerate_single_set():
                                   [True, False, True, True, False])
 
 
+@pytest.mark.parametrize("c,d,w,r", [(64, 16, 4, 33), (256, 96, 2, 300),
+                                     (1024, 32, 3, 64)])
+@pytest.mark.parametrize("assoc", [1, 2, 4])
+@pytest.mark.parametrize("hit_cap", [1, 16, 4096])
+def test_cache_probe_compact(c, d, w, r, assoc, hit_cap):
+    """Fused probe+compact vs the jnp oracle across associativities, probe
+    shapes, and payload bounds (1 = heavy demotion, 4096 = clamped to R =
+    never demotes): identical bitmap words and bit-identical payload."""
+    from repro.kernels.cache_gather import cache_probe_compact_pallas
+    from repro.core.feature_cache import hash_slots
+
+    rng = np.random.default_rng(c + r + assoc)
+    n_sets = c // assoc
+    pool = rng.choice(10 * c, size=c, replace=False).astype(np.int32)
+    sets = np.asarray(hash_slots(jnp.asarray(pool), n_sets))
+    keys = np.full(c, -1, np.int32)
+    way_fill = np.zeros(n_sets, np.int64)
+    for pid, s in zip(pool, sets):
+        if way_fill[s] < assoc:
+            keys[s * assoc + way_fill[s]] = pid
+            way_fill[s] += 1
+    keys = jnp.asarray(keys)
+    rows = jax.random.normal(jax.random.PRNGKey(1), (c, d))
+    # resident ids (hits), random ids (mostly misses), and the -1 empty-
+    # probe-slot sentinel, which must never alias an empty cache slot
+    ids = np.where(rng.random((w, r)) < 0.5, rng.choice(pool, size=(w, r)),
+                   rng.integers(0, 10 * c, (w, r))).astype(np.int32)
+    ids[rng.random((w, r)) < 0.15] = -1
+    ids = jnp.asarray(ids)
+    got_w, got_raw, got_p = cache_probe_compact_pallas(
+        keys, rows, ids, assoc=assoc, hit_cap=hit_cap)
+    want_w, want_raw, want_p = ref.cache_probe_compact_ref(
+        keys, rows, ids, assoc=assoc, hit_cap=hit_cap)
+    np.testing.assert_array_equal(np.asarray(got_w), np.asarray(want_w))
+    np.testing.assert_array_equal(np.asarray(got_raw), np.asarray(want_raw))
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+    assert got_w.shape == got_raw.shape == (w, -(-r // 32))
+    assert got_p.shape == (w, min(hit_cap, r), d)
+
+
+def test_cache_probe_compact_matches_dense_probe():
+    """The compact encoding carries exactly the dense probe's hit rows
+    (at a non-demoting hit_cap): unpacking the bitmap reproduces the
+    dense hit vector and re-expanding the payload reproduces its rows —
+    the wire format is pure transport, not a different probe."""
+    from repro.core.feature_cache import (expand_hit_rows,
+                                          unpack_hit_bitmap)
+    from repro.kernels.cache_gather import cache_probe_compact_pallas
+
+    rng = np.random.default_rng(9)
+    c, d, r = 128, 12, 96
+    keys = np.full(c, -1, np.int32)
+    occ = rng.random(c) < 0.5
+    keys[occ] = rng.integers(0, 4 * c, occ.sum())
+    keys = jnp.asarray(keys)
+    rows = jax.random.normal(jax.random.PRNGKey(4), (c, d))
+    ids = jnp.asarray(rng.integers(0, 4 * c, (3, r)).astype(np.int32))
+    words, raw_words, payload = cache_probe_compact_pallas(keys, rows, ids,
+                                                           hit_cap=r)
+    want_hit, want_rows = jax.vmap(
+        lambda i: ref.cache_probe_gather_ref(keys, rows, i))(ids)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_hit_bitmap(words, r)), np.asarray(want_hit))
+    # at a non-demoting hit_cap the raw and wire bitmaps coincide
+    np.testing.assert_array_equal(np.asarray(raw_words), np.asarray(words))
+    np.testing.assert_array_equal(
+        np.asarray(expand_hit_rows(unpack_hit_bitmap(words, r), payload)),
+        np.asarray(want_rows))
+
+
+def test_cache_probe_compact_degenerate_single_set():
+    """c == assoc -> one set: the compact kernel takes the shift-guard
+    branch (a literal 32-bit uint32 shift would be out of range)."""
+    from repro.kernels.cache_gather import cache_probe_compact_pallas
+
+    keys = jnp.asarray([11, 22, -1, 33], jnp.int32)
+    rows = jnp.arange(8, dtype=jnp.float32).reshape(4, 2)
+    ids = jnp.asarray([[22, 5, 33, 11, -7]], jnp.int32)
+    got_w, got_raw, got_p = cache_probe_compact_pallas(keys, rows, ids,
+                                                       assoc=4, hit_cap=2)
+    want_w, want_raw, want_p = ref.cache_probe_compact_ref(
+        keys, rows, ids, assoc=4, hit_cap=2)
+    np.testing.assert_array_equal(np.asarray(got_w), np.asarray(want_w))
+    np.testing.assert_array_equal(np.asarray(got_raw), np.asarray(want_raw))
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+    # hits at slots 0 and 2 survive the 2-row bound; the slot-3 hit
+    # demotes (cleared on the wire, still set in the raw telemetry)
+    assert np.asarray(got_w).ravel().tolist() == [0b101]
+    assert np.asarray(got_raw).ravel().tolist() == [0b1101]
+
+
 @pytest.mark.parametrize("b,hq,hkv,lq,lk,dh", [
     (1, 2, 2, 128, 128, 32),     # MHA square
     (2, 4, 2, 128, 256, 64),     # GQA, decode-style longer k

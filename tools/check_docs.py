@@ -1,0 +1,183 @@
+#!/usr/bin/env python
+"""Docs-tier lint: markdown link check + public docstring coverage gate.
+
+Two checks, both run by ``tests/test_docs.py`` (tier-1) and by the CI
+docs step, so a moved file, renamed flag, or undocumented public symbol
+breaks the build — not the reader:
+
+1. **Markdown link check** over ``README.md`` and ``docs/*.md``: every
+   relative link target must exist on disk, and every ``#anchor`` (in-page
+   or cross-file) must match a heading in the target file under GitHub's
+   slug rules.  External (``http``/``https``/``mailto``) links are not
+   fetched.
+
+2. **Docstring coverage** over the public fetch-path API
+   (``PUBLIC_API_MODULES``): every public function, class, and public
+   method defined in those modules must carry a real docstring (not a
+   placeholder).  The gate is ``--fail-under`` percent (default 100 — the
+   equivalent of ``interrogate --fail-under 100`` without adding a
+   dependency the container lacks).
+
+Usage::
+
+    PYTHONPATH=src python tools/check_docs.py [--fail-under 100]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import inspect
+import os
+import re
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: modules whose PUBLIC surface is the documented fetch-path API —
+#: fetch_rows and its config/state/stats types, the wire codec, and the
+#: kernel entry points (docs/ARCHITECTURE.md is their narrative form)
+PUBLIC_API_MODULES = (
+    "repro.core.feature_cache",
+    "repro.core.generation",
+    "repro.graph.subgraph",
+    "repro.kernels.cache_gather",
+    "repro.kernels.ref",
+    "repro.kernels.ops",
+)
+
+#: a docstring shorter than this is a placeholder, not documentation
+MIN_DOCSTRING = 20
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def _slugify(heading: str) -> str:
+    """GitHub anchor slug of a markdown heading."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def _anchors_of(md_path: str) -> set:
+    anchors = set()
+    with open(md_path, encoding="utf-8") as f:
+        in_code = False
+        for line in f:
+            if line.lstrip().startswith("```"):
+                in_code = not in_code
+                continue
+            if not in_code and line.startswith("#"):
+                anchors.add(_slugify(line.lstrip("#")))
+    return anchors
+
+
+def check_markdown_links(files=None) -> list:
+    """Return a list of "<file>: <problem>" strings for broken links."""
+    if files is None:
+        files = [os.path.join(REPO_ROOT, "README.md")]
+        docs = os.path.join(REPO_ROOT, "docs")
+        if os.path.isdir(docs):
+            files += sorted(
+                os.path.join(docs, f) for f in os.listdir(docs)
+                if f.endswith(".md"))
+    problems = []
+    for path in files:
+        if not os.path.exists(path):
+            problems.append(f"{path}: file missing")
+            continue
+        base = os.path.dirname(path)
+        rel = os.path.relpath(path, REPO_ROOT)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        # links inside fenced code blocks are examples, not navigation
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for target in _LINK_RE.findall(text):
+            if target.startswith(_EXTERNAL):
+                continue
+            file_part, _, anchor = target.partition("#")
+            dest = (os.path.normpath(os.path.join(base, file_part))
+                    if file_part else path)
+            if not os.path.exists(dest):
+                problems.append(f"{rel}: broken link target {target!r}")
+                continue
+            if anchor and dest.endswith(".md"):
+                if anchor not in _anchors_of(dest):
+                    problems.append(
+                        f"{rel}: missing anchor {target!r} "
+                        f"(no matching heading in {os.path.relpath(dest, REPO_ROOT)})")
+    return problems
+
+
+def _public_symbols(module):
+    """(qualname, obj) for the module's public functions/classes/methods."""
+    for name, obj in sorted(vars(module).items()):
+        if name.startswith("_"):
+            continue
+        if not (inspect.isfunction(obj) or inspect.isclass(obj)):
+            continue
+        if getattr(obj, "__module__", None) != module.__name__:
+            continue    # re-export; documented where it is defined
+        yield f"{module.__name__}.{name}", obj
+        if inspect.isclass(obj):
+            for mname, mobj in sorted(vars(obj).items()):
+                if mname.startswith("_"):
+                    continue
+                if isinstance(mobj, property):
+                    mobj = mobj.fget
+                if isinstance(mobj, (staticmethod, classmethod)):
+                    mobj = mobj.__func__
+                if inspect.isfunction(mobj):
+                    yield f"{module.__name__}.{name}.{mname}", mobj
+
+
+def check_docstrings() -> tuple:
+    """Return ``(coverage_percent, missing)`` over the public API."""
+    covered, missing = 0, []
+    total = 0
+    for modname in PUBLIC_API_MODULES:
+        module = importlib.import_module(modname)
+        if not (module.__doc__ and len(module.__doc__) >= MIN_DOCSTRING):
+            missing.append(modname + " (module docstring)")
+            total += 1
+        else:
+            covered += 1
+            total += 1
+        for qualname, obj in _public_symbols(module):
+            total += 1
+            doc = inspect.getdoc(obj)
+            if doc and len(doc) >= MIN_DOCSTRING:
+                covered += 1
+            else:
+                missing.append(qualname)
+    pct = 100.0 * covered / max(total, 1)
+    return pct, missing
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fail-under", type=float, default=100.0,
+                    help="minimum docstring coverage percent (default 100)")
+    args = ap.parse_args()
+    sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+    failed = False
+    problems = check_markdown_links()
+    for p in problems:
+        print(f"LINK: {p}", file=sys.stderr)
+        failed = True
+    pct, missing = check_docstrings()
+    for m in missing:
+        print(f"DOCSTRING MISSING: {m}", file=sys.stderr)
+    print(f"docstring coverage: {pct:.1f}% "
+          f"({len(missing)} public symbols undocumented)")
+    if pct < args.fail_under:
+        print(f"FAIL: coverage {pct:.1f}% < --fail-under "
+              f"{args.fail_under:.1f}%", file=sys.stderr)
+        failed = True
+    if not problems:
+        print("markdown links: OK")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
