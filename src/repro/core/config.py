@@ -167,6 +167,8 @@ class ModelConfig:
 
     @property
     def resolved_head_dim(self) -> int:
+        """Per-head attention dim: ``head_dim`` when set explicitly,
+        else ``d_model // n_heads``."""
         if self.head_dim:
             return self.head_dim
         return self.d_model // max(self.n_heads, 1)
@@ -282,14 +284,19 @@ class MeshConfig:
 
     @property
     def shape(self) -> Tuple[int, ...]:
+        """Device-grid shape: 16x16 per pod, with a leading pod axis of 2
+        when ``multi_pod``."""
         return (2, 16, 16) if self.multi_pod else (16, 16)
 
     @property
     def axes(self) -> Tuple[str, ...]:
+        """Mesh axis names, matching ``launch/mesh.py``'s production
+        tuples — ``(pod,) + (data, model)``."""
         return ("pod", "data", "model") if self.multi_pod else ("data", "model")
 
     @property
     def n_devices(self) -> int:
+        """Total devices in the mesh (product of ``shape``)."""
         n = 1
         for s in self.shape:
             n *= s

@@ -87,7 +87,7 @@ def flash_attention_pallas(
     qf = q.reshape(b * hq, lq, dh)
     kf = k.reshape(b * hkv, lk, dh)
     vf = v.reshape(b * hkv, lk, dh)
-    grid = (b * hq, lq // bq, lk // bk)
+    grid = (b * hq, pl.cdiv(lq, bq), pl.cdiv(lk, bk))
 
     def kv_index(h, iq, ik):
         # query head h -> kv head (h % hq) // group within the same batch

@@ -70,7 +70,7 @@ def ssd_scan_pallas(
     n = b_mat.shape[-1]
     q = min(chunk, l)
     assert l % q == 0, "pad seq len to chunk multiple"
-    grid = (bsz, h, l // q)
+    grid = (bsz, h, pl.cdiv(l, q))
     kwargs = {}
     if pltpu is not None and not interpret:
         kwargs["compiler_params"] = pltpu.TPUCompilerParams(

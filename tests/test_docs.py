@@ -34,7 +34,8 @@ def test_markdown_links_resolve():
     assert os.path.exists(os.path.join(docs, "ARCHITECTURE.md"))
     assert os.path.exists(os.path.join(docs, "BENCHMARKS.md"))
     problems = tool.check_markdown_links()
-    assert not problems, "\n".join(problems)
+    assert not problems, "\n".join(
+        f"{p['path']}:{p['line']}: {p['message']}" for p in problems)
 
 
 def test_public_fetch_path_docstring_coverage():
@@ -47,4 +48,5 @@ def test_public_fetch_path_docstring_coverage():
         pct, missing = tool.check_docstrings()
     finally:
         sys.path.pop(0)
-    assert pct == 100.0, f"undocumented public symbols: {missing}"
+    assert pct == 100.0, "undocumented public symbols:\n" + "\n".join(
+        f"{m['path']}:{m['line']}: {m['message']}" for m in missing)

@@ -1,0 +1,464 @@
+"""graphlint gates, enforced in tier-1 so the hazard net cannot rot:
+
+* every rule fires on a fixture encoding the historical bug pattern it
+  was written for, and stays silent on the fixed form;
+* suppression comments work (inline and own-line), require a
+  justification, and reject unknown rule ids;
+* the ``[tool.graphlint]`` config path (enable/disable/severity/
+  exclude) and the 3.10 mini-TOML fallback parser behave;
+* the GitHub-annotation formatter emits well-formed workflow commands;
+* the real tree (``src/ benchmarks/ examples/``) lints clean inside the
+  CI wall-clock budget — the zero-findings gate.
+
+The test imports the tool from the repo checkout (same code CI runs),
+so the gate cannot fork from the tool.
+"""
+import io
+import os
+import sys
+import time
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+if REPO_ROOT not in sys.path:
+    sys.path.insert(0, REPO_ROOT)
+
+from tools import _report                              # noqa: E402
+from tools.graphlint import Config, RULES, lint_paths, lint_source  # noqa: E402
+from tools.graphlint.core import (                     # noqa: E402
+    _parse_toml_minimal,
+    mesh_axis_names,
+    parse_suppressions,
+)
+
+_AXES = frozenset({"pod", "data", "model"})
+
+
+def _rules_fired(source, config=None, axes=_AXES):
+    findings = lint_source("fixture.py", source, config or Config(),
+                           mesh_axes=axes)
+    return [(f.rule, f.line) for f in findings]
+
+
+def _assert_fires(rule, source):
+    fired = _rules_fired(source)
+    assert any(r == rule for r, _ in fired), (
+        f"{rule} should fire on:\n{source}\nfired: {fired}")
+
+
+def _assert_silent(source):
+    fired = _rules_fired(source)
+    assert not fired, f"expected clean, fired: {fired}\non:\n{source}"
+
+
+# ---------------------------------------------------------------------------
+# rule fixtures: each bug pattern fires, each fixed form is silent
+# ---------------------------------------------------------------------------
+
+def test_discarded_functional_update_fires_and_fixed_form_silent():
+    """A bare ``x.at[i].set(v)`` statement is a silent no-op (JAX arrays
+    are immutable) — the classic in-place-NumPy porting bug."""
+    _assert_fires("discarded-functional-update", """
+def admit(table, slot, row):
+    table.at[slot].set(row)
+    return table
+""")
+    _assert_silent("""
+def admit(table, slot, row):
+    table = table.at[slot].set(row)
+    return table
+""")
+
+
+def test_tracer_branch_fires_on_jit_if_and_cast():
+    """Python `if` and int() on a traced jit argument force
+    concretization — ConcretizationTypeError or a traced-once branch."""
+    _assert_fires("tracer-branch", """
+import jax
+@jax.jit
+def relu(x):
+    if x > 0:
+        return x
+    return 0.0
+""")
+    _assert_fires("tracer-branch", """
+import jax
+def count(x):
+    return int(x.sum())
+f = jax.jit(count)
+""")
+
+
+def test_tracer_branch_silent_on_static_idioms():
+    """Shape introspection, `is None` tests, static_argnames params, and
+    kernel keyword-only config params are static under tracing."""
+    _assert_silent("""
+import jax
+@jax.jit
+def f(x, mask=None):
+    if mask is not None:
+        x = x * mask
+    if x.ndim == 2 and x.shape[0] > 1:
+        x = x.sum(0)
+    return x
+""")
+    _assert_silent("""
+import functools
+import jax
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk(x, k):
+    if k <= 0:
+        return x
+    return x[:k]
+""")
+    _assert_silent("""
+import functools
+from jax.experimental import pallas as pl
+def _kernel(x_ref, o_ref, *, causal):
+    if causal:
+        o_ref[...] = x_ref[...]
+def launch(x):
+    return pl.pallas_call(functools.partial(_kernel, causal=True),
+                          grid=(1,), out_specs=None)(x)
+""")
+
+
+def test_tracer_branch_fires_in_pallas_kernel_positional_ref():
+    """A Python branch on a positional ref inside a pallas_call kernel is
+    a real tracer leak (refs are never concrete)."""
+    _assert_fires("tracer-branch", """
+from jax.experimental import pallas as pl
+def _kernel(x_ref, o_ref):
+    if x_ref[0] > 0:
+        o_ref[0] = x_ref[0]
+def launch(x):
+    return pl.pallas_call(_kernel, grid=(1,), out_specs=None)(x)
+""")
+
+
+def test_collective_axis_fires_on_undeclared_axis():
+    """An axis_name string absent from launch/mesh.py's tuples hangs or
+    mis-reduces the collective at runtime."""
+    _assert_fires("collective-axis", """
+import jax
+def sync(x):
+    return jax.lax.psum(x, "devices")
+""")
+    _assert_silent("""
+import jax
+def sync(x, axis_name):
+    total = jax.lax.psum(x, "data")
+    idx = jax.lax.axis_index(axis_name)
+    return total, idx
+""")
+
+
+def test_collective_axis_fires_on_shard_map_without_out_specs():
+    """shard_map without explicit out_specs silently replicates outputs —
+    the historical memory blow-up."""
+    _assert_fires("collective-axis", """
+from jax.experimental.shard_map import shard_map
+def wrap(f, mesh, specs):
+    return shard_map(f, mesh=mesh, in_specs=specs)
+""")
+    _assert_silent("""
+from jax.experimental.shard_map import shard_map
+def wrap(f, mesh, specs):
+    return shard_map(f, mesh=mesh, in_specs=specs, out_specs=specs)
+""")
+
+
+def test_cacheconfig_required_fires_without_cfg():
+    """The PR 3 dead-config bug: probing a cache built with one geometry
+    using a default-constructed CacheConfig."""
+    _assert_fires("cacheconfig-required", """
+def step(table, ids, cache):
+    return fetch_rows(table, ids, "data", cache=cache)
+""")
+    _assert_fires("cacheconfig-required", """
+def probe(cache, ids):
+    return cache_probe(cache, ids)
+""")
+    _assert_silent("""
+def step(table, ids, cache, cfg):
+    rows = fetch_rows(table, ids, "data", cache=cache, cache_cfg=cfg)
+    hits, vals = cache_probe(cache, ids, cfg=cfg)
+    cache = cache_insert(cache, ids, rows, hits, cfg)
+    return rows, vals, cache
+""")
+
+
+def test_pallas_blockspec_fires_on_floordiv_grid():
+    """A `//`-built grid drops the partial final block when the axis
+    stops dividing evenly; pl.cdiv covers it."""
+    _assert_fires("pallas-blockspec", """
+from jax.experimental import pallas as pl
+def launch(x, kern, bq):
+    grid = (x.shape[0] // bq,)
+    return pl.pallas_call(kern, grid=grid, out_specs=None)(x)
+""")
+    _assert_silent("""
+from jax.experimental import pallas as pl
+def launch(x, kern, bq):
+    grid = (pl.cdiv(x.shape[0], bq),)
+    return pl.pallas_call(kern, grid=grid, out_specs=None)(x)
+""")
+
+
+def test_pallas_blockspec_fires_on_unguarded_shift_width():
+    """``x >> (32 - k)`` is UB when k can be 0 — the PR 3 degenerate-hash
+    bug (every id hashed to set 0 when n_sets == 1)."""
+    _assert_fires("pallas-blockspec", """
+import jax
+import jax.numpy as jnp
+def hash_slots(ids, n_sets):
+    shift = 32 - (int(n_sets).bit_length() - 1)
+    return jax.lax.shift_right_logical(ids, jnp.uint32(shift))
+""")
+    # the hash_slots guard idiom: early return before the shift
+    _assert_silent("""
+import jax
+import jax.numpy as jnp
+def hash_slots(ids, n_sets):
+    if n_sets == 1:
+        return jnp.zeros_like(ids)
+    shift = 32 - (int(n_sets).bit_length() - 1)
+    return jax.lax.shift_right_logical(ids, jnp.uint32(shift))
+""")
+
+
+def test_pallas_blockspec_fires_on_impure_index_map():
+    """BlockSpec index maps must be pure index arithmetic — a call inside
+    the lambda can capture traced state or allocate."""
+    _assert_fires("pallas-blockspec", """
+from jax.experimental import pallas as pl
+def launch(x, kern, lookup):
+    spec = pl.BlockSpec((1, 8), lambda i, j: (lookup(i), j))
+    return pl.pallas_call(kern, grid=(1, 1), in_specs=[spec],
+                          out_specs=None)(x)
+""")
+    _assert_silent("""
+from jax.experimental import pallas as pl
+def launch(x, kern):
+    spec = pl.BlockSpec((1, 8), lambda i, j: (i, j))
+    return pl.pallas_call(kern, grid=(1, 1), in_specs=[spec],
+                          out_specs=None)(x)
+""")
+
+
+def test_unseeded_rng_fires_on_global_state():
+    """Global-RNG draws make benchmark runs non-replayable; the repo
+    contract is an explicit np.random.default_rng(seed)."""
+    _assert_fires("unseeded-rng", """
+import numpy as np
+def make_ids(n):
+    return np.random.randint(0, 100, size=n)
+""")
+    _assert_fires("unseeded-rng", """
+import numpy as np
+def make_rng():
+    return np.random.default_rng()
+""")
+    _assert_silent("""
+import numpy as np
+def make_ids(n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 100, size=n)
+""")
+
+
+# ---------------------------------------------------------------------------
+# suppression comments
+# ---------------------------------------------------------------------------
+
+_RNG_LINE = "import numpy as np\nv = np.random.rand(3)"
+
+
+def test_suppression_inline_with_justification_silences():
+    """``# graphlint: disable=<rule>  # why`` on the flagged line."""
+    src = ("import numpy as np\n"
+           "v = np.random.rand(3)"
+           "  # graphlint: disable=unseeded-rng  # noise floor demo\n")
+    assert _rules_fired(src) == []
+
+
+def test_suppression_own_line_applies_to_next_line():
+    """A comment-only suppression silences the following line, with the
+    ``--`` justification spelling also accepted."""
+    src = ("import numpy as np\n"
+           "# graphlint: disable=unseeded-rng -- noise floor demo\n"
+           "v = np.random.rand(3)\n")
+    assert _rules_fired(src) == []
+    # ...but it does NOT silence any later line
+    src2 = ("import numpy as np\n"
+            "# graphlint: disable=unseeded-rng -- noise floor demo\n"
+            "a = 1\n"
+            "v = np.random.rand(3)\n")
+    assert ("unseeded-rng", 4) in _rules_fired(src2)
+
+
+def test_suppression_without_justification_is_bad_suppression():
+    """A bare suppression is rejected AND the original finding stays —
+    silencing a rule requires saying why."""
+    src = ("import numpy as np\n"
+           "v = np.random.rand(3)  # graphlint: disable=unseeded-rng\n")
+    fired = _rules_fired(src)
+    assert ("bad-suppression", 2) in fired
+    assert ("unseeded-rng", 2) in fired
+
+
+def test_suppression_unknown_rule_is_bad_suppression():
+    """Typo'd rule ids fail loudly instead of silently not suppressing."""
+    src = ("import numpy as np\n"
+           "v = np.random.rand(3)  # graphlint: disable=unseeded-rgn  # why\n")
+    fired = _rules_fired(src)
+    assert ("bad-suppression", 2) in fired
+    assert ("unseeded-rng", 2) in fired
+
+
+def test_parse_suppressions_multi_rule_list():
+    """One comment can silence several rules on the same line."""
+    sup, problems = parse_suppressions(
+        ["x = 1  # graphlint: disable=unseeded-rng,tracer-branch  # demo"])
+    assert problems == []
+    assert sup[1] == {"unseeded-rng", "tracer-branch"}
+
+
+# ---------------------------------------------------------------------------
+# config: [tool.graphlint], severities, excludes, mini-TOML fallback
+# ---------------------------------------------------------------------------
+
+def test_config_disable_and_enable_lists():
+    """disable= switches a rule off; a non-empty enable= runs only the
+    listed rules."""
+    src = "import numpy as np\nv = np.random.rand(3)\n"
+    assert _rules_fired(src, Config(disable=("unseeded-rng",))) == []
+    only = Config(enable=("discarded-functional-update",))
+    assert _rules_fired(src, only) == []
+    assert list(only.enabled_rules()) == ["discarded-functional-update"]
+
+
+def test_config_severity_override_demotes_to_warning():
+    """A [tool.graphlint.severity] override changes the reported severity
+    (warnings print but do not fail the gate)."""
+    cfg = Config(severity={"unseeded-rng": "warning"})
+    findings = lint_source("f.py", "import numpy as np\nv = np.random.rand(3)\n",
+                           cfg, mesh_axes=_AXES)
+    assert [f.severity for f in findings] == ["warning"]
+
+
+def test_config_from_dict_rejects_unknown_rule_and_bad_severity():
+    """Config typos fail loudly instead of silently weakening the gate."""
+    try:
+        Config.from_dict({"disable": ["no-such-rule"]})
+        raise AssertionError("unknown rule accepted")
+    except ValueError:
+        pass
+    try:
+        Config.from_dict({"severity": {"unseeded-rng": "fatal"}})
+        raise AssertionError("bad severity accepted")
+    except ValueError:
+        pass
+
+
+def test_config_exclude_globs():
+    """exclude= patterns drop files from the walk (repo-relative)."""
+    cfg = Config(exclude=("benchmarks/baselines/*",))
+    assert cfg.is_excluded("benchmarks/baselines/gen.py")
+    assert not cfg.is_excluded("benchmarks/run.py")
+
+
+def test_mini_toml_parser_reads_graphlint_block():
+    """The 3.10 fallback parser (no tomllib in the container) handles
+    sections, string lists (incl. multi-line), severity tables, and
+    comments — enough for pyproject.toml."""
+    raw = _parse_toml_minimal("""
+[project]
+name = "x"                      # comment
+dependencies = [
+    "jax>=0.4.30",
+    "numpy>=1.24",
+]
+
+[tool.graphlint]
+exclude = ["benchmarks/baselines/*"]
+collective-axes = []
+
+[tool.graphlint.severity]
+unseeded-rng = "warning"
+""")
+    assert raw["project"]["dependencies"] == ["jax>=0.4.30", "numpy>=1.24"]
+    block = raw["tool"]["graphlint"]
+    cfg = Config.from_dict(block)
+    assert cfg.exclude == ("benchmarks/baselines/*",)
+    assert cfg.severity_of("unseeded-rng") == "warning"
+
+
+def test_repo_pyproject_config_loads():
+    """The checked-in [tool.graphlint] block parses on this interpreter
+    (3.10 fallback or 3.11 tomllib alike)."""
+    cfg = Config.load(os.path.join(REPO_ROOT, "pyproject.toml"))
+    assert cfg.is_excluded("benchmarks/baselines/anything.py")
+    assert cfg.severity_of("unseeded-rng") == "error"
+
+
+def test_mesh_axis_names_come_from_mesh_py():
+    """The collective-axis allow-list is extracted from launch/mesh.py,
+    so adding a mesh axis automatically teaches the rule."""
+    axes = mesh_axis_names()
+    assert {"pod", "data", "model"} <= axes
+
+
+# ---------------------------------------------------------------------------
+# shared report formats
+# ---------------------------------------------------------------------------
+
+def test_github_annotation_formatter():
+    """Workflow commands carry file/line/title and escape newlines, so a
+    CI failure annotates the offending line in the PR diff."""
+    line = _report.format_github({
+        "path": "src/x.py", "line": 7, "check": "unseeded-rng",
+        "severity": "error", "message": "first\nsecond"})
+    assert line == ("::error file=src/x.py,line=7,"
+                    "title=unseeded-rng::first%0Asecond")
+    warn = _report.format_github({
+        "path": "a,b.py", "line": 1, "check": "c:d",
+        "severity": "warning", "message": "m"})
+    assert warn.startswith("::warning file=a%2Cb.py,line=1,title=c%3Ad::")
+
+
+def test_json_report_shape():
+    """--format=json emits one object with findings + severity counts."""
+    import json
+    buf = io.StringIO()
+    _report.emit([{"path": "p", "line": 1, "check": "c",
+                   "severity": "error", "message": "m"}],
+                 fmt="json", stream=buf)
+    data = json.loads(buf.getvalue())
+    assert data["counts"] == {"error": 1, "warning": 0}
+    assert data["findings"][0]["check"] == "c"
+
+
+# ---------------------------------------------------------------------------
+# the real-tree gate
+# ---------------------------------------------------------------------------
+
+def test_zero_findings_on_real_tree_within_budget():
+    """`python -m tools.graphlint src benchmarks examples` exits 0 on the
+    committed tree, inside the CI wall-clock budget — same code path CI
+    runs, so a new hazard or a slow rule fails here first."""
+    t0 = time.monotonic()
+    findings = lint_paths(["src", "benchmarks", "examples"],
+                          Config.load(), root=REPO_ROOT)
+    elapsed = time.monotonic() - t0
+    errors = [f for f in findings if f.severity == "error"]
+    assert not errors, "\n".join(
+        f"{f.path}:{f.line}: {f.rule}: {f.message}" for f in errors)
+    assert elapsed < 10.0, f"graphlint took {elapsed:.2f}s (budget 10s)"
+
+
+def test_rule_registry_covers_the_issue_hazard_classes():
+    """All six hazard classes stay registered — removing a rule without
+    replacing its coverage fails the build."""
+    assert {"discarded-functional-update", "tracer-branch",
+            "collective-axis", "cacheconfig-required",
+            "pallas-blockspec", "unseeded-rng"} <= set(RULES)

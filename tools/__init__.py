@@ -1,0 +1,4 @@
+"""Repo-local gate tooling: docs lint (`check_docs`) and the JAX/Pallas
+static-analysis pass (`graphlint`).  Nothing here is installed with the
+package; the tools run from a checkout (`python -m tools.graphlint ...`).
+"""

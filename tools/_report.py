@@ -1,0 +1,72 @@
+"""Shared finding-report formats for the repo gates.
+
+Both ``tools/check_docs.py`` and ``tools/graphlint`` emit their findings
+through this module so CI gets one consistent surface:
+
+* ``human`` — ``path:line: [severity] check: message`` (terminal)
+* ``json`` — a single ``{"findings": [...], "counts": {...}}`` object
+* ``github`` — workflow commands (``::error file=...``) so a failing CI
+  step annotates the offending line directly in the PR diff
+
+A *finding* is a plain dict with keys ``path`` (repo-relative), ``line``
+(1-based int), ``check`` (rule / check id), ``severity`` (``"error"`` or
+``"warning"``), and ``message``.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+FORMATS = ("human", "json", "github")
+
+
+def _gh_escape(value: str) -> str:
+    """Escape a workflow-command message per the Actions toolkit rules."""
+    return (value.replace("%", "%25")
+                 .replace("\r", "%0D")
+                 .replace("\n", "%0A"))
+
+
+def _gh_escape_property(value: str) -> str:
+    """Escape a workflow-command property (file/title), which additionally
+    reserves ``,`` and ``:``."""
+    return (_gh_escape(value).replace(":", "%3A").replace(",", "%2C"))
+
+
+def format_github(finding: dict) -> str:
+    """One ``::error``/``::warning`` workflow command for *finding*."""
+    level = "error" if finding.get("severity", "error") == "error" else "warning"
+    return ("::{level} file={file},line={line},title={title}::{msg}".format(
+        level=level,
+        file=_gh_escape_property(str(finding["path"])),
+        line=int(finding.get("line", 1)),
+        title=_gh_escape_property(str(finding["check"])),
+        msg=_gh_escape(str(finding["message"])),
+    ))
+
+
+def format_human(finding: dict) -> str:
+    """``path:line: [severity] check: message`` for terminals."""
+    return "{path}:{line}: [{sev}] {check}: {msg}".format(
+        path=finding["path"], line=finding.get("line", 1),
+        sev=finding.get("severity", "error"), check=finding["check"],
+        msg=finding["message"])
+
+
+def emit(findings, fmt: str = "human", stream=None) -> None:
+    """Write *findings* (list of finding dicts) to *stream* in *fmt*."""
+    stream = stream if stream is not None else sys.stdout
+    if fmt not in FORMATS:
+        raise ValueError(f"unknown format {fmt!r}; expected one of {FORMATS}")
+    if fmt == "json":
+        counts = {"error": 0, "warning": 0}
+        for f in findings:
+            counts[f.get("severity", "error")] = (
+                counts.get(f.get("severity", "error"), 0) + 1)
+        json.dump({"findings": list(findings), "counts": counts},
+                  stream, indent=2, sort_keys=True)
+        stream.write("\n")
+        return
+    fmt_one = format_github if fmt == "github" else format_human
+    for f in findings:
+        stream.write(fmt_one(f) + "\n")

@@ -12,15 +12,20 @@ breaks the build — not the reader:
    fetched.
 
 2. **Docstring coverage** over the public fetch-path API
-   (``PUBLIC_API_MODULES``): every public function, class, and public
-   method defined in those modules must carry a real docstring (not a
-   placeholder).  The gate is ``--fail-under`` percent (default 100 — the
-   equivalent of ``interrogate --fail-under 100`` without adding a
-   dependency the container lacks).
+   (``PUBLIC_API_MODULES`` plus the individually-exported
+   ``PUBLIC_API_SYMBOLS``): every public function, class, and public
+   method defined there must carry a real docstring (not a placeholder).
+   The gate is ``--fail-under`` percent (default 100 — the equivalent of
+   ``interrogate --fail-under 100`` without adding a dependency the
+   container lacks).
+
+Findings are emitted through ``tools/_report.py`` — the same
+``--format=human|json|github`` surface as ``tools/graphlint`` — so CI
+failures annotate the offending file and line in the PR diff.
 
 Usage::
 
-    PYTHONPATH=src python tools/check_docs.py [--fail-under 100]
+    PYTHONPATH=src python tools/check_docs.py [--fail-under 100] [--format github]
 """
 from __future__ import annotations
 
@@ -32,17 +37,29 @@ import re
 import sys
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO_ROOT)
+
+from tools import _report  # noqa: E402
 
 #: modules whose PUBLIC surface is the documented fetch-path API —
-#: fetch_rows and its config/state/stats types, the wire codec, and the
-#: kernel entry points (docs/ARCHITECTURE.md is their narrative form)
+#: fetch_rows and its config/state/stats types, the wire codec, the
+#: kernel entry points, and the arch/shape/mesh/train config dataclasses
+#: (docs/ARCHITECTURE.md is their narrative form)
 PUBLIC_API_MODULES = (
+    "repro.core.config",
     "repro.core.feature_cache",
     "repro.core.generation",
     "repro.graph.subgraph",
     "repro.kernels.cache_gather",
     "repro.kernels.ref",
     "repro.kernels.ops",
+)
+
+#: individually-exported public symbols (``module:name``) from modules
+#: whose remaining surface is launcher plumbing, not public API
+PUBLIC_API_SYMBOLS = (
+    "repro.launch.train:calibrate_capacity_slack",
+    "repro.launch.train:calibrate_probe_hit_cap",
 )
 
 #: a docstring shorter than this is a placeholder, not documentation
@@ -72,8 +89,15 @@ def _anchors_of(md_path: str) -> set:
     return anchors
 
 
+def _link_problem(rel, lineno, message):
+    return {"path": rel, "line": lineno, "check": "markdown-link",
+            "severity": "error", "message": message}
+
+
 def check_markdown_links(files=None) -> list:
-    """Return a list of "<file>: <problem>" strings for broken links."""
+    """Return finding dicts (path/line/check/severity/message) for every
+    broken relative link or missing anchor in the given markdown files
+    (default: README.md + docs/*.md)."""
     if files is None:
         files = [os.path.join(REPO_ROOT, "README.md")]
         docs = os.path.join(REPO_ROOT, "docs")
@@ -83,29 +107,37 @@ def check_markdown_links(files=None) -> list:
                 if f.endswith(".md"))
     problems = []
     for path in files:
+        rel = os.path.relpath(path, REPO_ROOT)
         if not os.path.exists(path):
-            problems.append(f"{path}: file missing")
+            problems.append(_link_problem(rel, 1, "file missing"))
             continue
         base = os.path.dirname(path)
-        rel = os.path.relpath(path, REPO_ROOT)
+        in_code = False
         with open(path, encoding="utf-8") as f:
-            text = f.read()
-        # links inside fenced code blocks are examples, not navigation
-        text = re.sub(r"```.*?```", "", text, flags=re.S)
-        for target in _LINK_RE.findall(text):
-            if target.startswith(_EXTERNAL):
-                continue
-            file_part, _, anchor = target.partition("#")
-            dest = (os.path.normpath(os.path.join(base, file_part))
-                    if file_part else path)
-            if not os.path.exists(dest):
-                problems.append(f"{rel}: broken link target {target!r}")
-                continue
-            if anchor and dest.endswith(".md"):
-                if anchor not in _anchors_of(dest):
-                    problems.append(
-                        f"{rel}: missing anchor {target!r} "
-                        f"(no matching heading in {os.path.relpath(dest, REPO_ROOT)})")
+            for lineno, line in enumerate(f, start=1):
+                if line.lstrip().startswith("```"):
+                    in_code = not in_code
+                    continue
+                if in_code:
+                    # links inside fenced code blocks are examples
+                    continue
+                for target in _LINK_RE.findall(line):
+                    if target.startswith(_EXTERNAL):
+                        continue
+                    file_part, _, anchor = target.partition("#")
+                    dest = (os.path.normpath(os.path.join(base, file_part))
+                            if file_part else path)
+                    if not os.path.exists(dest):
+                        problems.append(_link_problem(
+                            rel, lineno, f"broken link target {target!r}"))
+                        continue
+                    if anchor and dest.endswith(".md"):
+                        if anchor not in _anchors_of(dest):
+                            problems.append(_link_problem(
+                                rel, lineno,
+                                f"missing anchor {target!r} (no matching "
+                                f"heading in "
+                                f"{os.path.relpath(dest, REPO_ROOT)})"))
     return problems
 
 
@@ -131,25 +163,57 @@ def _public_symbols(module):
                     yield f"{module.__name__}.{name}.{mname}", mobj
 
 
+def _location_of(obj) -> tuple:
+    """Best-effort (repo-relative path, 1-based line) for *obj*."""
+    try:
+        src = inspect.getsourcefile(obj)
+        line = inspect.getsourcelines(obj)[1]
+    except (TypeError, OSError):
+        return "<unknown>", 1
+    rel = os.path.relpath(src, REPO_ROOT) if src else "<unknown>"
+    return rel, line
+
+
+def _missing_finding(qualname, obj) -> dict:
+    path, line = _location_of(obj)
+    return {"path": path, "line": line, "check": "docstring",
+            "severity": "error",
+            "message": f"{qualname} has no real docstring "
+                       f"(>= {MIN_DOCSTRING} chars)"}
+
+
 def check_docstrings() -> tuple:
-    """Return ``(coverage_percent, missing)`` over the public API."""
+    """Return ``(coverage_percent, missing)`` over the public API, where
+    *missing* is a list of finding dicts locating each undocumented
+    symbol."""
     covered, missing = 0, []
     total = 0
     for modname in PUBLIC_API_MODULES:
         module = importlib.import_module(modname)
+        total += 1
         if not (module.__doc__ and len(module.__doc__) >= MIN_DOCSTRING):
-            missing.append(modname + " (module docstring)")
-            total += 1
+            missing.append({
+                "path": os.path.relpath(module.__file__, REPO_ROOT),
+                "line": 1, "check": "docstring", "severity": "error",
+                "message": f"{modname} has no module docstring"})
         else:
             covered += 1
-            total += 1
         for qualname, obj in _public_symbols(module):
             total += 1
             doc = inspect.getdoc(obj)
             if doc and len(doc) >= MIN_DOCSTRING:
                 covered += 1
             else:
-                missing.append(qualname)
+                missing.append(_missing_finding(qualname, obj))
+    for spec in PUBLIC_API_SYMBOLS:
+        modname, _, symbol = spec.partition(":")
+        obj = getattr(importlib.import_module(modname), symbol)
+        total += 1
+        doc = inspect.getdoc(obj)
+        if doc and len(doc) >= MIN_DOCSTRING:
+            covered += 1
+        else:
+            missing.append(_missing_finding(f"{modname}.{symbol}", obj))
     pct = 100.0 * covered / max(total, 1)
     return pct, missing
 
@@ -158,23 +222,23 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fail-under", type=float, default=100.0,
                     help="minimum docstring coverage percent (default 100)")
+    ap.add_argument("--format", choices=_report.FORMATS, default="human",
+                    help="finding output format (default: human)")
     args = ap.parse_args()
     sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
-    failed = False
     problems = check_markdown_links()
-    for p in problems:
-        print(f"LINK: {p}", file=sys.stderr)
-        failed = True
     pct, missing = check_docstrings()
-    for m in missing:
-        print(f"DOCSTRING MISSING: {m}", file=sys.stderr)
-    print(f"docstring coverage: {pct:.1f}% "
-          f"({len(missing)} public symbols undocumented)")
+    _report.emit(problems + missing, fmt=args.format,
+                 stream=sys.stderr if args.format == "human" else sys.stdout)
+    failed = bool(problems)
+    if args.format == "human":
+        print(f"docstring coverage: {pct:.1f}% "
+              f"({len(missing)} public symbols undocumented)")
     if pct < args.fail_under:
         print(f"FAIL: coverage {pct:.1f}% < --fail-under "
               f"{args.fail_under:.1f}%", file=sys.stderr)
         failed = True
-    if not problems:
+    if not problems and args.format == "human":
         print("markdown links: OK")
     return 1 if failed else 0
 

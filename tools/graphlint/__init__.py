@@ -1,0 +1,20 @@
+"""graphlint: repo-native static analysis for JAX/Pallas hazard classes.
+
+Every rule encodes a bug class this repo has already paid for once (see
+``docs/LINTING.md`` for the catalog and the motivating incidents).  The
+framework is stdlib-``ast`` only — zero new dependencies — and runs as
+
+    python -m tools.graphlint src/ benchmarks/ examples/
+
+Rules register themselves in :mod:`tools.graphlint.core`; importing
+:mod:`tools.graphlint.rules` populates the registry.
+"""
+from .core import (  # noqa: F401
+    Config,
+    Finding,
+    RULES,
+    lint_paths,
+    lint_source,
+    rule,
+)
+from . import rules  # noqa: F401  (imports register the rule set)

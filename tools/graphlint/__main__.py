@@ -1,0 +1,77 @@
+"""CLI entry point: ``python -m tools.graphlint src/ benchmarks/ examples/``.
+
+Exit status is 1 when any error-severity finding survives suppression
+filtering (warnings print but do not fail), or when ``--max-seconds`` is
+exceeded — the CI gate asserts the pass stays off the critical path.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+# allow `python tools/graphlint/__main__.py` as well as `-m tools.graphlint`
+if __package__ in (None, ""):  # pragma: no cover
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    from tools.graphlint.core import Config, RULES, lint_paths
+else:
+    from .core import Config, RULES, lint_paths
+
+_REPORT_DIR = os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))))
+sys.path.insert(0, _REPORT_DIR)
+from tools import _report  # noqa: E402
+
+
+def main(argv=None) -> int:
+    """Parse args, run the lint, emit findings, return the exit status."""
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.graphlint",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files or directories to lint (repo-relative)")
+    ap.add_argument("--format", choices=_report.FORMATS, default="human",
+                    help="finding output format (default: human)")
+    ap.add_argument("--config", default=None, metavar="PYPROJECT",
+                    help="pyproject.toml to read [tool.graphlint] from "
+                         "(default: the repo's own)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--max-seconds", type=float, default=None,
+                    help="fail if the lint run takes longer than this "
+                         "(the CI wall-clock budget)")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        config = Config.load(args.config)
+        for name in sorted(RULES):
+            fn = RULES[name]
+            doc = (fn.__doc__ or "").strip().split("\n")[0]
+            print(f"{name} [{config.severity_of(name)}] {doc}")
+        return 0
+    if not args.paths:
+        ap.error("no paths given (e.g. src/ benchmarks/ examples/)")
+
+    t0 = time.monotonic()
+    config = Config.load(args.config)
+    findings = lint_paths(args.paths, config)
+    elapsed = time.monotonic() - t0
+
+    _report.emit([f.as_dict() for f in findings], fmt=args.format)
+    n_err = sum(1 for f in findings if f.severity == "error")
+    n_warn = len(findings) - n_err
+    if args.format == "human":
+        print(f"graphlint: {n_err} error(s), {n_warn} warning(s) "
+              f"in {elapsed:.2f}s")
+    if args.max_seconds is not None and elapsed > args.max_seconds:
+        print(f"graphlint: FAIL — took {elapsed:.2f}s, over the "
+              f"--max-seconds {args.max_seconds:.1f}s budget",
+              file=sys.stderr)
+        return 1
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,71 @@
+"""Small AST helpers shared by the graphlint rules."""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+
+def call_tail(func: ast.expr) -> Optional[str]:
+    """Last path segment of a call target: ``jax.lax.psum`` -> ``psum``,
+    ``psum`` -> ``psum``, anything else -> None."""
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def dotted_name(node: ast.expr) -> Optional[str]:
+    """Full dotted path of a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def keyword_arg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    """The value of keyword *name* in *call*, else None."""
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def has_double_star(call: ast.Call) -> bool:
+    """True when the call forwards ``**kwargs`` (keywords are opaque)."""
+    return any(kw.arg is None for kw in call.keywords)
+
+
+def walk_shallow(node: ast.AST) -> Iterator[ast.AST]:
+    """``ast.walk`` that does not descend into nested function/class
+    definitions or lambdas (their scopes are analyzed separately)."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        child = stack.pop()
+        yield child
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda, ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(child))
+
+
+def string_constants(node: ast.expr) -> Iterator[tuple]:
+    """Yield ``(lineno, value)`` for string constants in *node*, looking
+    through tuple/list literals one level deep."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        yield node.lineno, node.value
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                yield elt.lineno, elt.value
+
+
+def function_defs(tree: ast.AST) -> Iterator[ast.FunctionDef]:
+    """Every (possibly nested) function definition in *tree*."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node

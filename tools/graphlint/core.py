@@ -1,0 +1,379 @@
+"""graphlint framework: registry, config, suppressions, and the runner.
+
+The moving parts, in the order a lint run uses them:
+
+* :func:`rule` — decorator that registers a rule function.  A rule takes
+  ``(tree, ctx)`` — the parsed :class:`ast.Module` and a
+  :class:`FileContext` — and yields ``(lineno, message)`` pairs.
+* :class:`Config` — the ``[tool.graphlint]`` block of ``pyproject.toml``
+  (enable/disable lists, per-rule severity, exclude globs, extra
+  collective axis names).  Loads via :mod:`tomllib` on 3.11+, falling
+  back to a minimal TOML-subset parser so the 3.10 container needs no
+  new dependency.
+* suppression comments — ``# graphlint: disable=<rule>[,rule]`` on (or
+  on the line above) the flagged line.  A suppression **must** carry a
+  trailing justification (``-- why`` or ``# why``); a bare or malformed
+  suppression is itself reported as ``bad-suppression`` and cannot be
+  suppressed.
+* :func:`lint_source` / :func:`lint_paths` — run the enabled rules and
+  return :class:`Finding` objects with config-resolved severities.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import os
+import re
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+SEVERITIES = ("error", "warning")
+
+#: findings the runner itself emits; not suppressible, always errors
+META_CHECKS = ("bad-suppression", "parse-error")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a specific line of a specific file."""
+
+    path: str       #: repo-relative posix path
+    line: int       #: 1-based line number
+    rule: str       #: rule id (kebab-case)
+    severity: str   #: "error" | "warning"
+    message: str    #: human-readable explanation
+
+    def as_dict(self) -> dict:
+        """The shared ``tools._report`` finding-dict shape."""
+        return {"path": self.path, "line": self.line, "check": self.rule,
+                "severity": self.severity, "message": self.message}
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Per-file inputs a rule may consult beyond the AST."""
+
+    path: str                 #: repo-relative posix path
+    source: str               #: full file text
+    lines: List[str]          #: source split into lines
+    config: "Config"          #: resolved run configuration
+    mesh_axes: frozenset      #: axis names rules treat as legitimate
+
+
+#: rule-id -> rule function; populated by the :func:`rule` decorator
+RULES: Dict[str, Callable] = {}
+
+
+def rule(name: str, default_severity: str = "error"):
+    """Register a rule function under *name* with a default severity.
+
+    The decorated function must accept ``(tree, ctx)`` and yield
+    ``(lineno, message)`` tuples; its docstring becomes the catalog
+    entry shown by ``--list-rules``.
+    """
+    if default_severity not in SEVERITIES:
+        raise ValueError(f"bad severity {default_severity!r}")
+
+    def deco(fn):
+        fn.rule_name = name
+        fn.default_severity = default_severity
+        RULES[name] = fn
+        return fn
+
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# configuration ([tool.graphlint] in pyproject.toml)
+# ---------------------------------------------------------------------------
+
+def _parse_toml_minimal(text: str) -> dict:
+    """Parse the TOML subset graphlint's config needs (3.10 fallback).
+
+    Supports ``[dotted.section]`` headers, ``key = "string"``,
+    ``key = ["a", "b"]`` single-line string lists, integers, booleans,
+    and ``#`` comments.  Anything fancier raises ``ValueError`` so a
+    silently-misread config cannot weaken the gate.
+    """
+    root: dict = {}
+    table = root
+    pending = ""
+    for raw in text.splitlines():
+        line = _strip_toml_comment(raw).strip()
+        if not line:
+            continue
+        if pending:
+            pending += " " + line
+            if pending.count("[") > pending.count("]"):
+                continue
+            line, pending = pending, ""
+        elif (line.startswith("[") and line.endswith("]")
+                and "=" not in line):
+            table = root
+            for part in line[1:-1].strip().split("."):
+                part = part.strip().strip('"')
+                table = table.setdefault(part, {})
+            continue
+        if "=" not in line:
+            raise ValueError(f"unparseable TOML line: {raw!r}")
+        key, _, value = line.partition("=")
+        value = value.strip()
+        if value.count("[") > value.count("]"):  # multi-line array
+            pending = line
+            continue
+        table[key.strip().strip('"')] = _parse_toml_value(value)
+    return root
+
+
+def _strip_toml_comment(line: str) -> str:
+    out, in_str = [], False
+    for ch in line:
+        if ch == '"':
+            in_str = not in_str
+        if ch == "#" and not in_str:
+            break
+        out.append(ch)
+    return "".join(out)
+
+
+def _parse_toml_value(value: str):
+    if value.startswith("[") and value.endswith("]"):
+        inner = value[1:-1].strip()
+        if not inner:
+            return []
+        return [_parse_toml_value(v.strip())
+                for v in inner.split(",") if v.strip()]
+    if value.startswith('"') and value.endswith('"') and len(value) >= 2:
+        return value[1:-1]
+    if value in ("true", "false"):
+        return value == "true"
+    try:
+        return int(value)
+    except ValueError:
+        raise ValueError(f"unparseable TOML value: {value!r}")
+
+
+def _load_toml(path: str) -> dict:
+    """``tomllib`` when available (3.11+), else the minimal parser."""
+    with open(path, "rb") as f:
+        data = f.read()
+    try:
+        import tomllib
+    except ModuleNotFoundError:
+        return _parse_toml_minimal(data.decode("utf-8"))
+    return tomllib.loads(data.decode("utf-8"))
+
+
+@dataclasses.dataclass
+class Config:
+    """Resolved ``[tool.graphlint]`` settings for one lint run."""
+
+    enable: Tuple[str, ...] = ()        #: if non-empty, ONLY these rules run
+    disable: Tuple[str, ...] = ()       #: rules switched off
+    severity: Dict[str, str] = dataclasses.field(default_factory=dict)
+    exclude: Tuple[str, ...] = ()       #: repo-relative glob patterns
+    collective_axes: Tuple[str, ...] = ()  #: extra allowed axis names
+
+    @classmethod
+    def from_dict(cls, raw: dict) -> "Config":
+        """Build a Config from a ``[tool.graphlint]`` mapping, validating
+        rule ids and severity values so typos fail loudly."""
+        known = set(RULES)
+        cfg = cls(
+            enable=tuple(raw.get("enable", ())),
+            disable=tuple(raw.get("disable", ())),
+            severity=dict(raw.get("severity", {})),
+            exclude=tuple(raw.get("exclude", ())),
+            collective_axes=tuple(raw.get("collective-axes",
+                                          raw.get("collective_axes", ()))),
+        )
+        for name in (*cfg.enable, *cfg.disable, *cfg.severity):
+            if name not in known:
+                raise ValueError(f"[tool.graphlint] references unknown rule "
+                                 f"{name!r} (known: {sorted(known)})")
+        for name, sev in cfg.severity.items():
+            if sev not in SEVERITIES:
+                raise ValueError(f"[tool.graphlint] severity for {name!r} "
+                                 f"must be one of {SEVERITIES}, got {sev!r}")
+        return cfg
+
+    @classmethod
+    def load(cls, pyproject_path: Optional[str] = None) -> "Config":
+        """Read ``[tool.graphlint]`` from *pyproject_path* (default: the
+        repo's own ``pyproject.toml``); absent file/section -> defaults."""
+        path = pyproject_path or os.path.join(REPO_ROOT, "pyproject.toml")
+        if not os.path.exists(path):
+            return cls()
+        raw = _load_toml(path)
+        return cls.from_dict(raw.get("tool", {}).get("graphlint", {}))
+
+    def enabled_rules(self) -> Dict[str, Callable]:
+        """The registry filtered by the enable/disable lists."""
+        names = self.enable or tuple(RULES)
+        return {n: RULES[n] for n in names if n not in self.disable}
+
+    def severity_of(self, rule_name: str) -> str:
+        """Config override, else the rule's registered default."""
+        if rule_name in self.severity:
+            return self.severity[rule_name]
+        if rule_name in RULES:
+            return RULES[rule_name].default_severity
+        return "error"
+
+    def is_excluded(self, rel_path: str) -> bool:
+        """True when *rel_path* matches an exclude glob."""
+        rel = rel_path.replace(os.sep, "/")
+        return any(fnmatch.fnmatch(rel, pat) for pat in self.exclude)
+
+
+def mesh_axis_names(mesh_py: Optional[str] = None) -> frozenset:
+    """Axis names declared in ``src/repro/launch/mesh.py``.
+
+    The collective-axis rule treats exactly these (plus any configured
+    ``collective-axes`` additions) as legitimate ``axis_name`` string
+    literals.  Extraction is syntactic — every string constant inside a
+    tuple literal in ``mesh.py`` — so adding an axis to the mesh module
+    automatically teaches the rule about it.
+    """
+    path = mesh_py or os.path.join(REPO_ROOT, "src", "repro", "launch",
+                                   "mesh.py")
+    if not os.path.exists(path):
+        return frozenset()
+    with open(path, encoding="utf-8") as f:
+        tree = ast.parse(f.read())
+    axes = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Tuple):
+            for elt in node.elts:
+                if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                    axes.add(elt.value)
+    return frozenset(axes)
+
+
+# ---------------------------------------------------------------------------
+# suppression comments
+# ---------------------------------------------------------------------------
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*graphlint:\s*disable=(?P<rules>[A-Za-z0-9_\-]+(?:\s*,\s*[A-Za-z0-9_\-]+)*)"
+    r"(?P<rest>.*)$")
+_JUSTIFY_RE = re.compile(r"^\s*(?:--|#)\s*(?P<why>\S.*)$")
+
+
+def parse_suppressions(lines: List[str]):
+    """Scan *lines* for suppression comments.
+
+    Returns ``(suppressed, problems)`` where *suppressed* maps a 1-based
+    line number to the set of rule ids silenced **on that line** (an
+    own-line comment silences the next line), and *problems* is a list
+    of ``(lineno, message)`` for malformed suppressions: a missing
+    justification or an unknown rule id.  Problems surface as
+    ``bad-suppression`` findings, which are never suppressible.
+    """
+    suppressed: Dict[int, set] = {}
+    problems: List[Tuple[int, str]] = []
+    for idx, line in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(line)
+        if not m:
+            if re.search(r"#\s*graphlint:", line):
+                problems.append(
+                    (idx, "unparseable graphlint comment; expected "
+                          "'# graphlint: disable=<rule>[,rule]  # justification'"))
+            continue
+        names = {n.strip() for n in m.group("rules").split(",")}
+        unknown = sorted(n for n in names if n not in RULES)
+        if unknown:
+            problems.append(
+                (idx, f"suppression names unknown rule(s) {unknown}; "
+                      f"known rules: {sorted(RULES)}"))
+            continue
+        just = _JUSTIFY_RE.match(m.group("rest"))
+        if not just:
+            problems.append(
+                (idx, "suppression lacks a justification; write "
+                      "'# graphlint: disable=<rule>  # why it is safe'"))
+            continue
+        target = idx
+        before = line[:m.start()].strip()
+        if not before:           # comment-only line silences the next line
+            target = idx + 1
+        suppressed.setdefault(target, set()).update(names)
+    return suppressed, problems
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+def lint_source(path: str, source: str, config: Optional[Config] = None,
+                mesh_axes: Optional[frozenset] = None) -> List[Finding]:
+    """Lint one file's *source*; *path* is used for reporting only."""
+    config = config if config is not None else Config()
+    axes = mesh_axes if mesh_axes is not None else mesh_axis_names()
+    axes = frozenset(axes) | frozenset(config.collective_axes)
+    lines = source.splitlines()
+    ctx = FileContext(path=path, source=source, lines=lines,
+                      config=config, mesh_axes=axes)
+    findings: List[Finding] = []
+
+    suppressed, problems = parse_suppressions(lines)
+    for lineno, message in problems:
+        findings.append(Finding(path=path, line=lineno,
+                                rule="bad-suppression", severity="error",
+                                message=message))
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        findings.append(Finding(
+            path=path, line=exc.lineno or 1, rule="parse-error",
+            severity="error", message=f"file does not parse: {exc.msg}"))
+        return findings
+
+    for name, fn in config.enabled_rules().items():
+        sev = config.severity_of(name)
+        for lineno, message in fn(tree, ctx):
+            if name in suppressed.get(lineno, ()):
+                continue
+            findings.append(Finding(path=path, line=lineno, rule=name,
+                                    severity=sev, message=message))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def iter_python_files(paths: Iterable[str], config: Config,
+                      root: Optional[str] = None):
+    """Yield ``(abs_path, rel_path)`` for every lintable ``.py`` file."""
+    root = root or REPO_ROOT
+    for p in paths:
+        absolute = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(absolute):
+            rel = os.path.relpath(absolute, root).replace(os.sep, "/")
+            if not config.is_excluded(rel):
+                yield absolute, rel
+            continue
+        for dirpath, dirnames, filenames in os.walk(absolute):
+            dirnames[:] = [d for d in sorted(dirnames)
+                           if d not in ("__pycache__", ".git")]
+            for fname in sorted(filenames):
+                if not fname.endswith(".py"):
+                    continue
+                full = os.path.join(dirpath, fname)
+                rel = os.path.relpath(full, root).replace(os.sep, "/")
+                if not config.is_excluded(rel):
+                    yield full, rel
+
+
+def lint_paths(paths: Iterable[str], config: Optional[Config] = None,
+               root: Optional[str] = None) -> List[Finding]:
+    """Lint every Python file under *paths* (files or directories)."""
+    config = config if config is not None else Config.load()
+    axes = mesh_axis_names() | frozenset(config.collective_axes)
+    findings: List[Finding] = []
+    for absolute, rel in iter_python_files(paths, config, root=root):
+        with open(absolute, encoding="utf-8") as f:
+            source = f.read()
+        findings.extend(lint_source(rel, source, config, mesh_axes=axes))
+    return findings

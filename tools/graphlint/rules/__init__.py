@@ -1,0 +1,13 @@
+"""Rule modules; importing this package registers every rule with
+:data:`tools.graphlint.core.RULES`.  One module per hazard class — see
+``docs/LINTING.md`` for the catalog and the historical bug each rule
+encodes.
+"""
+from . import (  # noqa: F401
+    cacheconfig_required,
+    collective_axis,
+    discarded_update,
+    pallas_blockspec,
+    tracer_branch,
+    unseeded_rng,
+)

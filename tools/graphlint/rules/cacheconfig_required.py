@@ -1,0 +1,59 @@
+"""cacheconfig-required: fetch-path calls must thread the CacheConfig.
+
+The PR 3 review hardening made the cache geometry (``CacheConfig``) an
+explicit argument everywhere — the original bug was a call site that
+built a cache with one config and probed it with a default-constructed
+one, a shape-compatible but semantically dead configuration.  This rule
+enforces the contract at every call site:
+
+* ``fetch_rows(..., cache=...)`` must also pass ``cache_cfg=``;
+* ``cache_probe(...)`` / ``tiered_probe(...)`` must pass the
+  keyword-only ``cfg=``;
+* ``cache_insert(...)`` must pass ``cfg`` (5th positional or keyword).
+
+Calls forwarding ``**kwargs`` are skipped (the config may travel in the
+dict); the runtime check inside ``fetch_rows`` still backstops those.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..astutil import call_tail, has_double_star, keyword_arg
+from ..core import rule
+
+
+def _is_none(node) -> bool:
+    return isinstance(node, ast.Constant) and node.value is None
+
+
+@rule("cacheconfig-required")
+def check(tree, ctx):
+    """Flag fetch_rows/cache_probe/tiered_probe/cache_insert call sites
+    that do not pass the CacheConfig."""
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        tail = call_tail(node.func)
+        if tail is None or has_double_star(node):
+            continue
+        if tail == "fetch_rows":
+            cache = keyword_arg(node, "cache")
+            if cache is not None and not _is_none(cache):
+                cfg = keyword_arg(node, "cache_cfg")
+                if cfg is None or _is_none(cfg):
+                    yield (node.lineno,
+                           "fetch_rows(cache=...) without cache_cfg= — the "
+                           "cache geometry must be threaded explicitly "
+                           "(the PR 3 dead-config bug)")
+        elif tail in ("cache_probe", "tiered_probe"):
+            if keyword_arg(node, "cfg") is None:
+                yield (node.lineno,
+                       f"{tail}() without cfg= — CacheConfig is a required "
+                       f"keyword; probing with an implicit default config "
+                       f"is the dead-config bug class")
+        elif tail == "cache_insert":
+            if len(node.args) < 5 and keyword_arg(node, "cfg") is None:
+                yield (node.lineno,
+                       "cache_insert() without cfg — pass the CacheConfig "
+                       "(5th positional or cfg=) so admission uses the "
+                       "real geometry")

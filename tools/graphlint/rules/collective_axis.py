@@ -1,0 +1,64 @@
+"""collective-axis: collective axis names must come from the mesh.
+
+Collectives (``psum``/``all_to_all``/``axis_index``/...) silently hang
+or mis-reduce when an ``axis_name`` string drifts from the mesh axes
+declared in ``src/repro/launch/mesh.py`` (``pod``/``data``/``model``).
+This rule checks every string-literal axis name at a collective call
+site against that set (extendable via ``collective-axes`` in
+``[tool.graphlint]``), and additionally requires ``shard_map`` calls to
+pass ``out_specs`` explicitly — the historical out_specs-defaulting bug
+produced replicated outputs that silently multiplied memory.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..astutil import call_tail, has_double_star, string_constants
+from ..core import rule
+
+#: jax.lax / jax collective entry points that take axis names
+_COLLECTIVES = frozenset({
+    "psum", "pmean", "pmax", "pmin", "psum_scatter", "all_gather",
+    "all_to_all", "ppermute", "pshuffle", "axis_index", "axis_size",
+})
+
+#: keywords at collective call sites that carry axis names
+_AXIS_KEYWORDS = ("axis_name", "axis")
+
+
+@rule("collective-axis")
+def check(tree, ctx):
+    """Flag string-literal axis names not declared in launch/mesh.py and
+    shard_map calls that omit ``out_specs``."""
+    allowed = ctx.mesh_axes
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        tail = call_tail(node.func)
+        if tail == "shard_map":
+            if (not has_double_star(node)
+                    and not any(kw.arg == "out_specs"
+                                for kw in node.keywords)):
+                yield (node.lineno,
+                       "shard_map call without an explicit out_specs= — "
+                       "spell out the output shardings so a replicated "
+                       "default cannot silently blow up memory")
+            continue
+        if tail not in _COLLECTIVES:
+            continue
+        axis_exprs = list(node.args)
+        axis_exprs += [kw.value for kw in node.keywords
+                       if kw.arg in _AXIS_KEYWORDS]
+        for lineno, name in _axis_strings(axis_exprs):
+            if name not in allowed:
+                yield (lineno,
+                       f"collective {tail}() uses axis name {name!r}, "
+                       f"which is not declared in launch/mesh.py "
+                       f"(allowed: {sorted(allowed)}); use the mesh "
+                       f"constants or add it to [tool.graphlint] "
+                       f"collective-axes")
+
+
+def _axis_strings(exprs):
+    for expr in exprs:
+        yield from string_constants(expr)

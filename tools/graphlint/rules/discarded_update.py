@@ -1,0 +1,41 @@
+"""discarded-functional-update: a bare ``x.at[...].set(...)`` statement.
+
+JAX arrays are immutable; ``x.at[i].set(v)`` *returns* the updated array
+and leaves ``x`` untouched.  As an expression statement the update is a
+silent no-op — the classic porting bug from the in-place NumPy idiom.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..core import rule
+
+#: the .at[...] update methods (jax.numpy ndarray.at documentation)
+_UPDATE_METHODS = frozenset({
+    "set", "add", "subtract", "multiply", "divide", "power",
+    "min", "max", "apply", "get",
+})
+
+
+def _is_at_update(call: ast.Call) -> bool:
+    func = call.func
+    if not (isinstance(func, ast.Attribute) and func.attr in _UPDATE_METHODS):
+        return False
+    sub = func.value
+    return (isinstance(sub, ast.Subscript)
+            and isinstance(sub.value, ast.Attribute)
+            and sub.value.attr == "at")
+
+
+@rule("discarded-functional-update")
+def check(tree, ctx):
+    """Flag expression statements whose value is an ``.at[...].<op>(...)``
+    call — the functional result is discarded, so the update never
+    happens."""
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Expr) and isinstance(node.value, ast.Call)
+                and _is_at_update(node.value)):
+            yield (node.lineno,
+                   "result of functional .at[...] update is discarded — "
+                   "JAX arrays are immutable, so this statement is a no-op; "
+                   "bind the result (x = x.at[i].set(v))")

@@ -1,0 +1,189 @@
+"""pallas-blockspec: Pallas launch-geometry and shift-width hygiene.
+
+Three checks, all encoding bugs this repo has actually shipped:
+
+1. **grid built with `//`** — a ``pl.pallas_call`` grid dimension
+   computed with floor division silently drops the partial final block
+   when the axis stops being an exact multiple; ``pl.cdiv`` covers it.
+2. **impure BlockSpec index map** — a ``pl.BlockSpec`` whose lambda
+   index map calls functions can capture traced state or allocate; index
+   maps must be pure index arithmetic.
+3. **shift width that can reach 32** — ``x >> (32 - k)`` (or
+   ``shift_right_logical`` with such an amount) is undefined for
+   ``k == 0`` on int32/uint32 lanes: shifting by 32 is UB and produced
+   the PR 3 degenerate-hash bug (every id hashed to set 0 when
+   ``n_sets == 1``).  A ``32 - <nonconstant>`` shift amount must sit
+   behind an early-out guard (an ``if`` that returns/raises before the
+   shift — the ``hash_slots`` idiom).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from ..astutil import call_tail, function_defs, keyword_arg
+from ..core import rule
+
+_SHIFT_CALLS = frozenset({
+    "shift_right_logical", "shift_right_arithmetic", "shift_left",
+    "right_shift", "left_shift",
+})
+
+#: single-argument wrappers to look through when resolving shift amounts
+_CAST_WRAPPERS = frozenset({
+    "uint32", "int32", "uint64", "int64", "asarray", "array", "int",
+    "astype",
+})
+
+
+def _assign_env(scope: ast.AST) -> Dict[str, ast.expr]:
+    """name -> value for simple ``name = expr`` assignments in *scope*
+    (shallow: nested function bodies keep their own env)."""
+    env: Dict[str, ast.expr] = {}
+    body = scope.body if hasattr(scope, "body") else []
+    stack: List[ast.stmt] = list(body)
+    while stack:
+        stmt = stack.pop()
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)):
+            env[stmt.targets[0].id] = stmt.value
+        for field in ("body", "orelse", "finalbody"):
+            stack.extend(getattr(stmt, field, []))
+    return env
+
+
+def _resolve(expr: ast.expr, env: Dict[str, ast.expr],
+             depth: int = 4) -> ast.expr:
+    """Chase simple names and single-arg casts to the defining expr."""
+    while depth > 0:
+        depth -= 1
+        if isinstance(expr, ast.Name) and expr.id in env:
+            expr = env[expr.id]
+        elif (isinstance(expr, ast.Call) and len(expr.args) == 1
+                and call_tail(expr.func) in _CAST_WRAPPERS):
+            expr = expr.args[0]
+        else:
+            break
+    return expr
+
+
+def _has_32_minus_dynamic(expr: ast.expr) -> bool:
+    """True when *expr* contains ``32 - <non-constant>``."""
+    for node in ast.walk(expr):
+        if (isinstance(node, ast.BinOp) and isinstance(node.op, ast.Sub)
+                and isinstance(node.left, ast.Constant)
+                and node.left.value == 32
+                and not isinstance(node.right, ast.Constant)):
+            return True
+    return False
+
+
+def _shift_amounts(scope: ast.AST) -> Iterator[Tuple[int, ast.expr]]:
+    """(lineno, amount-expr) of every shift operation in *scope*,
+    excluding nested function bodies (handled by their own pass)."""
+    stack = list(ast.iter_child_nodes(scope))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if (isinstance(node, ast.BinOp)
+                and isinstance(node.op, (ast.LShift, ast.RShift))):
+            yield node.lineno, node.right
+        elif (isinstance(node, ast.Call)
+                and call_tail(node.func) in _SHIFT_CALLS
+                and len(node.args) >= 2):
+            yield node.lineno, node.args[1]
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _guarded_before(scope: ast.AST, lineno: int) -> bool:
+    """True when an ``if`` earlier in *scope* returns/raises — the
+    degenerate case has an early out before the shift executes."""
+    stack = list(ast.iter_child_nodes(scope))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if isinstance(node, ast.If) and node.lineno < lineno:
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.Return, ast.Raise)):
+                    return True
+        stack.extend(ast.iter_child_nodes(node))
+    return False
+
+
+def _scopes(tree: ast.Module):
+    yield tree
+    yield from function_defs(tree)
+
+
+@rule("pallas-blockspec")
+def check(tree, ctx):
+    """Flag `//`-built grids, impure BlockSpec lambda index maps, and
+    unguarded ``32 - k`` shift widths."""
+    module_env = _assign_env(tree)
+
+    # --- shift widths, per scope ------------------------------------
+    for scope in _scopes(tree):
+        env = dict(module_env)
+        if scope is not tree:
+            env.update(_assign_env(scope))
+        for lineno, amount in _shift_amounts(scope):
+            resolved = _resolve(amount, env)
+            if (_has_32_minus_dynamic(resolved)
+                    and not _guarded_before(scope, lineno)):
+                yield (lineno,
+                       "shift amount of the form `32 - k` can reach 32 "
+                       "when k == 0 — undefined behaviour on int32/uint32 "
+                       "(the degenerate-hash bug); guard the k == 0 case "
+                       "with an early return before shifting")
+
+    # --- pallas_call grids and BlockSpec index maps ------------------
+    for scope in _scopes(tree):
+        env = dict(module_env)
+        if scope is not tree:
+            env.update(_assign_env(scope))
+        stack = list(ast.iter_child_nodes(scope))
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            stack.extend(ast.iter_child_nodes(node))
+            if not isinstance(node, ast.Call):
+                continue
+            tail = call_tail(node.func)
+            if tail == "pallas_call":
+                grid = keyword_arg(node, "grid")
+                if grid is not None:
+                    resolved = _resolve(grid, env)
+                    for lineno in _floordiv_lines(resolved):
+                        yield (lineno,
+                               "pallas_call grid dimension uses `//` — a "
+                               "non-multiple axis silently drops its "
+                               "partial final block; use pl.cdiv")
+            elif tail == "BlockSpec":
+                maps = [a for a in node.args if isinstance(a, ast.Lambda)]
+                kw = keyword_arg(node, "index_map")
+                if isinstance(kw, ast.Lambda):
+                    maps.append(kw)
+                for lam in maps:
+                    for sub in ast.walk(lam.body):
+                        if isinstance(sub, ast.Call):
+                            yield (lam.lineno,
+                                   "BlockSpec index map calls a function — "
+                                   "index maps must be pure index "
+                                   "arithmetic (block coords in, block "
+                                   "coords out)")
+                            break
+
+
+def _floordiv_lines(expr: ast.expr):
+    seen = set()
+    for node in ast.walk(expr):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.FloorDiv):
+            if node.lineno not in seen:
+                seen.add(node.lineno)
+                yield node.lineno

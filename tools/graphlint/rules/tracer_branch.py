@@ -1,0 +1,247 @@
+"""tracer-branch: Python control flow on traced values.
+
+Inside a ``@jax.jit``/``shard_map``-wrapped function or a Pallas kernel,
+the arguments are tracers (or refs): ``if x > 0:``, ``while n < k:``,
+``int(x)`` and ``bool(x)`` force concretization — a
+``ConcretizationTypeError`` at best, a silently traced-once constant
+branch at worst.  Structured control flow (``jnp.where``, ``lax.cond``,
+``lax.while_loop``, ``pl.when``) is the functional replacement.
+
+Scope is deliberately conservative to stay false-positive-free:
+
+* only functions that are *provably* traced are analyzed — decorated
+  with ``jit``, passed by name to ``jax.jit(...)`` / ``shard_map(...)``,
+  or used as a ``pl.pallas_call`` kernel (directly or via
+  ``functools.partial``);
+* only values derived from the function's parameters are tainted
+  (``static_argnames``/``static_argnums`` params and, for kernels,
+  keyword-only params — the static-configuration idiom — are exempt);
+* shape/dtype introspection (``x.shape``, ``x.ndim``, ``len(x)``,
+  ``isinstance``) and identity tests (``x is None``) are static under
+  tracing and never flagged;
+* nested function definitions are skipped (they are separate scopes,
+  usually ``pl.when`` bodies or branch lambdas).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set, Tuple
+
+from ..astutil import call_tail, function_defs, keyword_arg
+from ..core import rule
+
+#: attribute reads that are static under tracing (abstract-value metadata)
+_STATIC_ATTRS = frozenset({
+    "shape", "ndim", "dtype", "size", "aval", "sharding", "weak_type",
+    "itemsize", "nbytes",
+})
+
+#: builtins whose result on a tracer is static (metadata, not the value)
+_STATIC_CALLS = frozenset({
+    "len", "isinstance", "issubclass", "type", "getattr", "hasattr",
+    "callable", "repr",
+})
+
+_CAST_CALLS = frozenset({"int", "bool", "float"})
+
+_SKIP_SCOPES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda,
+                ast.ClassDef)
+
+
+def _tainted_use(expr: ast.expr, tainted: Set[str]):
+    """Line of the first non-static use of a tainted name in *expr*,
+    else None.  Static contexts (shape/dtype reads, ``len``/``isinstance``
+    calls, ``is``/``is not`` comparisons) are skipped subtree-wide."""
+    def visit(node):
+        if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+            return None
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id in _STATIC_CALLS):
+            return None
+        if (isinstance(node, ast.Compare)
+                and all(isinstance(op, (ast.Is, ast.IsNot))
+                        for op in node.ops)):
+            return None
+        if isinstance(node, _SKIP_SCOPES):
+            return None
+        if isinstance(node, ast.Name) and node.id in tainted:
+            return node.lineno
+        for child in ast.iter_child_nodes(node):
+            hit = visit(child)
+            if hit is not None:
+                return hit
+        return None
+
+    return visit(expr)
+
+
+def _static_spec(call: ast.Call) -> Tuple[Set[str], Set[int]]:
+    """(static_argnames, static_argnums) declared on a jit call."""
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    val = keyword_arg(call, "static_argnames")
+    if isinstance(val, ast.Constant) and isinstance(val.value, str):
+        names.add(val.value)
+    elif isinstance(val, (ast.Tuple, ast.List)):
+        names.update(e.value for e in val.elts
+                     if isinstance(e, ast.Constant)
+                     and isinstance(e.value, str))
+    val = keyword_arg(call, "static_argnums")
+    if isinstance(val, ast.Constant) and isinstance(val.value, int):
+        nums.add(val.value)
+    elif isinstance(val, (ast.Tuple, ast.List)):
+        nums.update(e.value for e in val.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, int))
+    return names, nums
+
+
+def _is_jit_target(node: ast.expr) -> bool:
+    return call_tail(node) == "jit"
+
+
+def _jit_decorator(dec: ast.expr):
+    """(static_argnames, static_argnums) when *dec* marks a jit'd
+    function — ``@jax.jit``, ``@jit(...)``, ``@partial(jax.jit, ...)`` —
+    else None."""
+    if _is_jit_target(dec):
+        return set(), set()
+    if isinstance(dec, ast.Call):
+        if _is_jit_target(dec.func):
+            return _static_spec(dec)
+        if (call_tail(dec.func) == "partial" and dec.args
+                and _is_jit_target(dec.args[0])):
+            return _static_spec(dec)
+    return None
+
+
+def _kernel_name(arg: ast.expr):
+    """Kernel function name from a pallas_call first argument."""
+    if isinstance(arg, ast.Name):
+        return arg.id
+    if (isinstance(arg, ast.Call) and call_tail(arg.func) == "partial"
+            and arg.args and isinstance(arg.args[0], ast.Name)):
+        return arg.args[0].id
+    return None
+
+
+def _collect_candidates(tree):
+    """(fn_node, static_names, static_nums, is_kernel, how) tuples for
+    every function the rule can prove is traced."""
+    by_name = {}
+    for fn in function_defs(tree):
+        by_name.setdefault(fn.name, []).append(fn)
+    out = []
+    for fn in function_defs(tree):
+        for dec in fn.decorator_list:
+            spec = _jit_decorator(dec)
+            if spec is not None:
+                out.append((fn, spec[0], spec[1], False, "jit"))
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        tail = call_tail(node.func)
+        if tail == "jit" and node.args and isinstance(node.args[0], ast.Name):
+            names, nums = _static_spec(node)
+            for fn in by_name.get(node.args[0].id, ()):
+                out.append((fn, names, nums, False, "jit"))
+        elif (tail == "shard_map" and node.args
+                and isinstance(node.args[0], ast.Name)):
+            for fn in by_name.get(node.args[0].id, ()):
+                out.append((fn, set(), set(), False, "shard_map"))
+        elif tail == "pallas_call" and node.args:
+            kname = _kernel_name(node.args[0])
+            if kname:
+                for fn in by_name.get(kname, ()):
+                    out.append((fn, set(), set(), True, "pallas_call"))
+    return out
+
+
+def _analyze(fn, static_names, static_nums, is_kernel, how,
+             findings: List[Tuple[int, str]]):
+    params = [a.arg for a in (*fn.args.posonlyargs, *fn.args.args)]
+    if not is_kernel:
+        # keyword-only params of kernels are the static-config idiom
+        # (closed over by functools.partial); positional ones are refs
+        params += [a.arg for a in fn.args.kwonlyargs]
+    tainted = {p for i, p in enumerate(params)
+               if p not in static_names and i not in static_nums
+               and p != "self"}
+
+    def check_casts(expr):
+        stack = [expr]
+        while stack:
+            node = stack.pop()
+            if isinstance(node, _SKIP_SCOPES):
+                continue
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in _CAST_CALLS and node.args
+                    and any(_tainted_use(a, tainted) is not None
+                            for a in node.args)):
+                findings.append((
+                    node.lineno,
+                    f"{node.func.id}() on a traced value inside a {how} "
+                    f"function '{fn.name}' forces concretization — "
+                    f"compute with jnp/lax ops instead"))
+            stack.extend(ast.iter_child_nodes(node))
+
+    def visit(stmt):
+        if isinstance(stmt, _SKIP_SCOPES):
+            return
+        if isinstance(stmt, ast.Assign):
+            check_casts(stmt.value)
+            is_tainted = _tainted_use(stmt.value, tainted) is not None
+            for tgt in stmt.targets:
+                for name in ast.walk(tgt):
+                    if isinstance(name, ast.Name):
+                        (tainted.add if is_tainted
+                         else tainted.discard)(name.id)
+        elif isinstance(stmt, ast.AugAssign):
+            check_casts(stmt.value)
+            if (isinstance(stmt.target, ast.Name)
+                    and _tainted_use(stmt.value, tainted) is not None):
+                tainted.add(stmt.target.id)
+        elif isinstance(stmt, (ast.If, ast.While)):
+            kind = "if" if isinstance(stmt, ast.If) else "while"
+            hit = _tainted_use(stmt.test, tainted)
+            if hit is not None:
+                findings.append((
+                    stmt.lineno,
+                    f"Python `{kind}` on a traced value inside a {how} "
+                    f"function '{fn.name}' — use jnp.where/lax.cond/"
+                    f"lax.while_loop (or pl.when in kernels)"))
+            check_casts(stmt.test)
+            for s in (*stmt.body, *stmt.orelse):
+                visit(s)
+        elif isinstance(stmt, ast.For):
+            check_casts(stmt.iter)
+            for s in (*stmt.body, *stmt.orelse):
+                visit(s)
+        elif isinstance(stmt, ast.With):
+            for s in stmt.body:
+                visit(s)
+        elif isinstance(stmt, ast.Try):
+            for s in (*stmt.body, *stmt.orelse, *stmt.finalbody):
+                visit(s)
+        elif isinstance(stmt, (ast.Return, ast.Expr)) and stmt.value:
+            check_casts(stmt.value)
+
+    for stmt in fn.body:
+        visit(stmt)
+
+
+@rule("tracer-branch")
+def check(tree, ctx):
+    """Flag Python ``if``/``while``/``int()``/``bool()``/``float()`` on
+    values derived from the parameters of provably-traced functions."""
+    findings: List[Tuple[int, str]] = []
+    seen = set()
+    for fn, names, nums, is_kernel, how in _collect_candidates(tree):
+        key = (id(fn), frozenset(names), frozenset(nums), is_kernel)
+        if key in seen:
+            continue
+        seen.add(key)
+        _analyze(fn, names, nums, is_kernel, how, findings)
+    for item in sorted(set(findings)):
+        yield item

@@ -1,0 +1,85 @@
+"""unseeded-rng: randomness must carry an explicit seed.
+
+Benchmarks and differential tests in this repo are reproducible by
+construction — every synthetic graph, id stream, and feature table comes
+from ``np.random.default_rng(seed)``.  Global-state randomness
+(``np.random.rand``, ``random.random``) silently breaks that: two runs
+of the same benchmark stop being comparable, and a flaky differential
+failure cannot be replayed.  This rule flags module-level RNG calls and
+unseeded generator constructions; the fix is an explicit
+``np.random.default_rng(seed)`` / ``random.Random(seed)`` object.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..astutil import call_tail, dotted_name
+from ..core import rule
+
+#: numpy.random constructors that carry their seed explicitly
+_SEEDED_CONSTRUCTORS = frozenset({
+    "default_rng", "Generator", "SeedSequence", "PCG64", "Philox",
+    "MT19937", "RandomState",
+})
+
+#: stdlib ``random`` module calls that are themselves the seeding step
+_STDLIB_SEEDERS = frozenset({"Random", "SystemRandom", "seed"})
+
+
+def _numpy_aliases(tree) -> set:
+    """Local names bound to the numpy module (``import numpy as np``)."""
+    aliases = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "numpy":
+                    aliases.add(a.asname or "numpy")
+    return aliases
+
+
+def _stdlib_random_imported(tree) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            if any(a.name == "random" for a in node.names):
+                return True
+    return False
+
+
+@rule("unseeded-rng")
+def check(tree, ctx):
+    """Flag ``np.random.*`` / ``random.*`` calls that draw from global
+    RNG state instead of an explicitly seeded generator."""
+    np_names = _numpy_aliases(tree)
+    has_stdlib_random = _stdlib_random_imported(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = dotted_name(node.func)
+        if dotted is None:
+            continue
+        parts = dotted.split(".")
+        # numpy: np.random.<fn>(...)
+        if len(parts) == 3 and parts[0] in np_names and parts[1] == "random":
+            fn = parts[2]
+            if fn not in _SEEDED_CONSTRUCTORS:
+                yield (node.lineno,
+                       f"np.random.{fn}() draws from global RNG state — "
+                       f"use an explicit np.random.default_rng(seed) "
+                       f"generator so runs are reproducible")
+            elif not node.args and not node.keywords:
+                yield (node.lineno,
+                       f"np.random.{fn}() without a seed — pass an "
+                       f"explicit seed so runs are reproducible")
+        # stdlib: random.<fn>(...)
+        elif (len(parts) == 2 and parts[0] == "random"
+                and has_stdlib_random):
+            fn = parts[1]
+            if fn not in _STDLIB_SEEDERS:
+                yield (node.lineno,
+                       f"random.{fn}() draws from global RNG state — "
+                       f"use an explicit random.Random(seed) instance")
+            elif fn in ("Random", "SystemRandom") and fn == "Random" \
+                    and not node.args:
+                yield (node.lineno,
+                       "random.Random() without a seed — pass an explicit "
+                       "seed so runs are reproducible")
