@@ -1,0 +1,395 @@
+"""L3 host feature store: steady-state step time, device vs host placement.
+
+The paper's 530M-node feature table does not fit aggregate device
+memory; the L3 tier (``core/host_store.py``) keeps it in host RAM and
+resolves misses through an asynchronous gather that rides under the
+next step's generation compute (the issue/collect split).  This
+benchmark measures the cost of that decoupling END TO END — the full
+generate / issue / patch+train dispatch sequence ``pipelined_loop``
+runs — not the gather in isolation, because the overlap claim is about
+what the *loop* pays, not what the transfer costs.
+
+The sweep scales the feature table to 1x / 2x / 4x a nominal device
+budget and measures three placements per size:
+
+  * ``device``   — the table lives on device, misses resolve through
+                   the routed owner ``all_to_all`` (the baseline; at
+                   4x this configuration is exactly what capacity
+                   makes impossible on real hardware);
+  * ``host d2``  — host table, ``host_gather_depth=2``: the gather
+                   runs on the store's worker thread and overlaps the
+                   step (overlap-ON);
+  * ``host d1``  — host table, ``host_gather_depth=1``: the gather
+                   blocks at issue time (overlap-OFF — what a naive
+                   host store would pay).
+
+Gates ``main`` enforces on the W=4 smoke configuration, at the 4x
+table (the size device memory cannot hold — the configuration the
+whole tier exists for):
+
+  * overlapped host step time <= 1.15x the device baseline (the
+    decoupling-is-affordable claim);
+  * overlap-on strictly faster than overlap-off (the double buffer
+    actually hides the transfer).
+
+Two measurement-hygiene rules keep the comparisons honest:
+
+  * every cell runs in a FRESH interpreter (``sweep`` shells out to
+    ``--cell``): cells measured in one process inherit each other's
+    allocator and JIT-cache state, which biases later cells slow by
+    10%+ — more than the effect under test;
+  * each cell times ``repeats`` independent blocks of ``iters`` steps
+    and keeps the MINIMUM block time, so a contention spike cannot
+    flip a gate.
+
+The overlap gate is additionally hardware-aware: thread overlap needs
+a spare core to run on, so on a single-core runner (where wall time
+equals total work and depth 2 cannot win by construction) the d2/d1
+comparison is reported but not enforced.
+
+    PYTHONPATH=src python -m benchmarks.host_fetch [--smoke] \
+        [--workers N] [--iters K] [--out BENCH_host_fetch.json] \
+        [--baseline benchmarks/baselines/host_fetch_smoke_w4.json]
+
+Emits the ``name,us_per_call,derived`` CSV rows the harness expects.
+``--baseline`` compares each table scale's host/device step-time RATIOS
+against a checked-in reference (ratios, not absolute times — the
+nightly runner's clock is not this machine's) and fails on a >20%
+relative regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+TABLE_SCALES = (1, 2, 4)
+
+
+def _cell_env(workers: int) -> dict:
+    """Child-process environment for one cell: the forced host device
+    count must be in ``XLA_FLAGS`` before the child imports jax."""
+    env = dict(os.environ)
+    if workers > 1:
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={workers} "
+            + env.get("XLA_FLAGS", ""))
+    return env
+
+
+def _run_cell(spec: dict) -> dict:
+    """Run one :func:`measure` cell in a fresh interpreter.
+
+    Cells measured back-to-back in one process are NOT comparable: the
+    later cell inherits the earlier one's allocator fragmentation and
+    JIT-cache footprint and runs 10%+ slower from that alone.  Shelling
+    out to ``--cell`` gives every cell identical cold-process conditions,
+    which is what lets the gates compare cells at all."""
+    cmd = [sys.executable, "-m", "benchmarks.host_fetch",
+           "--cell", json.dumps(spec)]
+    proc = subprocess.run(cmd, capture_output=True, text=True,
+                          env=_cell_env(spec.get("workers", 4)))
+    if proc.returncode != 0:
+        raise RuntimeError(f"cell {spec} failed:\n{proc.stderr}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def measure(*, scale: int, store: str, depth: int = 2, workers: int = 4,
+            base_nodes: int = 8_192, dim: int = 256, batch: int = 96,
+            fanouts=(10, 5), hidden: int = 64, iters: int = 12,
+            warmup: int = 5, repeats: int = 3, seed: int = 0) -> dict:
+    """Steady-state per-step wall time of the pipelined loop, one config.
+
+    Builds the real distributed generator over a power-law graph with
+    ``scale * base_nodes`` nodes (the feature table scales with it),
+    compiles the pipelined step once, runs ``warmup`` steps outside the
+    clock, then times ``repeats`` blocks of ``iters`` steady-state steps
+    each — blocking only at block boundaries — and reports the fastest
+    block.  The min-of-blocks estimator is deliberate: the gates compare
+    cells measured seconds apart, and a single contention spike in a
+    shared runner would otherwise dominate the mean.  The dispatch
+    regime inside a block is exactly the launcher's loop, so the host
+    path's issue/collect overlap (or, at depth 1, its absence) is what
+    the clock sees."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    import dataclasses
+    from repro.configs import REGISTRY, smoke_config
+    from repro.core.balance import balance_table
+    from repro.core.config import TrainConfig
+    from repro.core.generation import make_distributed_generator
+    from repro.core.partition import partition_edges
+    from repro.core.pipeline import (make_host_consume_step,
+                                     make_pipelined_step)
+    from repro.graph.synthetic import (node_features, node_labels,
+                                       powerlaw_graph)
+    from repro.launch.mesh import make_mesh
+    from repro.models import gcn as gcn_mod
+    from repro.train.optimizer import adam_update, init_adam
+
+    host = store == "host"
+    n_nodes = scale * base_nodes
+    mesh = make_mesh((workers,), ("data",))
+    g = powerlaw_graph(n_nodes, avg_degree=8, n_hot=8, hot_degree=400,
+                       seed=seed)
+    part = partition_edges(g, workers)
+    feats = node_features(n_nodes, dim, seed, features_on_host=host)
+    labels = node_labels(n_nodes, 16, seed)
+
+    out = make_distributed_generator(
+        mesh, part, feats, labels, fanouts=tuple(fanouts),
+        feature_store=store, host_gather_depth=depth)
+    if host:
+        gen_fn, device_args, fstore = out
+    else:
+        gen_fn, device_args = out
+        fstore = None
+
+    cfg = dataclasses.replace(
+        smoke_config(REGISTRY["graphgen-gcn"]),
+        gcn_in_dim=dim, gcn_hidden=hidden, n_classes=16,
+        fanouts=tuple(fanouts))
+    params = gcn_mod.init_gcn(cfg, jax.random.PRNGKey(seed))
+    opt = init_adam(params)
+    tcfg = TrainConfig(learning_rate=1e-3, total_steps=iters + warmup)
+
+    def train_fn(params, opt, batch):
+        loss, grads = jax.value_and_grad(gcn_mod.gcn_loss)(params, batch)
+        params, opt, _ = adam_update(tcfg, params, grads, opt)
+        return params, opt, loss
+
+    table = balance_table(np.arange(n_nodes), workers, seed=seed)
+    n_steps = warmup + repeats * iters + 1
+    sched = [
+        jnp.asarray(table.per_worker[:, (t * batch) % (n_nodes // workers
+                                                       - batch):][:, :batch])
+        for t in range(n_steps)
+    ]
+    rngs = jax.random.split(jax.random.PRNGKey(seed + 1), n_steps + 1)
+
+    # mirror pipelined_loop's dispatch exactly: host mode splits gen and
+    # patch+train so the gather rides between them; device mode runs the
+    # fused pipelined step
+    pending = None
+    if host:
+        consume = jax.jit(make_host_consume_step(train_fn))
+        batch0, req = gen_fn(device_args, sched[0], rngs[0])
+        carry = (params, opt, batch0, req)
+        pending = fstore.issue(req.ids)
+    else:
+        step = jax.jit(make_pipelined_step(gen_fn, train_fn))
+        batch0 = gen_fn(device_args, sched[0], rngs[0])
+        carry = (params, opt, batch0)
+
+    def run_step(t):
+        nonlocal carry, pending
+        if host:
+            landed = pending.rows()
+            nb, nreq = gen_fn(device_args, sched[t], rngs[t])
+            pending = fstore.issue(nreq.ids)
+            p, o, loss = consume(carry[0], carry[1], carry[2], carry[3],
+                                 landed)
+            carry = (p, o, nb, nreq)
+        else:
+            carry, loss = step(carry, device_args, sched[t], rngs[t])
+        return loss
+
+    for t in range(1, warmup + 1):
+        loss = run_step(t)
+    jax.block_until_ready(loss)
+    t = warmup + 1
+    blocks = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            loss = run_step(t)
+            t += 1
+        jax.block_until_ready(loss)
+        blocks.append(time.perf_counter() - t0)
+    us = min(blocks) / iters * 1e6
+    return {
+        "scale": scale,
+        "store": store,
+        "depth": depth if host else None,
+        "n_nodes": n_nodes,
+        "table_mb": feats.nbytes / 1e6,
+        "us_per_step": us,
+        "host_gather_mb": (fstore.bytes_issued / 1e6) if host else 0.0,
+    }
+
+
+def sweep(*, smoke: bool = False, workers: int = 4, iters: int = None,
+          seed: int = 0) -> dict:
+    """Device vs host (overlap on/off) step time at 1x/2x/4x table scale.
+
+    Each scale runs three cells over the SAME graph/schedule/rng stream
+    — the device baseline, host with the double buffer (depth 2), host
+    with the blocking gather (depth 1) — every cell in its own fresh
+    interpreter (see :func:`_run_cell`).  ``host_over_device`` and
+    ``overlap_speedup`` are the two ratios the gates and the checked-in
+    baseline track."""
+    base_nodes = 8_192 if smoke else 65_536
+    dim = 256
+    iters = iters or (12 if smoke else 40)
+    results = []
+    for scale in TABLE_SCALES:
+        common = dict(scale=scale, workers=workers, base_nodes=base_nodes,
+                      dim=dim, iters=iters, seed=seed)
+        dev = _run_cell(dict(common, store="device"))
+        d2 = _run_cell(dict(common, store="host", depth=2))
+        d1 = _run_cell(dict(common, store="host", depth=1))
+        d2["host_over_device"] = d2["us_per_step"] / max(dev["us_per_step"],
+                                                         1e-9)
+        d1["host_over_device"] = d1["us_per_step"] / max(dev["us_per_step"],
+                                                         1e-9)
+        d2["overlap_speedup"] = d1["us_per_step"] / max(d2["us_per_step"],
+                                                        1e-9)
+        results += [dev, d2, d1]
+    return {
+        "benchmark": "host_fetch",
+        "workers": workers,
+        "base_nodes": base_nodes,
+        "dim": dim,
+        "iters": iters,
+        "results": results,
+    }
+
+
+def _row_name(r: dict) -> str:
+    name = f"host_fetch_{r['scale']}x_{r['store']}"
+    if r["store"] == "host":
+        name += f"_d{r['depth']}"
+    return name
+
+
+def check_baseline(rec: dict, baseline: dict, tol: float = 0.20) -> list:
+    """Compare each scale's host/device RATIOS against a checked-in
+    reference; return failure strings for any cell whose ratio grew more
+    than ``tol`` relative (the nightly regression gate).  Ratios — not
+    absolute step times — so the gate survives runner-speed drift; cells
+    missing on either side are skipped."""
+    def key(r):
+        return (r["scale"], r["store"], r.get("depth"))
+
+    have = {key(r): r for r in rec["results"]}
+    failures = []
+    for b in baseline.get("results", []):
+        if "host_over_device" not in b:
+            continue
+        now = have.get(key(b))
+        if now is None or "host_over_device" not in now:
+            continue
+        ceil = b["host_over_device"] * (1.0 + tol)
+        if now["host_over_device"] > ceil:
+            failures.append(
+                f"{_row_name(b)}: host_over_device "
+                f"{now['host_over_device']:.3f} > baseline "
+                f"{b['host_over_device']:.3f} + {tol:.0%}")
+    return failures
+
+
+def bench() -> list:
+    """Harness entry (benchmarks.run): smoke-size sweep, CSV rows."""
+    rec = sweep(smoke=True, workers=1)
+    rows = []
+    for r in rec["results"]:
+        derived = f"table_mb={r['table_mb']:.1f}"
+        if "host_over_device" in r:
+            derived += f",host_over_device={r['host_over_device']:.3f}"
+        if "overlap_speedup" in r:
+            derived += f",overlap_speedup={r['overlap_speedup']:.3f}"
+        rows.append((_row_name(r), float(r["us_per_step"]), derived))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes (the CI configuration)")
+    ap.add_argument("--workers", type=int, default=4,
+                    help="forced host devices (the W=4 smoke gate "
+                         "configuration)")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="timed steady-state steps per cell")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write JSON here")
+    ap.add_argument("--baseline", default=None,
+                    help="checked-in baseline JSON; fail if any scale's "
+                         "host/device ratio regresses >20%% relative")
+    ap.add_argument("--cell", default=None,
+                    help="(internal) measure one cell from a JSON spec "
+                         "and print its result — how sweep() isolates "
+                         "cells in fresh interpreters")
+    args = ap.parse_args()
+    if args.cell:
+        print(json.dumps(measure(**json.loads(args.cell))))
+        return
+
+    rec = sweep(smoke=args.smoke, workers=args.workers, iters=args.iters,
+                seed=args.seed)
+    print("name,us_per_call,derived")
+    for r in rec["results"]:
+        line = (f"{_row_name(r)},{r['us_per_step']:.1f},"
+                f"table_mb={r['table_mb']:.1f}")
+        if "host_over_device" in r:
+            line += f",host_over_device={r['host_over_device']:.3f}"
+        if "overlap_speedup" in r:
+            line += f",overlap_speedup={r['overlap_speedup']:.3f}"
+        if r["store"] == "host":
+            line += f",host_gather_mb={r['host_gather_mb']:.1f}"
+        print(line)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"wrote {args.out}", file=sys.stderr)
+
+    failed = False
+    cells = {(r["scale"], r["store"], r.get("depth")): r
+             for r in rec["results"]}
+    # the affordability gate: at the table size device memory cannot hold
+    # (4x), the overlapped host store costs at most 15% step time
+    big = cells.get((4, "host", 2))
+    dev = cells.get((4, "device", None))
+    if big and dev and big["us_per_step"] > 1.15 * dev["us_per_step"]:
+        print(f"WARNING: overlapped host step "
+              f"{big['us_per_step']:.0f}us > 1.15x device baseline "
+              f"{dev['us_per_step']:.0f}us at 4x table",
+              file=sys.stderr)
+        failed = True
+    # the overlap gate: at 4x the double buffer must actually hide the
+    # gather (smaller scales report overlap_speedup but do not gate —
+    # their gather is light enough that the edge sits inside runner
+    # noise).  Enforced only where overlap is physically possible: on a
+    # single-core runner wall time equals total work, so depth 2 cannot
+    # beat depth 1 by construction.
+    try:
+        cores = len(os.sched_getaffinity(0))
+    except AttributeError:
+        cores = os.cpu_count() or 1
+    d1 = cells.get((4, "host", 1))
+    if cores < 2:
+        print("NOTE: single-core runner — overlap gate not enforced "
+              "(no spare core to overlap on; ratios reported above)",
+              file=sys.stderr)
+    elif big and d1 and big["us_per_step"] >= d1["us_per_step"]:
+        print(f"WARNING: overlap-on {big['us_per_step']:.0f}us >= "
+              f"overlap-off {d1['us_per_step']:.0f}us at 4x table",
+              file=sys.stderr)
+        failed = True
+    if args.baseline:
+        with open(args.baseline) as f:
+            base_rec = json.load(f)
+        for msg in check_baseline(rec, base_rec):
+            print(f"REGRESSION: {msg}", file=sys.stderr)
+            failed = True
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,8 +20,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from . import (feature_cache, gen_throughput, kernel_bench, load_balance,
-                   padding_and_dropping, pipeline_overlap, tree_reduce_bench)
+    from . import (feature_cache, gen_throughput, host_fetch, kernel_bench,
+                   load_balance, padding_and_dropping, pipeline_overlap,
+                   tree_reduce_bench)
 
     suites = {
         "gen_throughput": lambda: gen_throughput.bench(scale=False),
@@ -31,6 +32,7 @@ def main() -> None:
         "kernels": kernel_bench.bench,
         "padding_and_dropping": padding_and_dropping.bench,
         "feature_cache": feature_cache.bench,
+        "host_fetch": host_fetch.bench,
     }
     if args.scale:
         suites["gen_throughput_1M"] = lambda: gen_throughput.bench(scale=True)

@@ -12,4 +12,10 @@ CONFIG = ModelConfig(
     # the 4096-row sharded L2 (promotion after 3 observations)
     cache_rows=4096, cache_admit=2, cache_assoc=4, cache_mode="tiered",
     cache_l1_rows=512, cache_l1_promote=3,
+    # the deep workload is the one that outgrows aggregate device memory
+    # first (530M-node-paper-scale feature tables): flip feature_store to
+    # "host" (or pass --feature-store host) to keep the table in host RAM
+    # behind the double-buffered L3 gather; depth 2 hides the PCIe
+    # transfer under the compute step
+    feature_store="device", host_gather_depth=2,
 )

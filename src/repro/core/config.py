@@ -18,6 +18,11 @@ from typing import Optional, Tuple
 VALID_CACHE_ASSOC = (1, 2, 4)
 VALID_CACHE_MODES = ("replicated", "sharded", "tiered")
 VALID_CACHE_WIRES = ("dense", "compact")
+#: where the authoritative feature table lives: "device" row-shards it
+#: over the workers (the owner fetch resolves misses on-device);
+#: "host" keeps it in host RAM behind the L3 store (misses resolve via
+#: an async double-buffered host gather — core/host_store.py)
+VALID_FEATURE_STORES = ("device", "host")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +118,19 @@ class ModelConfig:
                                # per-destination shuffle capacity slack;
                                # None = launcher auto-sizes from n_dropped
                                # (dryrun compiles at the 2.0 default)
+    feature_store: str = "device"
+                               # where the feature table lives: "device"
+                               # row-shards it over the workers (misses
+                               # pay the routed owner fetch); "host"
+                               # keeps it in host RAM as the L3 tier —
+                               # cache misses are staged and resolved by
+                               # an async host gather double-buffered
+                               # with the next step's compute
+    host_gather_depth: int = 2 # host store pipeline depth: 2 issues the
+                               # gather on a worker thread so the
+                               # device_put overlaps the compute step;
+                               # 1 gathers synchronously (overlap off —
+                               # the benchmark's comparison column)
     # --- performance knobs (hillclimbed in §Perf) ---
     remat: str = "none"        # none | full | dots
     scan_layers: bool = True   # stack layer params and lax.scan over them
@@ -158,6 +176,14 @@ class ModelConfig:
             raise ValueError(
                 f"cache_hit_cap must be >= 0 (0 = auto), "
                 f"got {self.cache_hit_cap}")
+        if self.feature_store not in VALID_FEATURE_STORES:
+            raise ValueError(
+                f"feature_store must be one of {VALID_FEATURE_STORES}, "
+                f"got {self.feature_store!r}")
+        if self.host_gather_depth not in (1, 2):
+            raise ValueError(
+                f"host_gather_depth must be 1 (synchronous) or 2 "
+                f"(double-buffered), got {self.host_gather_depth}")
         # deliberately NO cross-field mode check here: launchers override
         # one field at a time with dataclasses.replace, so a tiered arch
         # config being switched to --cache-mode sharded must not trip over

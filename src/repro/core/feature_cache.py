@@ -103,7 +103,8 @@ _SHARD_K = np.uint32(0x85EBCA6B)
 # re-exported here under the names the kernels import
 from .config import (VALID_CACHE_ASSOC as VALID_ASSOC,
                      VALID_CACHE_MODES as VALID_MODES,
-                     VALID_CACHE_WIRES as VALID_WIRES)
+                     VALID_CACHE_WIRES as VALID_WIRES,
+                     VALID_FEATURE_STORES as VALID_STORES)
 
 
 class CacheConfig(NamedTuple):
@@ -132,6 +133,13 @@ class CacheConfig(NamedTuple):
                          # DEMOTED to misses by the shard holder — they
                          # fall through to the owner fetch, a lost hit
                          # opportunity but never a correctness loss.
+    store: str = "device"      # where cache MISSES resolve: "device" pays
+                               # the routed owner fetch against the
+                               # device-resident table; "host" stages them
+                               # for the L3 host-RAM store's async gather
+                               # (core/host_store.py) — the step's output
+                               # then carries a HostMissRequest and the
+                               # rows land one step later
 
     @property
     def n_sets(self) -> int:
@@ -160,7 +168,8 @@ class CacheConfig(NamedTuple):
         the L2's probe round is the one the codec compacts."""
         return CacheConfig(n_rows=self.n_rows, admit=self.admit,
                            assoc=self.assoc, mode="sharded",
-                           wire=self.wire, hit_cap=self.hit_cap)
+                           wire=self.wire, hit_cap=self.hit_cap,
+                           store=self.store)
 
     def validated(self) -> "CacheConfig":
         """Self after strict cross-field validation (raises ``ValueError``
@@ -208,6 +217,10 @@ class CacheConfig(NamedTuple):
         if self.hit_cap < 0:
             raise ValueError(
                 f"hit_cap must be >= 0 (0 = auto), got {self.hit_cap}")
+        if self.store not in VALID_STORES:
+            raise ValueError(
+                f"cache store must be one of {VALID_STORES}, "
+                f"got {self.store!r}")
         return self
 
     @classmethod
@@ -228,7 +241,8 @@ class CacheConfig(NamedTuple):
                    assoc=cfg.cache_assoc, mode=cfg.cache_mode,
                    l1_rows=l1, l1_promote=cfg.cache_l1_promote,
                    wire=cfg.cache_wire,
-                   hit_cap=cfg.cache_hit_cap).validated()
+                   hit_cap=cfg.cache_hit_cap,
+                   store=cfg.feature_store).validated()
 
 
 class FeatureCache(NamedTuple):
@@ -282,10 +296,15 @@ class CacheStats(NamedTuple):
                          do not shrink).
 
     ``n_hits == n_l1_hits + n_local_hits + n_shard_hits``, and with
-    ``n_misses`` (unique probes routed to their owner) the conservation
-    invariant ``n_l1_hits + n_local_hits + n_shard_hits + n_misses ==
-    n_unique`` holds for every mode.  ``bytes_saved`` counts only the
-    network-free populations (L1 + local).
+    ``n_misses`` (unique probes routed to their owner) plus ``n_l3_hits``
+    (unique probes staged for the host-RAM L3 store — always 0 with the
+    device-resident store) the conservation invariant
+    ``n_l1_hits + n_local_hits + n_shard_hits + n_l3_hits + n_misses ==
+    n_unique`` holds for every mode and both feature stores.  With
+    ``store="host"`` the L3 serves every cache-tier miss that fits the
+    staging capacity, so ``n_misses`` there counts only staging-overflow
+    ids nobody will serve (they surface as drops too).  ``bytes_saved``
+    counts only the network-free populations (L1 + local).
 
     The last two fields are HOLDER-side probe-round telemetry (this
     worker acting as a shard holder, not as a requester):
@@ -310,6 +329,10 @@ class CacheStats(NamedTuple):
     probe_hit_peak: jax.Array
                              # holder-side: max per-destination probe hits
                              # before demotion (0 when no probe round ran)
+    n_l3_hits: jax.Array
+                             # unique probes staged for the host-RAM L3
+                             # store (store="host" only, else 0; the
+                             # async gather lands their rows a step later)
 
 
 def hash_slots(ids: jax.Array, n_sets: int) -> jax.Array:

@@ -121,6 +121,7 @@ from .feature_cache import (CacheConfig, CacheStats, FeatureCache,
                             restore_worker_axis, shard_of,
                             squeeze_worker_axis, tiered_probe,
                             unpack_hit_bitmap)
+from .host_store import HostFeatureStore, HostMissRequest
 from .partition import PartitionedGraph
 from .tree_reduce import axis_size, tree_allreduce, tree_reduce_scatter
 
@@ -139,7 +140,12 @@ class FetchStats(NamedTuple):
     ``CacheConfig.wire``), computed from the static exchange shapes the
     compiled program moves.  It is 0 whenever no probe round runs
     (uncached, replicated mode, or W == 1); summing it over workers and
-    iterations gives the total probe-round wire volume a run paid."""
+    iterations gives the total probe-round wire volume a run paid.
+
+    ``host_gather_bytes`` is the PCIe payload of the L3 staging round a
+    ``store="host"`` fetch hands to the host store (staged miss ids up
+    plus the landed feature rows back down, from the static staging
+    shape) — 0 whenever the feature table is device-resident."""
     n_requests: jax.Array   # request slots presented (incl. duplicates)
     n_unique: jax.Array     # distinct ids actually routed over the wire
     n_dropped: jax.Array    # request SLOTS zero-filled by the capacity
@@ -148,6 +154,9 @@ class FetchStats(NamedTuple):
     probe_round_bytes: jax.Array
                             # bytes this worker shipped on the shard-probe
                             # all_to_all round (0 = no probe round ran)
+    host_gather_bytes: jax.Array
+                            # bytes of the host-store staging round trip
+                            # (0 = device-resident feature table)
 
 
 def local_candidates(
@@ -581,6 +590,133 @@ _CACHE_TIERS = {
 }
 
 
+def _host_admit(cache, cfg: CacheConfig, adm_ids: jax.Array,
+                adm_rows: jax.Array, axis_name: str, w: int):
+    """Deferred admission: offer the PREVIOUS step's landed L3 rows.
+
+    With ``store="host"`` the owner fetch never runs, so the cache admits
+    the rows the host gather landed one step later (``host_admit=``) —
+    the same frequency-admission policy, shifted by the double buffer's
+    one-step lag.  Sharded/tiered W > 1 route each row to its cache-shard
+    holder first (one all_to_all round, same "admit the AUTHORITATIVE
+    shard" rule as ``_shard_admit``); tiered admits into the L2 — the
+    L1 sees rows only via the usual L2 -> L1 promotion at probe time.
+    Returns ``(new_cache, n_inserted, admit_round_bytes)``.
+    """
+    s = adm_ids.shape[0]
+    d = adm_rows.shape[1]
+    if cfg.mode == "tiered":
+        target, tcfg = cache.l2, cfg.l2_config()
+    else:
+        target, tcfg = cache, cfg
+    if w == 1 or cfg.mode == "replicated":
+        new, n_ins = cache_insert(target, adm_ids, adm_rows,
+                                  adm_ids >= 0, tcfg)
+        adm_bytes = 0
+    else:
+        dest = jnp.where(adm_ids >= 0, shard_of(adm_ids, w), w)
+        plan = _route_plan(dest, s, w)   # cap = s: routing never overflows
+        send_ids = jnp.full((w, s), -1, jnp.int32)
+        send_ids = send_ids.at[plan.sorted_dest, plan.slot_c].set(
+            adm_ids[plan.order], mode="drop")
+        send_rows = jnp.zeros((w, s, d), adm_rows.dtype)
+        send_rows = send_rows.at[plan.sorted_dest, plan.slot_c].set(
+            adm_rows[plan.order], mode="drop")
+        recv_ids = lax.all_to_all(send_ids, axis_name,
+                                  split_axis=0, concat_axis=0, tiled=True)
+        recv_rows = lax.all_to_all(send_rows, axis_name,
+                                   split_axis=0, concat_axis=0, tiled=True)
+        flat = recv_ids.reshape(-1)
+        new, n_ins = cache_insert(target, flat, recv_rows.reshape(-1, d),
+                                  flat >= 0, tcfg)
+        adm_bytes = w * s * (4 + d * jnp.dtype(adm_rows.dtype).itemsize)
+    if cfg.mode == "tiered":
+        return TieredCache(l1=cache.l1, l2=new), n_ins, adm_bytes
+    return new, n_ins, adm_bytes
+
+
+def _host_fetch(ids, axis_name, capacity_slack, capacity, cache, cache_cfg,
+                host_admit, d, dtype, w):
+    """The ``store="host"`` fetch body: probe tiers, STAGE misses for L3.
+
+    Instead of the routed owner fetch, cache-tier misses are compacted
+    into a per-worker staging buffer of ids handed back to the caller as
+    a ``HostMissRequest`` — the host store gathers them asynchronously
+    and the NEXT step consumes the landed rows (``patch_batch`` fills the
+    holes, ``_host_admit`` feeds the cache).  Hit slots are served now;
+    staged slots return zero-filled holes flagged ``req.patch``; misses
+    beyond the staging capacity are dropped (counted, never silent).
+    """
+    r = ids.shape[0]
+    s = capacity if capacity is not None \
+        else probe_round_capacity(r, 1, capacity_slack)
+    s = max(int(s), 1)
+    req_ids, inverse, req_valid, n_distinct = dedup_requests(ids)
+    n_adm = jnp.int32(0)
+    adm_bytes = 0
+    if cache is not None and host_admit is not None:
+        adm_ids, adm_rows = host_admit
+        cache, n_adm, adm_bytes = _host_admit(cache, cache_cfg, adm_ids,
+                                              adm_rows, axis_name, w)
+    tier = _CACHE_TIERS[cache_cfg.mode] if cache is not None else None
+    if tier is not None:
+        probe = tier.probe(cache, cache_cfg, req_ids, req_valid, axis_name,
+                           probe_round_capacity(r, w, capacity_slack), w)
+        hit = probe.hit
+    else:
+        probe = None
+        hit = jnp.zeros((r,), jnp.bool_)
+    # --- stage the misses: compact them into the [S] id buffer ----------
+    miss = jnp.logical_and(req_valid, ~hit)
+    cs = jnp.cumsum(miss.astype(jnp.int32))
+    staged = jnp.logical_and(miss, cs <= s)
+    slot_u = cs - 1                       # staging slot per unique slot
+    miss_ids = jnp.full((s,), -1, jnp.int32)
+    miss_ids = miss_ids.at[jnp.where(staged, slot_u, s)].set(
+        req_ids, mode="drop")
+    n_staged = jnp.sum(staged).astype(jnp.int32)
+    n_overflow = jnp.sum(miss).astype(jnp.int32) - n_staged
+    if tier is not None:
+        out_u = jnp.where(hit[:, None], probe.rows, 0)
+    else:
+        out_u = jnp.zeros((r, d), dtype)
+    served_u = jnp.logical_or(hit, staged)
+    out = out_u[inverse]
+    dropped = jnp.sum(~served_u[inverse]).astype(jnp.int32)
+    req = HostMissRequest(ids=miss_ids,
+                          slot=slot_u[inverse].astype(jnp.int32),
+                          patch=staged[inverse])
+    gather_bytes = s * (4 + d * jnp.dtype(dtype).itemsize)
+    stats = FetchStats(
+        jnp.int32(r), n_staged, dropped,
+        jnp.int32((probe.wire.probe_bytes if tier is not None else 0)
+                  + adm_bytes),
+        jnp.int32(gather_bytes))
+    if tier is None:
+        return out, stats, req
+    # tiered L1 promotion still happens at probe time (L2-served rows)
+    new_cache = cache
+    n_ins = n_adm
+    if cache_cfg.mode == "tiered":
+        l2_hit = probe.ctx[2]
+        new_l1, n_l1_ins = cache_insert(cache.l1, req_ids, probe.rows,
+                                        l2_hit, cache_cfg.l1_config())
+        new_cache = TieredCache(l1=new_l1, l2=cache.l2)
+        n_ins = n_ins + n_l1_ins
+    n_hits = jnp.sum(probe.hit).astype(jnp.int32)
+    n_l1 = jnp.sum(probe.l1_hit).astype(jnp.int32)
+    n_local = jnp.sum(probe.local).astype(jnp.int32)
+    row_bytes = d * jnp.dtype(dtype).itemsize
+    cstats = CacheStats(
+        n_hits=n_hits, n_misses=n_overflow, n_inserted=n_ins,
+        bytes_saved=(n_l1 + n_local) * row_bytes, n_local_hits=n_local,
+        n_shard_hits=n_hits - n_l1 - n_local, n_l1_hits=n_l1,
+        n_probe_demoted=probe.wire.n_demoted,
+        probe_hit_peak=probe.wire.hit_peak,
+        n_l3_hits=n_staged)
+    return out, new_cache, stats, cstats, req
+
+
 def fetch_rows(
     table_local: jax.Array,
     ids: jax.Array,
@@ -591,12 +727,30 @@ def fetch_rows(
     return_stats: bool = False,
     cache: Optional[FeatureCache] = None,
     cache_cfg: Optional[CacheConfig] = None,
+    store: Optional[str] = None,
+    feat_dim: Optional[int] = None,
+    host_admit=None,
 ):
     """Routed remote row fetch (the MapReduce shuffle, as ``all_to_all``).
 
     ``table_local`` is this worker's [rows, D] block of a row-sharded table;
     global row ``i`` lives on worker ``i // rows``.  Every worker requests
     ``ids`` [R] and receives the corresponding rows [R, D].
+
+    ``store`` picks where MISSES resolve (default: ``cache_cfg.store``,
+    else ``"device"``).  With ``store="host"`` the owner fetch is
+    replaced by the L3 *issue/collect* split (``core/host_store.py``):
+    cache-tier misses are STAGED into a ``HostMissRequest`` appended to
+    the return value (``(out, new_cache, FetchStats, CacheStats, req)``
+    cached, ``(out, stats, req)`` uncached) instead of fetched — their
+    output rows are zero holes the caller patches one step later with
+    the landed host gather (``patch_batch``), and ``host_admit=(ids
+    [S], rows [S, D])`` feeds the PREVIOUS step's landed buffer back
+    into the cache (deferred admission, ``_host_admit``).  The host path
+    requires ``dedup=True``; ``table_local`` may be ``None`` (there is
+    no device table) when ``feat_dim`` supplies the row width, and
+    ``capacity`` sizes the staging buffer (default: the slack formula
+    with W = 1 — staging is per-worker, not per-destination).
 
     With ``dedup=True`` (default) duplicate ids are collapsed before
     routing: each distinct id occupies at most one wire slot and its row is
@@ -658,22 +812,57 @@ def fetch_rows(
         # error) — the policy object must travel with the state
         raise ValueError("fetch_rows(cache=...) requires cache_cfg "
                          "(the CacheConfig the state was populated under)")
+    if store is None:
+        store = cache_cfg.store if cache_cfg is not None else "device"
+    host = store == "host"
+    if host and not dedup:
+        raise ValueError('fetch_rows(store="host") requires dedup=True')
+    if host and table_local is None and feat_dim is None:
+        raise ValueError('fetch_rows(store="host") without a device table '
+                         'requires feat_dim (the feature row width)')
+    if not host and table_local is None:
+        raise ValueError('fetch_rows(store="device") requires table_local')
+    if not host and host_admit is not None:
+        raise ValueError('host_admit only applies to store="host"')
     w = axis_size(axis_name)
-    rows = table_local.shape[0]
+    d = table_local.shape[1] if table_local is not None else feat_dim
+    dtype = table_local.dtype if table_local is not None else jnp.float32
+    rows = table_local.shape[0] if table_local is not None else 0
     r = ids.shape[0]
     if r == 0:
         # empty request batch: nothing to route (uniform across workers —
         # the request shape is static — so skipping the collectives is
         # safe); counters are all zero by conservation
-        out = jnp.zeros((0, table_local.shape[1]), table_local.dtype)
+        out = jnp.zeros((0, d), dtype)
         stats = FetchStats(jnp.int32(0), jnp.int32(0), jnp.int32(0),
-                           jnp.int32(0))
+                           jnp.int32(0), jnp.int32(0))
+        if host:
+            # deferred admission still runs (a landed buffer may be
+            # pending even when this step requests nothing)
+            n_adm = jnp.int32(0)
+            if cache is not None and host_admit is not None:
+                cache, n_adm, _ = _host_admit(cache, cache_cfg,
+                                              host_admit[0], host_admit[1],
+                                              axis_name, w)
+            s0 = max(int(capacity), 1) if capacity is not None else 1
+            req = HostMissRequest(jnp.full((s0,), -1, jnp.int32),
+                                  jnp.zeros((0,), jnp.int32),
+                                  jnp.zeros((0,), jnp.bool_))
+            if cache is not None:
+                z = jnp.int32(0)
+                return out, cache, stats, CacheStats(
+                    z, z, n_adm, z, z, z, z, z, z, z), req
+            return out, stats, req
         if cache is not None:
             z = jnp.int32(0)
-            return out, cache, stats, CacheStats(z, z, z, z, z, z, z, z, z)
+            return out, cache, stats, CacheStats(z, z, z, z, z, z, z, z,
+                                                 z, z)
         if return_stats:
             return out, stats
         return out
+    if host:
+        return _host_fetch(ids, axis_name, capacity_slack, capacity,
+                           cache, cache_cfg, host_admit, d, dtype, w)
     if w == 1 and cache is None:
         out = table_local[jnp.clip(ids, 0, rows - 1)]
         if return_stats:
@@ -682,7 +871,7 @@ def fetch_rows(
             else:
                 n_unique = jnp.int32(r)
             return out, FetchStats(jnp.int32(r), n_unique, jnp.int32(0),
-                                   jnp.int32(0))
+                                   jnp.int32(0), jnp.int32(0))
         return out
     # the probe round carries ALL distinct ids, so it is sized from the
     # request count even when an explicit miss-sized `capacity` shrinks
@@ -742,7 +931,8 @@ def fetch_rows(
             bytes_saved=(n_l1 + n_local) * row_bytes, n_local_hits=n_local,
             n_shard_hits=n_hits - n_l1 - n_local, n_l1_hits=n_l1,
             n_probe_demoted=probe.wire.n_demoted,
-            probe_hit_peak=probe.wire.hit_peak)
+            probe_hit_peak=probe.wire.hit_peak,
+            n_l3_hits=jnp.int32(0))
         n_unique = n_routed          # ids that went to their owner
     else:
         out_u, served_u = fetched, served_r
@@ -757,7 +947,8 @@ def fetch_rows(
     stats = FetchStats(jnp.int32(r), jnp.int32(n_unique),
                        dropped.astype(jnp.int32),
                        jnp.int32(probe.wire.probe_bytes if tier is not None
-                                 else 0))
+                                 else 0),
+                       jnp.int32(0))
     if cache is not None:
         return out, new_cache, stats, cstats
     if return_stats:
@@ -780,6 +971,9 @@ def _worker_generate(
     capacity_slack: float = 2.0,
     cache_cfg: Optional[CacheConfig] = None,
     fetch_capacity: Optional[int] = None,
+    feature_store: str = "device",
+    feat_dim: Optional[int] = None,
+    host_admit=None,         # (ids [S], rows [S, D]) landed one step ago
 ):
     """One worker's slice of an L-hop generation round (runs in shard_map).
 
@@ -793,6 +987,15 @@ def _worker_generate(
     in either case).  ``cache_cfg`` is the single source of cache policy;
     ``fetch_capacity`` pins the owner-exchange buffer size (the warm
     re-calibration hook shrinks it to the steady-state miss count).
+
+    With ``feature_store="host"`` the feature table lives in host RAM
+    behind the L3 store: ``x_local`` is ``None`` (``feat_dim`` supplies
+    the row width), the feature shuffle STAGES its cache misses instead
+    of owner-fetching them, and the returns grow a ``HostMissRequest``
+    tail — ``(batch, cache, req)`` cached / ``(batch, req)`` uncached.
+    The batch's staged feature slots are zero holes until the caller
+    patches them with the landed host gather (``patch_batch``); labels
+    stay device-resident either way.
     """
     b = seeds.shape[0]
     me = lax.axis_index(axis_name)
@@ -844,12 +1047,28 @@ def _worker_generate(
     # --- feature shuffle: one deduplicated fetch for every node slot,
     # cache-probed first when a hot-node cache is threaded through ---
     need = jnp.concatenate([seeds] + [h.reshape(-1) for h in hops])
-    if cache is not None:
-        feats, cache, fstats, cstats = fetch_rows(
+    host = feature_store == "host"
+    req = None
+    if cache is not None and host:
+        feats, cache, fstats, cstats, req = fetch_rows(
             x_local, need, axis_name, capacity_slack=capacity_slack,
-            capacity=fetch_capacity, cache=cache, cache_cfg=cache_cfg)
+            capacity=fetch_capacity, cache=cache, cache_cfg=cache_cfg,
+            store="host", feat_dim=feat_dim, host_admit=host_admit)
         n_hits, n_misses = cstats.n_hits, cstats.n_misses
         n_demoted = cstats.n_probe_demoted
+    elif cache is not None:
+        feats, cache, fstats, cstats = fetch_rows(
+            x_local, need, axis_name, capacity_slack=capacity_slack,
+            capacity=fetch_capacity, cache=cache, cache_cfg=cache_cfg,
+            store="device")
+        n_hits, n_misses = cstats.n_hits, cstats.n_misses
+        n_demoted = cstats.n_probe_demoted
+    elif host:
+        feats, fstats, req = fetch_rows(
+            x_local, need, axis_name, capacity_slack=capacity_slack,
+            capacity=fetch_capacity, store="host", feat_dim=feat_dim)
+        n_hits, n_misses = jnp.int32(0), fstats.n_unique
+        n_demoted = jnp.int32(0)
     else:
         feats, fstats = fetch_rows(x_local, need, axis_name,
                                    capacity_slack=capacity_slack,
@@ -857,7 +1076,7 @@ def _worker_generate(
                                    return_stats=True)
         n_hits, n_misses = jnp.int32(0), fstats.n_unique
         n_demoted = jnp.int32(0)
-    d = x_local.shape[1]
+    d = x_local.shape[1] if x_local is not None else feat_dim
     x_seed = feats[:b]
     x_hops = []
     off = b
@@ -886,8 +1105,12 @@ def _worker_generate(
         n_cache_misses=n_misses[None],
         n_probe_demoted=n_demoted[None],
     )
+    if cache is not None and req is not None:
+        return batch, cache, req
     if cache is not None:
         return batch, cache
+    if req is not None:
+        return batch, req
     return batch
 
 
@@ -910,12 +1133,24 @@ def make_generator_fn(
     capacity_slack: float = 2.0,
     cache_cfg: Optional[CacheConfig] = None,
     fetch_capacity: Optional[int] = None,
+    feature_store: str = "device",
+    feat_dim: Optional[int] = None,
 ):
     """Pure generator function (no data placement — dry-run lowerable).
 
     ``gen_fn(device_args, seeds [W, b], rng) -> SubgraphBatch`` where
     ``device_args = (indptr [W,N+1], indices [W,E_pad], x [W*rows,D],
     y [W*rows,1])`` sharded on their leading axis.
+
+    With ``feature_store="host"`` (requires ``feat_dim``) the feature
+    table never reaches the device: ``device_args`` shrinks to
+    ``(indptr, indices, y)`` and every generation returns a stacked
+    ``HostMissRequest`` tail for the L3 store —
+    ``gen_fn(device_args, seeds, rng) -> (batch, req)`` uncached, or
+    ``gen_fn(device_args, seeds, rng, cache, admit_ids [W, S], admit_rows
+    [W, S, D]) -> (batch, cache, req)`` cached, where ``admit_*`` is the
+    previous step's landed gather (``host_store.empty_admit`` for the
+    prologue) consumed for deferred cache admission.
 
     With a ``cache_cfg`` (a ``CacheConfig`` with ``n_rows > 0``) the
     generator becomes stateful-by-threading:
@@ -930,18 +1165,31 @@ def make_generator_fn(
     all_to_all buffers to the steady-state cache-miss count."""
     if not fanouts:
         raise ValueError("fanouts must name at least one hop, got ()")
+    if feature_store not in ("device", "host"):
+        raise ValueError(f"feature_store must be 'device' or 'host', "
+                         f"got {feature_store!r}")
+    host = feature_store == "host"
+    if host and feat_dim is None:
+        raise ValueError('make_generator_fn(feature_store="host") '
+                         'requires feat_dim (no device table to read it '
+                         'from)')
     graph_spec = P(axis_name)
     row_spec = P(axis_name)
     repl = P()
     cached = cache_cfg is not None and cache_cfg.n_rows > 0
     if cached:
         cache_cfg = cache_cfg.validated()
+        if cache_cfg.store != feature_store:
+            # the generator's feature_store is authoritative — normalize
+            # the cfg instead of letting the two silently disagree
+            cache_cfg = cache_cfg._replace(store=feature_store)
 
     worker_gen = functools.partial(
         _worker_generate, fanouts=tuple(fanouts), axis_name=axis_name,
         merge_mode=merge_mode, capacity_slack=capacity_slack,
         cache_cfg=cache_cfg if cached else None,
-        fetch_capacity=fetch_capacity)
+        fetch_capacity=fetch_capacity,
+        feature_store=feature_store, feat_dim=feat_dim)
 
     # shard_map blocks keep the sharded leading axis of size 1 per worker;
     # the wrappers drop it on the way in and restore it on the way out.
@@ -953,7 +1201,47 @@ def make_generator_fn(
                                   rng, squeeze_worker_axis(cache))
         return batch, restore_worker_axis(cache)
 
-    if cached:
+    # host-store variants: no device feature table; the HostMissRequest
+    # comes back stacked [W, ...] (out_specs P(axis_name), leading axis
+    # restored the same way as the cache state)
+    def worker_fn_host(indptr, indices, ys, seeds, rng):
+        batch, req = worker_gen(indptr[0], indices[0], None, ys, seeds[0],
+                                rng)
+        return batch, jax.tree.map(lambda a: a[None], req)
+
+    def worker_fn_host_cached(indptr, indices, ys, seeds, rng, cache,
+                              adm_ids, adm_rows):
+        batch, cache, req = worker_gen(
+            indptr[0], indices[0], None, ys, seeds[0], rng,
+            squeeze_worker_axis(cache),
+            host_admit=(adm_ids[0], adm_rows[0]))
+        return (batch, restore_worker_axis(cache),
+                jax.tree.map(lambda a: a[None], req))
+
+    if host and cached:
+        def gen_fn(device_args, seeds, rng, cache, admit_ids, admit_rows):
+            indptr, indices, ys = device_args
+            return shard_map(
+                worker_fn_host_cached,
+                mesh=mesh,
+                in_specs=(graph_spec, graph_spec, row_spec, graph_spec,
+                          repl, P(axis_name), P(axis_name), P(axis_name)),
+                out_specs=(P(axis_name), P(axis_name), P(axis_name)),
+                check_rep=False,
+            )(indptr, indices, ys, seeds, rng, cache, admit_ids,
+              admit_rows)
+    elif host:
+        def gen_fn(device_args, seeds, rng):
+            indptr, indices, ys = device_args
+            return shard_map(
+                worker_fn_host,
+                mesh=mesh,
+                in_specs=(graph_spec, graph_spec, row_spec, graph_spec,
+                          repl),
+                out_specs=(P(axis_name), P(axis_name)),
+                check_rep=False,
+            )(indptr, indices, ys, seeds, rng)
+    elif cached:
         def gen_fn(device_args, seeds, rng, cache):
             indptr, indices, xs, ys = device_args
             return shard_map(
@@ -991,6 +1279,8 @@ def make_distributed_generator(
     capacity_slack: float = 2.0,
     cache_cfg: Optional[CacheConfig] = None,
     fetch_capacity: Optional[int] = None,
+    feature_store: str = "device",
+    host_gather_depth: int = 2,
 ):
     """Build the jitted distributed generator with data placed on the mesh.
 
@@ -999,24 +1289,49 @@ def make_distributed_generator(
     ``cache_cfg`` an initial (empty) per-worker ``FeatureCache`` is
     also placed on the mesh and the return becomes
     ``(gen_fn, device_args, cache0)`` with
-    ``gen_fn(device_args, seeds, rng, cache) -> (batch, cache)``."""
+    ``gen_fn(device_args, seeds, rng, cache) -> (batch, cache)``.
+
+    With ``feature_store="host"`` the feature table stays in host RAM —
+    unsharded, unpadded — behind a ``HostFeatureStore`` (depth
+    ``host_gather_depth``); only the CSR and labels are placed on the
+    mesh and the returns become ``(gen_fn, device_args, store)`` /
+    ``(gen_fn, device_args, store, cache0)`` (see ``make_generator_fn``
+    for the host-mode ``gen_fn`` signature)."""
     w = mesh.shape[axis_name]
     assert part.n_workers == w, (part.n_workers, w)
-    x = shard_rows(features.astype(np.float32), w)
+    host = feature_store == "host"
     y = shard_rows(labels.reshape(-1, 1).astype(np.float32), w)
-    gen_fn = make_generator_fn(mesh, fanouts=fanouts, axis_name=axis_name,
-                               merge_mode=merge_mode,
-                               capacity_slack=capacity_slack,
-                               cache_cfg=cache_cfg,
-                               fetch_capacity=fetch_capacity)
+    gen_fn = make_generator_fn(
+        mesh, fanouts=fanouts, axis_name=axis_name, merge_mode=merge_mode,
+        capacity_slack=capacity_slack, cache_cfg=cache_cfg,
+        fetch_capacity=fetch_capacity, feature_store=feature_store,
+        feat_dim=int(features.shape[1]) if host else None)
     spec = NamedSharding(mesh, P(axis_name))
+    cached = cache_cfg is not None and cache_cfg.n_rows > 0
+    if host:
+        table = (features if features.dtype == np.float32
+                 else features.astype(np.float32))
+        store = HostFeatureStore(table, depth=host_gather_depth,
+                                 sharding=spec)
+        device_args = (
+            jax.device_put(part.indptr, spec),
+            jax.device_put(part.indices, spec),
+            jax.device_put(y, spec),
+        )
+        if cached:
+            cache0 = jax.device_put(
+                init_cache_state(cache_cfg.validated(), table.shape[1], w),
+                spec)
+            return jax.jit(gen_fn), device_args, store, cache0
+        return jax.jit(gen_fn), device_args, store
+    x = shard_rows(features.astype(np.float32), w)
     device_args = (
         jax.device_put(part.indptr, spec),
         jax.device_put(part.indices, spec),
         jax.device_put(x, spec),
         jax.device_put(y, spec),
     )
-    if cache_cfg is not None and cache_cfg.n_rows > 0:
+    if cached:
         cache0 = jax.device_put(
             init_cache_state(cache_cfg.validated(), x.shape[1], w), spec)
         return jax.jit(gen_fn), device_args, cache0

@@ -1,0 +1,213 @@
+"""L3 host-RAM feature store: async double-buffered gathers behind the cache.
+
+The device-resident feature table is the hard capacity wall for
+industrial graphs — GraphScale scales past it by decoupling feature
+storage from the compute workers.  This module is that tier: the
+authoritative feature table stays in host RAM (a numpy array, possibly
+memory-mapped), and cache-tier misses resolve against it through an
+**asynchronous gather** instead of the routed owner ``all_to_all``.
+
+The perf problem is that a host gather blocks on PCIe.  The fetch path
+therefore splits the owner-fetch stage into *issue* and *collect*
+(``generation.fetch_rows(store="host")``):
+
+  issue    — the generation program for batch *t* emits a
+             :class:`HostMissRequest` (the staged miss ids plus the
+             scatter map back into the batch) instead of fetching; the
+             loop hands the ids to :meth:`HostFeatureStore.issue`,
+             which gathers on the host and starts an async
+             ``jax.device_put``.
+  collect  — one step later the landed ``[W, S, D]`` buffer is consumed
+             by two programs: gen *t+1* admits the rows into the cache
+             tiers (``fetch_rows``'s deferred-admission round, so the
+             hot head stops missing) and the consume program
+             (``pipeline.make_host_consume_step``) scatters them into
+             batch *t*'s feature holes via :func:`patch_batch` right
+             before training on it.
+
+The overlap comes from dispatch ORDER, not fusion: the loop dispatches
+gen *t*, then issues its gather (whose host-side work waits on gen
+*t*'s ids), then dispatches batch *t-1*'s patch+train — so the gather
+runs concurrently with that program's device compute.  Fusing gen and
+train into one program would instead pin the gather between two steps
+with nothing to hide under (its input is one program's output and its
+output is the next program's input).  The double buffer costs one step
+of cache-admission lag and zero correctness: landed rows are verbatim
+table copies merged with ``jnp.where``.
+
+``host_gather_depth`` picks the overlap mode: **2** (default) runs the
+host-side ``np.asarray`` + gather on a worker thread so the main thread
+keeps dispatching device work (the transfer overlaps compute); **1**
+gathers synchronously at issue time and blocks until the buffer lands,
+serializing gather and compute — the overlap-off baseline
+``benchmarks/host_fetch.py`` compares against.
+"""
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class HostMissRequest(NamedTuple):
+    """One step's staged cache misses, per worker (stacked ``[W, ...]``).
+
+    Emitted by ``fetch_rows(store="host")`` as part of the generation
+    step's output; consumed twice one step later — by
+    :meth:`HostFeatureStore.issue` (the ``ids`` to gather) and by
+    :func:`patch_batch` (the scatter map that fills the batch's feature
+    holes with the landed rows).
+
+    ids    [W, S]  int32  staged miss ids (-1 = empty staging slot)
+    slot   [W, R]  int32  staging slot serving each request slot
+                          (meaningful only where ``patch``)
+    patch  [W, R]  bool   request slots whose row arrives via the L3
+                          gather (their batch features are holes until
+                          :func:`patch_batch` runs)
+    """
+    ids: jax.Array
+    slot: jax.Array
+    patch: jax.Array
+
+
+def empty_admit(n_workers: int, dim: int,
+                dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """The prologue step's ``(admit_ids, admit_rows)`` — nothing landed yet.
+
+    All-(-1) ids admit nothing; the single staging slot keeps the
+    shapes rank-correct for the shard_map specs."""
+    return (jnp.full((n_workers, 1), -1, jnp.int32),
+            jnp.zeros((n_workers, 1, dim), dtype))
+
+
+def patch_batch(batch, req: HostMissRequest, landed: jax.Array):
+    """Fill batch feature holes with the landed L3 rows (pure jnp).
+
+    ``landed`` is the ``[W, S, D]`` buffer :meth:`HostFeatureStore.issue`
+    gathered for ``req.ids``; every request slot flagged ``req.patch``
+    takes its staged row, every other slot keeps its existing value
+    bit-for-bit (``jnp.where`` merge — never arithmetic), and hop levels
+    re-apply their masks so padded slots stay exactly zero.  The result
+    is bit-identical to the batch a device-resident fetch would have
+    produced, which is what keeps the host-store cells of the
+    differential matrix exact."""
+    w, s, d = landed.shape
+    wb = batch.x_seed.shape[0]
+    b = wb // w
+
+    def fill(slots, flag, x):
+        idx = jnp.clip(slots, 0, s - 1)[..., None]
+        rows = jnp.take_along_axis(landed, idx, axis=1)
+        return jnp.where(flag[..., None], rows, x)
+
+    x_seed = fill(req.slot[:, :b], req.patch[:, :b],
+                  batch.x_seed.reshape(w, b, d)).reshape(wb, d)
+    x_hops = []
+    off = b
+    for mask, x in zip(batch.masks, batch.x_hops):
+        n = mask.size // w          # per-worker request slots at this level
+        patched = fill(req.slot[:, off:off + n], req.patch[:, off:off + n],
+                       x.reshape(w, n, d))
+        patched = patched * mask.reshape(w, n, 1)
+        x_hops.append(patched.reshape(x.shape))
+        off += n
+    return batch._replace(x_seed=x_seed, x_hops=tuple(x_hops))
+
+
+class HostGather:
+    """Handle on one in-flight host gather (the double buffer's slot).
+
+    ``rows()`` returns the landed device buffer — with depth 2 it joins
+    the worker thread first (the gather itself), but the device transfer
+    stays asynchronous (``jax.device_put`` dispatch semantics), so the
+    consuming step's compute still overlaps it.  ``host_rows()`` exposes
+    the pre-transfer numpy buffer — the offline loop serializes storage
+    payloads straight from it instead of round-tripping the rows
+    device -> host a second time."""
+
+    def __init__(self, result=None, future=None):
+        self._result = result
+        self._future = future
+
+    def _get(self):
+        if self._result is None:
+            self._result = self._future.result()
+        return self._result
+
+    def rows(self) -> jax.Array:
+        """The landed ``[W, S, D]`` device buffer (sharded per worker)."""
+        return self._get()[0]
+
+    def host_rows(self) -> np.ndarray:
+        """The gathered rows as the host-side numpy staging buffer."""
+        return self._get()[1]
+
+
+class HostFeatureStore:
+    """The host-RAM feature table plus its async gather machinery.
+
+    ``table`` is the authoritative ``[N, D]`` feature array — host
+    memory only, never placed on device (``graph/synthetic.py``'s
+    ``features_on_host`` path can build it chunked or memory-mapped so
+    sweeps exceed aggregate device capacity).  ``depth`` is the gather
+    pipeline depth (see module docstring); ``sharding`` (e.g.
+    ``NamedSharding(mesh, P("data"))``) places each landed buffer so
+    worker ``w`` receives its own ``[S, D]`` slice.
+    """
+
+    def __init__(self, table: np.ndarray, *, depth: int = 2,
+                 sharding=None):
+        if table.ndim != 2:
+            raise ValueError(f"host feature table must be [N, D], "
+                             f"got shape {table.shape}")
+        if depth not in (1, 2):
+            raise ValueError(f"host_gather_depth must be 1 or 2, "
+                             f"got {depth}")
+        self.table = table
+        self.depth = depth
+        self.sharding = sharding
+        self.bytes_issued = 0       # PCIe payload telemetry, summed
+        self._pool = (ThreadPoolExecutor(max_workers=1, thread_name_prefix="l3")
+                      if depth == 2 else None)
+
+    @property
+    def feat_dim(self) -> int:
+        """Feature dimensionality ``D`` of the stored table."""
+        return self.table.shape[1]
+
+    def _gather(self, ids) -> Tuple[jax.Array, np.ndarray]:
+        # np.asarray blocks until the producing step computed the ids —
+        # with depth 2 that wait happens on the worker thread, so the
+        # main thread keeps dispatching the overlapping compute
+        ids_np = np.asarray(ids)
+        # staging is sized for the worst-case miss burst, so most slots
+        # are -1 padding in steady state: gather only the valid rows
+        # into a zeroed buffer instead of gathering padding and zeroing
+        # it back out (same bits, a fraction of the memcpy)
+        rows = np.zeros(ids_np.shape + (self.table.shape[1],),
+                        self.table.dtype)
+        valid = ids_np >= 0
+        rows[valid] = self.table[np.clip(ids_np[valid], 0,
+                                         self.table.shape[0] - 1)]
+        dev = jax.device_put(rows, self.sharding)
+        return dev, rows
+
+    def issue(self, ids) -> HostGather:
+        """Start the gather for one step's staged miss ids ``[W, S]``.
+
+        Returns the :class:`HostGather` handle whose ``rows()`` the
+        *next* step consumes.  Depth 2 dispatches the host work to the
+        store's worker thread and returns immediately; depth 1 gathers
+        inline and blocks until the buffer is resident on device (the
+        overlap-off mode)."""
+        self.bytes_issued += (ids.size * 4
+                              + ids.size * self.feat_dim
+                              * self.table.dtype.itemsize)
+        if self.depth == 2:
+            return HostGather(future=self._pool.submit(self._gather, ids))
+        dev, rows = self._gather(ids)
+        jax.block_until_ready(dev)
+        return HostGather(result=(dev, rows))

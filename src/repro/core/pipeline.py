@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .host_store import empty_admit, patch_batch
+
 
 def make_pipelined_step(
     gen_fn: Callable[..., Any],
@@ -44,6 +46,14 @@ def make_pipelined_step(
     sharded on the worker axis — only the MEANING of worker ``i``'s block
     changes: its own replica vs the authoritative shard of
     ``shard_of(id, W) == i``), so the pipelined step needs no mode switch.
+
+    Host mode (``feature_store="host"``) does NOT fuse: the L3 gather for
+    step *t*'s misses reads gen *t*'s output and feeds gen *t+1*'s
+    deferred admission, so inside one fused program it would sit squarely
+    on the critical path with nothing to hide under.  The host loop
+    instead dispatches generation and :func:`make_host_consume_step`
+    as separate programs with the gather issued between them — see
+    ``pipelined_loop``.
     """
 
     if cached:
@@ -62,6 +72,24 @@ def make_pipelined_step(
     return step
 
 
+def make_host_consume_step(train_fn):
+    """The host-mode train program: patch batch *t*'s holes, train on it.
+
+    One jitted ``consume(params, opt_state, batch, req, landed)`` fusing
+    the ``patch_batch`` scatter with the train step.  In host mode this
+    is deliberately a SEPARATE program from generation: the loop
+    dispatches gen *t+1* first, issues the gather for its misses (whose
+    host-side work waits on gen *t+1*'s ids), and only then dispatches
+    this program — so the previous gather's host gather + transfer runs
+    concurrently with this program's device compute instead of
+    serializing between steps.  The final schedule entry reuses the same
+    program as the drain: its landed buffer has no successor step, so
+    the loop collects it synchronously and consumes it last."""
+    def consume(params, opt_state, batch, req, landed):
+        return train_fn(params, opt_state, patch_batch(batch, req, landed))
+    return consume
+
+
 def pipelined_loop(
     gen_fn,
     train_fn,
@@ -73,6 +101,8 @@ def pipelined_loop(
     step=None,                   # pass a pre-jitted step to amortize compile
     cache=None,                  # FeatureCache pytree -> thread it through
     train_step=None,             # pre-jitted train_fn for the final step
+    host_store=None,             # HostFeatureStore -> L3 issue/collect loop
+    consume_step=None,           # pre-jitted host patch+train program
 ):
     """Run the synchronized pipeline for ``steps`` iterations.
 
@@ -81,16 +111,76 @@ def pipelined_loop(
     entry just to discard it — pure wasted generation work).  With
     ``cache`` given, the cache state is threaded through every generation
     and returned: ``(params, opt_state, losses, cache)``.
+
+    With a ``host_store`` (the generator built with
+    ``feature_store="host"``) the loop runs the L3 issue/collect double
+    buffer as a SPLIT dispatch — per iteration, in this order:
+
+      1. collect the previous gather's landed rows (``pending.rows()``);
+      2. dispatch gen *t* (deferred admission fed the landed rows);
+      3. issue the gather for gen *t*'s staged misses — its host-side
+         work waits on gen *t*'s ids, on the store's worker thread;
+      4. dispatch the consume program (patch + train batch *t-1*).
+
+    Gen *t* is queued on the device before the consume program, so the
+    gather's host work (the blocking id read, the table gather, the
+    device transfer) runs concurrently with batch *t-1*'s patch+train
+    compute — that concurrency is the whole point of the split (a fused
+    gen+train program would pin the gather between two steps with
+    nothing to hide under; ``benchmarks/host_fetch.py`` measures the
+    difference as its overlap gate).  The prologue generates batch 0
+    synchronously (admission fed ``empty_admit`` — nothing has landed
+    yet); the last landed buffer has no successor, so the epilogue
+    collects it synchronously and consumes it last.  Loss parity with
+    ``offline_loop(host_store=...)`` is bit-exact: both loops feed the
+    identical admit schedule and rng split.
     """
     cached = cache is not None
-    if step is None:
+    host = host_store is not None
+    if step is None and not host:
         step = jax.jit(make_pipelined_step(gen_fn, train_fn, cached=cached))
-    if train_step is None:
+    if train_step is None and not host:
         train_step = jax.jit(train_fn)
+    if consume_step is None and host:
+        consume_step = jax.jit(make_host_consume_step(train_fn))
     # one key per schedule entry plus a tail key: batch t is generated from
     # rngs[t] (split(k, n)[i] depends on n, so the count must stay aligned
     # with offline_loop even though rngs[steps] is no longer consumed)
     rngs = jax.random.split(rng, len(seed_schedule) + 1)
+    if host:
+        w = seed_schedule.shape[1]
+        if cached:
+            adm_ids, adm_rows = empty_admit(w, host_store.feat_dim)
+            batch, cache, req = gen_fn(device_args,
+                                       jnp.asarray(seed_schedule[0]),
+                                       rngs[0], cache, adm_ids, adm_rows)
+        else:
+            batch, req = gen_fn(device_args, jnp.asarray(seed_schedule[0]),
+                                rngs[0])
+        pending = host_store.issue(req.ids)
+        losses = []
+        for t in range(1, len(seed_schedule)):
+            landed = pending.rows()          # batch t-1's misses, landed
+            prev_batch, prev_req = batch, req
+            if cached:
+                batch, cache, req = gen_fn(device_args,
+                                           jnp.asarray(seed_schedule[t]),
+                                           rngs[t], cache, prev_req.ids,
+                                           landed)
+            else:
+                batch, req = gen_fn(device_args,
+                                    jnp.asarray(seed_schedule[t]), rngs[t])
+            pending = host_store.issue(req.ids)   # rides under consume
+            params, opt_state, loss = consume_step(params, opt_state,
+                                                   prev_batch, prev_req,
+                                                   landed)
+            losses.append(loss)
+        params, opt_state, loss = consume_step(params, opt_state, batch,
+                                               req, pending.rows())
+        losses.append(loss)
+        if cached:
+            return params, opt_state, jnp.stack(losses), cache
+        return params, opt_state, jnp.stack(losses)
     if cached:
         batch, cache = gen_fn(device_args, jnp.asarray(seed_schedule[0]),
                               rngs[0], cache)
@@ -111,15 +201,25 @@ def pipelined_loop(
     return params, opt_state, jnp.stack(losses)
 
 
-def _store_roundtrip(batch) -> bytes:
-    """GraphGen baseline storage: serialize the subgraph batch to bytes
-    (device->host copy + pickle), as precomputed subgraphs would be written."""
-    host = jax.tree.map(np.asarray, batch)
-    return pickle.dumps(host)
+def _store_roundtrip(payload):
+    """GraphGen baseline storage: serialize a batch payload to bytes.
+
+    One device->host copy (``np.asarray`` — a no-copy view for leaves
+    already resident on the host, e.g. the L3 store's landed staging
+    buffers), then pickle **protocol 5 with out-of-band buffers**: the
+    array bodies are handed back as zero-copy ``PickleBuffer`` views
+    instead of being memcpy'd into the byte stream a second time.
+    Returns ``(header_bytes, buffers)``."""
+    host = jax.tree.map(np.asarray, payload)
+    buffers = []
+    header = pickle.dumps(host, protocol=5,
+                          buffer_callback=buffers.append)
+    return header, buffers
 
 
-def _load_roundtrip(blob: bytes):
-    host = pickle.loads(blob)
+def _load_roundtrip(blob):
+    header, buffers = blob
+    host = pickle.loads(header, buffers=buffers)
     return jax.tree.map(jnp.asarray, host)
 
 
@@ -133,34 +233,67 @@ def offline_loop(
     rng: jax.Array,
     train_step=None,             # pass a pre-jitted step to amortize compile
     cache=None,                  # FeatureCache pytree -> thread it through
+    host_store=None,             # HostFeatureStore -> L3 generation path
 ):
     """GraphGen baseline: precompute-all -> store -> read -> train.
 
     With ``cache`` given, the cache threads through the generation phase
     (the storage round trip carries batches only, never cache state) and
     the return grows a trailing cache element.
+
+    With a ``host_store`` the generation phase resolves misses against
+    the L3 tier synchronously (the baseline is sequential anyway) using
+    the SAME admit schedule and rng split as
+    ``pipelined_loop(host_store=...)``, so the two loops' losses stay
+    bit-exact.  Storage payloads are ``(batch, req, rows)`` where
+    ``rows`` is the gather's already-landed host staging buffer
+    (``HostGather.host_rows()``) — serialized without ever re-copying it
+    off the device — and the train phase patches the holes on load.
     """
     cached = cache is not None
+    host = host_store is not None
     if train_step is None:
         train_step = jax.jit(train_fn)
+    patch_jit = jax.jit(patch_batch) if host else None
     # split one extra key exactly like pipelined_loop so batch t is generated
     # from the SAME rngs[t] in both loops (split(k, n)[i] depends on n)
     rngs = jax.random.split(rng, len(seed_schedule) + 1)
     t0 = time.perf_counter()
     storage = []
-    for t, seeds in enumerate(seed_schedule):
-        if cached:
-            batch, cache = gen_fn(device_args, jnp.asarray(seeds), rngs[t],
-                                  cache)
-        else:
-            batch = gen_fn(device_args, jnp.asarray(seeds), rngs[t])
-        jax.block_until_ready(batch)
-        storage.append(_store_roundtrip(batch))
+    if host:
+        adm = (empty_admit(seed_schedule.shape[1], host_store.feat_dim)
+               if cached else None)
+        for t, seeds in enumerate(seed_schedule):
+            if cached:
+                batch, cache, req = gen_fn(device_args, jnp.asarray(seeds),
+                                           rngs[t], cache, *adm)
+            else:
+                batch, req = gen_fn(device_args, jnp.asarray(seeds),
+                                    rngs[t])
+            pending = host_store.issue(req.ids)
+            if cached:
+                adm = (req.ids, pending.rows())
+            jax.block_until_ready(batch)
+            storage.append(_store_roundtrip((batch, req,
+                                             pending.host_rows())))
+    else:
+        for t, seeds in enumerate(seed_schedule):
+            if cached:
+                batch, cache = gen_fn(device_args, jnp.asarray(seeds),
+                                      rngs[t], cache)
+            else:
+                batch = gen_fn(device_args, jnp.asarray(seeds), rngs[t])
+            jax.block_until_ready(batch)
+            storage.append(_store_roundtrip(batch))
     t_gen = time.perf_counter() - t0
     losses = []
     t0 = time.perf_counter()
     for blob in storage:
-        batch = _load_roundtrip(blob)
+        if host:
+            batch, req, rows = _load_roundtrip(blob)
+            batch = patch_jit(batch, req, rows)
+        else:
+            batch = _load_roundtrip(blob)
         params, opt_state, loss = train_step(params, opt_state, batch)
         losses.append(loss)
     jax.block_until_ready(losses[-1])

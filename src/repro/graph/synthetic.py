@@ -39,9 +39,30 @@ def powerlaw_graph(
     return CSRGraph.from_edges(src, dst, n_nodes)
 
 
-def node_features(n_nodes: int, dim: int, seed: int = 0) -> np.ndarray:
+def node_features(n_nodes: int, dim: int, seed: int = 0, *,
+                  features_on_host: bool = False,
+                  chunk_rows: int = 1 << 16) -> np.ndarray:
+    """Synthetic [n_nodes, dim] float32 feature table.
+
+    With ``features_on_host=True`` the table is built for the L3 host
+    store (``core/host_store.py``): generated in ``chunk_rows``-row
+    chunks into one preallocated host array, so peak memory is the table
+    itself plus ONE chunk — the default path's full-size ``* 0.1``
+    temporary would double the footprint, which is exactly what a
+    table sized beyond aggregate device memory cannot afford.  Both
+    paths are bit-identical: sequential ``standard_normal`` chunk draws
+    consume the Generator stream exactly like one full-size draw, and
+    the in-place ``*= 0.1`` is the same float32 multiply.
+    """
     rng = np.random.default_rng(seed + 1)
-    return rng.standard_normal((n_nodes, dim), dtype=np.float32) * 0.1
+    if not features_on_host:
+        return rng.standard_normal((n_nodes, dim), dtype=np.float32) * 0.1
+    out = np.empty((n_nodes, dim), np.float32)
+    for lo in range(0, n_nodes, chunk_rows):
+        hi = min(lo + chunk_rows, n_nodes)
+        out[lo:hi] = rng.standard_normal((hi - lo, dim), dtype=np.float32)
+    out *= np.float32(0.1)
+    return out
 
 
 def node_labels(n_nodes: int, n_classes: int, seed: int = 0) -> np.ndarray:

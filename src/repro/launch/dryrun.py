@@ -65,7 +65,8 @@ def _artifact_stats(compiled, chips: int, t_lower: float, t_compile: float) -> d
 def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
                    merge_mode: str = "butterfly",
                    cache_rows: int = None, cache_mode: str = None,
-                   l1_rows: int = None, probe_wire: str = None) -> dict:
+                   l1_rows: int = None, probe_wire: str = None,
+                   feature_store: str = None) -> dict:
     """The paper's own workload at production scale: one synchronized
     generation+training step on a 530M-node / 5B-edge graph (the paper's
     evaluation graph).  The sampling depth comes from the arch config —
@@ -74,10 +75,18 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
     Generation shards over 'data' (the worker axis); the small GCN
     replicates over 'model'.  When the config enables the hot-node feature
     cache, its per-worker state rides in the pipelined carry —
-    ``(params, opt, batch, cache)`` — and must partition/compile too."""
+    ``(params, opt, batch, cache)`` — and must partition/compile too.
+
+    With ``feature_store="host"`` the cell lowers the L3 path: the
+    feature table never appears among the device args (it lives in host
+    RAM), the carry grows the in-flight ``HostMissRequest``, and the
+    step takes the landed ``[W, S, D]`` gather buffer — proving the
+    issue/collect split partitions and compiles at production scale
+    WITHOUT materializing a 530M-row device table spec."""
     from ..core.feature_cache import CacheConfig, cache_state_specs
-    from ..core.generation import make_generator_fn
-    from ..core.pipeline import make_pipelined_step
+    from ..core.generation import make_generator_fn, probe_round_capacity
+    from ..core.host_store import HostMissRequest
+    from ..core.pipeline import make_host_consume_step, make_pipelined_step
     from ..graph.subgraph import batch_specs, slots_per_seed
     from ..models import gcn as gcn_mod
     from ..train.optimizer import adam_update, init_adam
@@ -95,6 +104,9 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
         cfg = dataclasses.replace(cfg, cache_l1_rows=l1_rows)
     if probe_wire is not None:
         cfg = dataclasses.replace(cfg, cache_wire=probe_wire)
+    if feature_store is not None:
+        cfg = dataclasses.replace(cfg, feature_store=feature_store)
+    host = cfg.feature_store == "host"
     cache_cfg = CacheConfig.from_model(cfg)
     cached = cache_cfg is not None
     fanouts = cfg.fanouts
@@ -105,19 +117,15 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
     e_pad = -(-n_edges // w)
     s = jax.ShapeDtypeStruct
     i32, f32 = jnp.int32, jnp.float32
-    device_args = (
-        s((w, n_nodes + 1), i32),
-        s((w, e_pad), i32),
-        s((w * rows, cfg.gcn_in_dim), f32),
-        s((w * rows, 1), f32),
-    )
     seeds = s((w, b), i32)
     rng = jax.eval_shape(lambda: jax.random.PRNGKey(0))
     slack = cfg.capacity_slack if cfg.capacity_slack is not None else 2.0
     gen_fn = make_generator_fn(mesh, fanouts=fanouts, axis_name=axis,
                                merge_mode=merge_mode,
                                capacity_slack=slack,
-                               cache_cfg=cache_cfg)
+                               cache_cfg=cache_cfg,
+                               feature_store=cfg.feature_store,
+                               feat_dim=cfg.gcn_in_dim if host else None)
     tcfg = TrainConfig()
 
     def train_fn(params, opt, batch):
@@ -128,15 +136,66 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
     params = jax.eval_shape(lambda: gcn_mod.init_gcn(cfg, jax.random.PRNGKey(0)))
     opt = jax.eval_shape(lambda: init_adam(params))
     batch0 = batch_specs(w * b, fanouts, cfg.gcn_in_dim, n_workers=w)
-    step = make_pipelined_step(gen_fn, train_fn, cached=cached)
-    if cached:
-        cache0 = cache_state_specs(cache_cfg, cfg.gcn_in_dim, n_workers=w)
-        carry0 = (params, opt, batch0, cache0)
+    if host:
+        # the runtime loop dispatches gen and patch+train as SEPARATE
+        # programs (the gather must ride between them — see
+        # pipeline.pipelined_loop); for the cost view, lower one
+        # iteration's worth of device work as a single composite
+        consume = make_host_consume_step(train_fn)
+
+        if cached:
+            def step(carry, device_args, seeds, rng, landed):
+                params, opt, batch, req, cache = carry
+                nb, cache, nreq = gen_fn(device_args, seeds, rng, cache,
+                                         req.ids, landed)
+                params, opt, loss = consume(params, opt, batch, req, landed)
+                return (params, opt, nb, nreq, cache), loss
+        else:
+            def step(carry, device_args, seeds, rng, landed):
+                params, opt, batch, req = carry
+                nb, nreq = gen_fn(device_args, seeds, rng)
+                params, opt, loss = consume(params, opt, batch, req, landed)
+                return (params, opt, nb, nreq), loss
+        # no device feature table; per-worker staging size from the SAME
+        # formula the compiled fetch uses (_host_fetch)
+        device_args = (
+            s((w, n_nodes + 1), i32),
+            s((w, e_pad), i32),
+            s((w * rows, 1), f32),
+        )
+        r = b * slots_per_seed(fanouts)
+        stage = max(int(probe_round_capacity(r, 1, slack)), 1)
+        req0 = HostMissRequest(ids=s((w, stage), i32),
+                               slot=s((w, r), i32),
+                               patch=s((w, r), jnp.bool_))
+        landed = s((w, stage, cfg.gcn_in_dim), f32)
+        if cached:
+            cache0 = cache_state_specs(cache_cfg, cfg.gcn_in_dim,
+                                       n_workers=w)
+            carry0 = (params, opt, batch0, req0, cache0)
+        else:
+            carry0 = (params, opt, batch0, req0)
+        t0 = time.time()
+        lowered = jax.jit(step).lower(carry0, device_args, seeds, rng,
+                                      landed)
+        t_lower = time.time() - t0
     else:
-        carry0 = (params, opt, batch0)
-    t0 = time.time()
-    lowered = jax.jit(step).lower(carry0, device_args, seeds, rng)
-    t_lower = time.time() - t0
+        step = make_pipelined_step(gen_fn, train_fn, cached=cached)
+        device_args = (
+            s((w, n_nodes + 1), i32),
+            s((w, e_pad), i32),
+            s((w * rows, cfg.gcn_in_dim), f32),
+            s((w * rows, 1), f32),
+        )
+        if cached:
+            cache0 = cache_state_specs(cache_cfg, cfg.gcn_in_dim,
+                                       n_workers=w)
+            carry0 = (params, opt, batch0, cache0)
+        else:
+            carry0 = (params, opt, batch0)
+        t0 = time.time()
+        lowered = jax.jit(step).lower(carry0, device_args, seeds, rng)
+        t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
     rec.update(_artifact_stats(compiled, mesh.size, t_lower, time.time() - t0))
@@ -147,6 +206,7 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
         cache_rows=cfg.cache_rows,
         cache_mode=cfg.cache_mode if cached else None,
         cache_l1_rows=cache_cfg.l1_rows if cached else 0,
+        feature_store=cfg.feature_store,
         tokens=w * b * slots_per_seed(fanouts),   # padded node slots per iter
     )
     return rec
@@ -158,7 +218,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                gen_merge: str = "butterfly", moe_impl: str = "gather",
                seq_parallel: bool = False, compress: bool = False,
                cache_rows: int = None, cache_mode: str = None,
-               l1_rows: int = None, probe_wire: str = None) -> dict:
+               l1_rows: int = None, probe_wire: str = None,
+               feature_store: str = None) -> dict:
     cfg = get_config(arch)
     rec = {
         "arch": arch, "shape": shape_name,
@@ -169,7 +230,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["kind"] = "train"
         return lower_gcn_cell(rec, arch, multi_pod, merge_mode=gen_merge,
                               cache_rows=cache_rows, cache_mode=cache_mode,
-                              l1_rows=l1_rows, probe_wire=probe_wire)
+                              l1_rows=l1_rows, probe_wire=probe_wire,
+                              feature_store=feature_store)
     shape = SHAPES[shape_name]
     rec["kind"] = shape.kind
     if shape_name == "long_500k" and arch not in SUBQUADRATIC:
@@ -300,6 +362,11 @@ def main() -> None:
                     choices=["dense", "compact"],
                     help="GCN cells: shard-probe response wire format "
                          "override (sharded/tiered modes)")
+    ap.add_argument("--feature-store", default=None,
+                    choices=["device", "host"],
+                    help="GCN cells: feature-table placement override — "
+                         "host lowers the L3 issue/collect path with NO "
+                         "device feature table in the arg specs")
     ap.add_argument("--out", default=None, help="append JSONL here")
     args = ap.parse_args()
     rec = lower_cell(args.arch, args.shape, args.multi_pod,
@@ -308,7 +375,8 @@ def main() -> None:
                      moe_impl=args.moe, seq_parallel=args.seq_parallel,
                      compress=args.compress, cache_rows=args.cache_rows,
                      cache_mode=args.cache_mode, l1_rows=args.l1_rows,
-                     probe_wire=args.probe_wire)
+                     probe_wire=args.probe_wire,
+                     feature_store=args.feature_store)
     line = json.dumps(rec)
     print(line)
     if args.out:

@@ -208,9 +208,19 @@ def train_gcn(args) -> dict:
         cfg = dataclasses.replace(cfg, cache_wire=args.probe_wire)
     if args.probe_hit_cap is not None:
         cfg = dataclasses.replace(cfg, cache_hit_cap=args.probe_hit_cap)
+    if args.feature_store is not None:
+        cfg = dataclasses.replace(cfg, feature_store=args.feature_store)
+    if args.host_gather_depth is not None:
+        cfg = dataclasses.replace(cfg,
+                                  host_gather_depth=args.host_gather_depth)
     if args.smoke:
         cfg = smoke_config(cfg)
     fanouts = cfg.fanouts
+    host = cfg.feature_store == "host"
+    if host and args.warm_recalibrate:
+        raise SystemExit("--warm-recalibrate shrinks the owner-exchange "
+                         "buffers, which --feature-store host replaces "
+                         "with the L3 staging path — drop the flag")
     from ..core.feature_cache import CacheConfig
     cache_cfg = CacheConfig.from_model(cfg)
     cached = cache_cfg is not None
@@ -218,7 +228,8 @@ def train_gcn(args) -> dict:
     graph = powerlaw_graph(args.nodes, avg_degree=args.avg_degree,
                            n_hot=max(args.nodes // 1000, 1), seed=args.seed)
     part = partition_edges(graph, w)                       # step 1
-    feats = node_features(graph.n_nodes, cfg.gcn_in_dim, args.seed)
+    feats = node_features(graph.n_nodes, cfg.gcn_in_dim, args.seed,
+                          features_on_host=host)
     labels = node_labels(graph.n_nodes, cfg.n_classes, args.seed)
     table = balance_table(np.arange(graph.n_nodes), w, args.seed)  # step 2
 
@@ -231,7 +242,8 @@ def train_gcn(args) -> dict:
         return jnp.asarray(sw[:, cols])
 
     need_slack_cal = (args.capacity_slack is None
-                      and cfg.capacity_slack is None and w > 1)
+                      and cfg.capacity_slack is None and w > 1
+                      and not host)
     # the compact probe wire needs a hit_cap; calibrate one unless the
     # config pins it or --probe-hit-cap was given (any explicit value —
     # including 0, which selects the uncalibrated half-capacity auto
@@ -240,7 +252,8 @@ def train_gcn(args) -> dict:
     need_hit_cap = (cached and w > 1 and cache_cfg.mode != "replicated"
                     and cache_cfg.wire == "compact"
                     and cache_cfg.hit_cap == 0
-                    and args.probe_hit_cap is None)
+                    and args.probe_hit_cap is None
+                    and not host)
     cal_args = probes = None
     if need_slack_cal or need_hit_cap:
         # place the graph+tables once; every ladder rung (slack AND
@@ -252,6 +265,15 @@ def train_gcn(args) -> dict:
         slack = args.capacity_slack
     elif cfg.capacity_slack is not None:
         slack = cfg.capacity_slack       # config pins it: no calibration
+    elif host:
+        # host mode replaces the owner exchange with the L3 staging path,
+        # whose default staging size never drops — the ladder would probe
+        # a device-resident generator this run will not compile
+        slack = 2.0
+        if w > 1:
+            print("capacity_slack fixed at 2.0 (--feature-store host "
+                  "skips the drop-aware ladder: misses stage to the L3 "
+                  "store instead of the owner exchange)")
     elif w == 1:
         slack = 2.0      # W=1 fetch is a local gather: capacity never binds
     else:
@@ -268,10 +290,25 @@ def train_gcn(args) -> dict:
 
     gen_out = make_distributed_generator(                  # step 3
         mesh, part, feats, labels, fanouts=fanouts, capacity_slack=slack,
-        cache_cfg=cache_cfg,
+        cache_cfg=cache_cfg, feature_store=cfg.feature_store,
+        host_gather_depth=cfg.host_gather_depth,
     )
-    if cached:
+    store = None
+    cache = None
+    if host and cached:
+        gen_fn, device_args, store, cache = gen_out
+    elif host:
+        gen_fn, device_args, store = gen_out
+    elif cached:
         gen_fn, device_args, cache = gen_out
+    else:
+        gen_fn, device_args = gen_out
+    if host:
+        print(f"L3 host feature store: {feats.shape[0]}x{feats.shape[1]} "
+              f"f32 table ({feats.nbytes / 1e6:.1f} MB) in host RAM, "
+              f"gather depth {cfg.host_gather_depth} "
+              f"({'overlapped' if cfg.host_gather_depth == 2 else 'synchronous'})")
+    if cached:
         line = (f"hot-node cache: {cache_cfg.n_rows} rows/worker "
                 f"({cache_cfg.assoc}-way, {cache_cfg.mode}), "
                 f"admit-after-{cache_cfg.admit}")
@@ -283,9 +320,6 @@ def train_gcn(args) -> dict:
             if cache_cfg.wire == "compact" and cache_cfg.hit_cap:
                 line += f" (hit_cap {cache_cfg.hit_cap})"
         print(line)
-    else:
-        gen_fn, device_args = gen_out
-        cache = None
     tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                        checkpoint_every=args.ckpt_every)
     params = gcn_mod.init_gcn(cfg, jax.random.PRNGKey(args.seed))
@@ -302,11 +336,31 @@ def train_gcn(args) -> dict:
         params, opt = ckpt.restore(args.ckpt_dir, start, (params, opt))
         print(f"resumed from step {start}")
 
-    step = jax.jit(make_pipelined_step(gen_fn, train_fn, cached=cached))
+    step = None
+    consume_step = None
     train_step = jax.jit(train_fn)
+    pending = None
+    if host:
+        from ..core.host_store import empty_admit
+        from ..core.pipeline import make_host_consume_step
+        consume_step = jax.jit(make_host_consume_step(train_fn))
+    else:
+        step = jax.jit(make_pipelined_step(gen_fn, train_fn, cached=cached))
     # batch t comes from seeds_for(t)/rngs[t] — a resumed run must prime the
-    # pipeline at `start`, not at 0
-    if cached:
+    # pipeline at `start`, not at 0.  Host mode keeps the cache OUT of the
+    # carry: the split dispatch (gen / issue / consume) threads it through
+    # the generation call directly.
+    if host and cached:
+        adm_ids, adm_rows = empty_admit(w, feats.shape[1])
+        batch, cache, req = gen_fn(device_args, seeds_for(start),
+                                   rngs[start], cache, adm_ids, adm_rows)
+        carry = (params, opt, batch, req)
+        pending = store.issue(req.ids)
+    elif host:
+        batch, req = gen_fn(device_args, seeds_for(start), rngs[start])
+        carry = (params, opt, batch, req)
+        pending = store.issue(req.ids)
+    elif cached:
         batch, cache = gen_fn(device_args, seeds_for(start), rngs[start], cache)
         carry = (params, opt, batch, cache)
     else:
@@ -366,8 +420,32 @@ def train_gcn(args) -> dict:
                   f"capacity -> {new_cap} slots/destination "
                   f"(peak warm per-worker misses {miss_peak})")
         if t + 1 < args.steps:
-            carry, loss = step(carry, device_args, seeds_for(t + 1),
-                               rngs[t + 1])
+            if host:
+                # split dispatch: collect batch t's landed gather, queue
+                # gen t+1 (admitting the landed rows), issue ITS gather,
+                # then dispatch patch+train of batch t — the gather's
+                # host work overlaps the consume program's compute
+                landed = pending.rows()
+                if cached:
+                    batch, cache, req = gen_fn(device_args,
+                                               seeds_for(t + 1),
+                                               rngs[t + 1], cache,
+                                               carry[3].ids, landed)
+                else:
+                    batch, req = gen_fn(device_args, seeds_for(t + 1),
+                                        rngs[t + 1])
+                pending = store.issue(req.ids)
+                p, o, loss = consume_step(carry[0], carry[1], carry[2],
+                                          carry[3], landed)
+                carry = (p, o, batch, req)
+            else:
+                carry, loss = step(carry, device_args, seeds_for(t + 1),
+                                   rngs[t + 1])
+        elif host:
+            # drain: the last batch still has staged feature holes
+            p, o, loss = consume_step(carry[0], carry[1], carry[2],
+                                      carry[3], pending.rows())
+            carry = (p, o) + carry[2:]
         else:
             # nothing left to pre-generate: train-only final step (the same
             # redundant-generation fix pipelined_loop carries)
@@ -397,6 +475,10 @@ def train_gcn(args) -> dict:
     nodes_per_iter = batch.nodes_per_iteration()
     out = {"losses": losses, "nodes_per_iter": nodes_per_iter, "wall_s": dt,
            "capacity_slack": slack}
+    if host:
+        out["host_gather_mb"] = store.bytes_issued / 1e6
+        print(f"L3 host gathers shipped {out['host_gather_mb']:.1f} MB "
+              f"over PCIe")
     print(f"trained {args.steps - start} steps in {dt:.1f}s "
           f"({nodes_per_iter} padded nodes/iter, "
           f"{(args.steps - start) * nodes_per_iter / dt:,.0f} nodes/s)")
@@ -491,6 +573,17 @@ def main() -> None:
                          "rows per destination (skips the hit-cap "
                          "calibration ladder; 0 = auto, half the probe "
                          "capacity)")
+    ap.add_argument("--feature-store", default=None,
+                    choices=["device", "host"],
+                    help="where the feature table lives: device row-shards "
+                         "it over the workers, host keeps it in host RAM "
+                         "behind the async L3 gather tier (for tables "
+                         "beyond aggregate device memory)")
+    ap.add_argument("--host-gather-depth", type=int, default=None,
+                    choices=[1, 2],
+                    help="host store gather pipeline depth: 2 overlaps the "
+                         "gather with the compute step (default), 1 "
+                         "gathers synchronously (the overlap-off baseline)")
     ap.add_argument("--warm-recalibrate", type=int, default=0,
                     help="after N warm steps, shrink the owner-exchange "
                          "capacity to the observed steady-state cache-miss "

@@ -312,6 +312,194 @@ def test_cross_mode_differential_matrix(mode, wire, assoc, w):
     assert "MATRIX_OK" in out
 
 
+#: the host-store (L3) extension of the matrix: the same bit-identity
+#: and loss-equality contract, but with the feature table in host RAM —
+#: the generation step emits staged misses, the HostFeatureStore gathers
+#: them, and patch_batch must reconstruct the exact device-resident rows
+HOST_MODES = ("none", "replicated", "sharded", "tiered")
+
+
+@pytest.mark.parametrize("w", [1, 4])
+@pytest.mark.parametrize("mode", HOST_MODES)
+def test_host_store_differential_cells(mode, w):
+    """Host-store cells of the differential matrix: for every cache mode
+    x W, generation with ``feature_store="host"`` — after the L3 gather
+    lands and ``patch_batch`` fills the holes — produces feature rows
+    bit-identical to the uncached oracle (the raw table), padded slots
+    exactly zero, labels equal, zero drops, and a training loss equal
+    bit-for-bit to the oracle batch's.  Recurring rngs prove the
+    deferred-admission round warms the cache (hits appear by step 3
+    without perturbing a single bit); the store's byte telemetry must
+    account for the staging rounds."""
+    out = run_forced(f"""
+        MODE, W = {mode!r}, {w}
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.graph.synthetic import powerlaw_graph, node_features, node_labels
+        from repro.core.partition import partition_edges
+        from repro.core.balance import balance_table
+        from repro.core.feature_cache import CacheConfig
+        from repro.core.generation import make_distributed_generator
+        from repro.core.host_store import empty_admit, patch_batch
+        from repro.launch.mesh import make_mesh
+        from repro.models import gcn as gcn_mod
+
+        N, D, C = 600, 8, 7
+        mesh = make_mesh((W,), ("data",))
+        g = powerlaw_graph(N, avg_degree=8, n_hot=3, hot_degree=200, seed=0)
+        part = partition_edges(g, W)
+        X = node_features(N, D); Y = node_labels(N, C)
+        table = balance_table(np.arange(N), W, seed=0)
+        seeds = jnp.asarray(table.per_worker[:, :6])
+        cc = None if MODE == "none" else CacheConfig(
+            128, admit=1, assoc=2, mode=MODE,
+            l1_rows=32 if MODE == "tiered" else 0, l1_promote=2)
+        out = make_distributed_generator(mesh, part, X, Y, fanouts=(5, 3),
+                                         cache_cfg=cc, feature_store="host")
+        if cc is None:
+            gen, dev, store = out
+            cache = None
+        else:
+            gen, dev, store, cache = out
+        patch = jax.jit(patch_batch)
+        mcfg = dataclasses.replace(get_config("graphgen-gcn"), gcn_in_dim=D,
+                                   gcn_hidden=16, n_classes=C, fanouts=(5, 3))
+        params = gcn_mod.init_gcn(mcfg, jax.random.PRNGKey(1))
+        loss_fn = jax.jit(gcn_mod.gcn_loss)
+        adm = empty_admit(W, D)
+        hits = 0
+        for t in range(3):
+            rng = jax.random.PRNGKey(t % 2)   # recurring ids warm the cache
+            if cache is None:
+                b, req = gen(dev, seeds, rng)
+            else:
+                b, cache, req = gen(dev, seeds, rng, cache, *adm)
+            landed = store.issue(req.ids).rows()
+            adm = (req.ids, landed)           # next step's deferred admission
+            b = jax.tree.map(np.asarray, patch(b, req, landed))
+            assert b.n_dropped.sum() == 0, b.n_dropped
+            # --- bit-identical rows vs the uncached oracle (the table) ---
+            np.testing.assert_array_equal(b.x_seed, X[b.seeds])
+            oracle_hops = []
+            for h, m, x in zip(b.hops, b.masks, b.x_hops):
+                want = X[h] * m[..., None]          # padded slots exactly 0
+                np.testing.assert_array_equal(x, want)
+                oracle_hops.append(want)
+            assert (b.labels == Y[b.seeds]).all()
+            # --- bit-identical training loss vs the oracle batch ---------
+            oracle = b._replace(x_seed=X[b.seeds],
+                                x_hops=tuple(oracle_hops))
+            l_got = np.asarray(loss_fn(params, jax.tree.map(jnp.asarray, b)))
+            l_want = np.asarray(loss_fn(params,
+                                        jax.tree.map(jnp.asarray, oracle)))
+            assert l_got.tobytes() == l_want.tobytes(), (l_got, l_want)
+            assert np.isfinite(l_got)
+            hits += int(b.n_cache_hits.sum())
+        if cc is not None:
+            assert hits > 0, "deferred admission never warmed the cache"
+        else:
+            assert hits == 0
+        assert store.bytes_issued > 0
+        print("HOST_MATRIX_OK", MODE, W, hits)
+    """, devices=w)
+    assert "HOST_MATRIX_OK" in out
+
+
+def test_host_fetch_conservation_empty_and_all_miss():
+    """The L3 conservation contract at the fetch level on a W=4 mesh, in
+    the two corners that break sloppy accounting: an ALL-MISS cold batch
+    (every distinct id must surface as an L3 staging hit, or — when the
+    staging buffer is deliberately undersized — as a counted miss AND a
+    counted drop) and an EMPTY batch (all counters zero, while a pending
+    landed buffer still gets admitted).  Every cell checks
+    ``l1 + local + shard + l3 + misses == distinct`` per worker."""
+    out = run_forced("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.feature_cache import CacheConfig, init_cache_state
+        from repro.core.generation import fetch_rows
+        from repro.launch.mesh import make_mesh
+
+        W, d, R = 4, 3, 24
+        mesh = make_mesh((W,), ("data",))
+        spec = NamedSharding(mesh, P("data"))
+
+        def make_run(cfg, capacity, r):
+            def worker(i, cc, aid, arows):
+                cc = jax.tree.map(lambda a: a[0], cc)
+                out, cc, fs, cs, req = fetch_rows(
+                    None, i[0], "data", capacity=capacity, cache=cc,
+                    cache_cfg=cfg, store="host", feat_dim=d,
+                    host_admit=(aid[0], arows[0]))
+                pack = lambda t: jax.tree.map(lambda a: a[None], t)
+                return out[None], pack(cc), pack((fs, cs)), pack(req)
+            return jax.jit(shard_map(
+                worker, mesh=mesh,
+                in_specs=(P("data"),) * 4, out_specs=(P("data"),) * 4,
+                check_rep=False))
+
+        for mode in ("replicated", "sharded", "tiered"):
+            cfg = CacheConfig(32, admit=1, assoc=2, mode=mode,
+                              l1_rows=16 if mode == "tiered" else 0,
+                              l1_promote=2, store="host").validated()
+            # distinct per-worker ids, cold cache: all-miss
+            ids = np.stack([np.arange(R) + 100 * k for k in range(W)]
+                           ).astype(np.int32)
+            no_admit = (jnp.full((W, 1), -1, jnp.int32),
+                        jnp.zeros((W, 1, d), jnp.float32))
+
+            def conserve(cs, distinct):
+                l1 = np.asarray(cs.n_l1_hits); loc = np.asarray(cs.n_local_hits)
+                sh = np.asarray(cs.n_shard_hits); l3 = np.asarray(cs.n_l3_hits)
+                ms = np.asarray(cs.n_misses)
+                assert (l1 + loc + sh + l3 + ms == distinct).all(), \\
+                    (mode, l1, loc, sh, l3, ms, distinct)
+                return l3, ms
+
+            # ample staging: every distinct id is an L3 hit, zero drops
+            run = make_run(cfg, 2 * R, R)
+            state = jax.device_put(init_cache_state(cfg, d, W), spec)
+            out, state, (fs, cs), req = run(
+                jnp.asarray(ids), state, *[jax.device_put(a, spec)
+                                           for a in no_admit])
+            l3, ms = conserve(cs, R)
+            assert (l3 == R).all() and (ms == 0).all()
+            assert int(np.asarray(fs.n_dropped).sum()) == 0
+            assert (np.asarray(req.ids) >= 0).sum() == W * R
+            assert int(np.asarray(fs.host_gather_bytes).sum()) > 0
+
+            # undersized staging: the overflow is COUNTED miss + drop
+            cap = 4
+            run = make_run(cfg, cap, R)
+            state = jax.device_put(init_cache_state(cfg, d, W), spec)
+            out, state, (fs, cs), req = run(
+                jnp.asarray(ids), state, *[jax.device_put(a, spec)
+                                           for a in no_admit])
+            l3, ms = conserve(cs, R)
+            assert (l3 == cap).all() and (ms == R - cap).all()
+            assert (np.asarray(fs.n_dropped) == R - cap).all()
+
+            # empty batch: all counters zero, deferred admission still runs
+            run = make_run(cfg, 4, 0)
+            state = jax.device_put(init_cache_state(cfg, d, W), spec)
+            admit = (jnp.asarray(np.stack(
+                         [[7 + k, -1] for k in range(W)]).astype(np.int32)),
+                     jnp.ones((W, 2, d), jnp.float32))
+            out, state, (fs, cs), req = run(
+                jnp.zeros((W, 0), jnp.int32), state,
+                *[jax.device_put(a, spec) for a in admit])
+            l3, ms = conserve(cs, 0)
+            assert out.shape == (W, 0, d)
+            assert int(np.asarray(fs.n_dropped).sum()) == 0
+            assert int(np.asarray(cs.n_inserted).sum()) >= W, \\
+                "pending landed rows were not admitted on the empty step"
+        print("L3_CONSERVATION_OK")
+    """, devices=4)
+    assert "L3_CONSERVATION_OK" in out
+
+
 def test_cached_fetch_all_modes_bit_identical_w4():
     """Fetch-level complement of the matrix on one W=4 mesh: random request
     mixes against every (mode, assoc) cell return rows bit-identical to

@@ -245,6 +245,72 @@ def launch(x, kern):
 """)
 
 
+def test_host_transfer_fires_on_blocking_calls_in_traced_fns():
+    """A device->host round-trip inside a jit/shard_map function either
+    raises TracerArrayConversionError or silently bakes one step's data
+    into the compiled program; block_until_ready under tracing is a
+    silent no-op barrier."""
+    _assert_fires("host-transfer", """
+import jax
+@jax.jit
+def step(x):
+    host = jax.device_get(x)
+    return host.sum()
+""")
+    _assert_fires("host-transfer", """
+import jax
+import numpy as np
+@jax.jit
+def step(x):
+    rows = np.asarray(x)
+    return rows * 2
+""")
+    _assert_fires("host-transfer", """
+import jax
+def step(x):
+    y = (x * 2).sum()
+    y.block_until_ready()
+    return y
+f = jax.jit(step)
+""")
+    # taint propagates through assignment, as in tracer-branch
+    _assert_fires("host-transfer", """
+import jax
+@jax.jit
+def step(x):
+    y = x + 1
+    return jax.device_get(y)
+""")
+
+
+def test_host_transfer_silent_on_host_side_driver_code():
+    """The same calls OUTSIDE traced functions are the legitimate idiom —
+    host_store.py's _gather and the loops' block_until_ready timing
+    fences must never fire, nor jnp.asarray (stays on device)."""
+    _assert_silent("""
+import jax
+import numpy as np
+def gather(table, ids):
+    ids_np = np.asarray(ids)
+    rows = table[ids_np]
+    return jax.device_put(rows)
+""")
+    _assert_silent("""
+import jax
+def run(step, carry):
+    carry = step(carry)
+    jax.block_until_ready(carry)
+    return carry
+""")
+    _assert_silent("""
+import jax
+import jax.numpy as jnp
+@jax.jit
+def step(x):
+    return jnp.asarray(x) * 2
+""")
+
+
 def test_unseeded_rng_fires_on_global_state():
     """Global-RNG draws make benchmark runs non-replayable; the repo
     contract is an explicit np.random.default_rng(seed)."""
@@ -457,8 +523,9 @@ def test_zero_findings_on_real_tree_within_budget():
 
 
 def test_rule_registry_covers_the_issue_hazard_classes():
-    """All six hazard classes stay registered — removing a rule without
+    """All seven hazard classes stay registered — removing a rule without
     replacing its coverage fails the build."""
     assert {"discarded-functional-update", "tracer-branch",
             "collective-axis", "cacheconfig-required",
-            "pallas-blockspec", "unseeded-rng"} <= set(RULES)
+            "pallas-blockspec", "unseeded-rng",
+            "host-transfer"} <= set(RULES)

@@ -1,0 +1,174 @@
+"""L3 host-RAM feature store: unit tests and loop-level loss parity.
+
+Multi-worker host-store cells (the differential matrix extension and
+the conservation corners) live in ``tests/test_distributed.py`` under
+the forced-device subprocess rule; everything here runs on the single
+real device, where the host pipelined, host offline, device pipelined,
+and device offline loops must all agree bit-for-bit.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs import REGISTRY, smoke_config
+from repro.core.balance import balance_table
+from repro.core.config import TrainConfig
+from repro.core.feature_cache import CacheConfig
+from repro.core.generation import make_distributed_generator
+from repro.core.partition import partition_edges
+from repro.core.host_store import HostFeatureStore, empty_admit
+from repro.core.pipeline import (_load_roundtrip, _store_roundtrip,
+                                 offline_loop, pipelined_loop)
+from repro.graph.synthetic import node_features, node_labels, powerlaw_graph
+from repro.models import gcn as gcn_mod
+from repro.train.optimizer import adam_update, init_adam
+
+
+def _setup(n=800, fanouts=(5, 3), dim=16, classes=5, cache_cfg=None,
+           feature_store="host", depth=2):
+    """One-worker generator + train_fn + schedule, either feature store."""
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    g = powerlaw_graph(n, avg_degree=6, seed=0)
+    partition = partition_edges(g, 1)
+    feats = node_features(n, dim)
+    labels = node_labels(n, classes)
+    out = make_distributed_generator(
+        mesh, partition, feats, labels, fanouts=fanouts,
+        cache_cfg=cache_cfg, feature_store=feature_store,
+        host_gather_depth=depth)
+    cfg = dataclasses.replace(
+        smoke_config(REGISTRY["graphgen-gcn"]),
+        gcn_in_dim=dim, n_classes=classes, fanouts=fanouts)
+    params = gcn_mod.init_gcn(cfg, jax.random.PRNGKey(0))
+    opt = init_adam(params)
+    tcfg = TrainConfig(learning_rate=1e-3, total_steps=10)
+
+    def train_fn(params, opt, batch):
+        loss, grads = jax.value_and_grad(gcn_mod.gcn_loss)(params, batch)
+        params, opt, _ = adam_update(tcfg, params, grads, opt)
+        return params, opt, loss
+
+    table = balance_table(np.arange(n), 1, seed=0)
+    sched = np.stack([table.per_worker[:, i * 8:(i + 1) * 8]
+                      for i in range(6)])
+    return out, params, opt, train_fn, sched
+
+
+def test_store_validation_errors():
+    """A 1-D table and an unsupported gather depth must fail loudly at
+    construction, not as a shape error mid-loop."""
+    with pytest.raises(ValueError, match=r"\[N, D\]"):
+        HostFeatureStore(np.zeros(8, np.float32))
+    with pytest.raises(ValueError, match="host_gather_depth"):
+        HostFeatureStore(np.zeros((8, 2), np.float32), depth=3)
+
+
+def test_empty_admit_shapes_admit_nothing():
+    """The prologue admission: all ids -1 (nothing admits), one staging
+    slot to keep the shard_map specs rank-correct."""
+    ids, rows = empty_admit(4, 16)
+    assert ids.shape == (4, 1) and rows.shape == (4, 1, 16)
+    assert (np.asarray(ids) == -1).all()
+    assert np.abs(np.asarray(rows)).max() == 0
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_gather_matches_table_and_zero_fills_padding(depth):
+    """Both gather depths land the exact table rows for valid ids,
+    exact zeros for -1 staging padding, identical device and host
+    views, and the byte telemetry accumulates per issue."""
+    table = np.arange(40, dtype=np.float32).reshape(10, 4)
+    store = HostFeatureStore(table, depth=depth)
+    ids = jnp.asarray(np.array([[3, -1, 7], [-1, 0, 9]], np.int32))
+    h = store.issue(ids)
+    dev = np.asarray(h.rows())
+    np.testing.assert_array_equal(dev, h.host_rows())
+    np.testing.assert_array_equal(dev[0, 0], table[3])
+    np.testing.assert_array_equal(dev[0, 2], table[7])
+    np.testing.assert_array_equal(dev[1, 1], table[0])
+    np.testing.assert_array_equal(dev[1, 2], table[9])
+    assert np.abs(dev[0, 1]).max() == 0 and np.abs(dev[1, 0]).max() == 0
+    first = store.bytes_issued
+    assert first > 0
+    store.issue(ids).rows()
+    assert store.bytes_issued == 2 * first
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+@pytest.mark.parametrize("cached", [False, True])
+def test_host_pipelined_loss_parity_with_device_loops(cached, depth):
+    """THE parity contract on one worker: the host-store pipelined loop
+    (split dispatch, double-buffered gather, deferred admission) and the
+    host offline loop produce per-step losses bit-identical to the
+    device-resident pipelined and offline loops under the same schedule
+    and rng split — the L3 tier changes where features live, never a
+    single bit of what trains."""
+    cc = (CacheConfig(128, admit=1, assoc=2, mode="replicated")
+          if cached else None)
+    out_d, params, opt, train_fn, sched = _setup(
+        cache_cfg=cc, feature_store="device")
+    out_h, _, _, _, _ = _setup(cache_cfg=cc, feature_store="host",
+                               depth=depth)
+    rng = jax.random.PRNGKey(42)
+    if cached:
+        gen_d, dev_d, cache_d = out_d
+        gen_h, dev_h, store, cache_h = out_h
+        *_, lp_d, _ = pipelined_loop(gen_d, train_fn, dev_d, sched, params,
+                                     opt, rng, cache=cache_d)
+        *_, lp_h, _ = pipelined_loop(gen_h, train_fn, dev_h, sched, params,
+                                     opt, rng, cache=cache_h,
+                                     host_store=store)
+        _, _, lo_d, _, _ = offline_loop(gen_d, train_fn, dev_d, sched,
+                                        params, opt, rng, cache=cache_d)
+        _, _, lo_h, _, _ = offline_loop(gen_h, train_fn, dev_h, sched,
+                                        params, opt, rng, cache=cache_h,
+                                        host_store=store)
+    else:
+        gen_d, dev_d = out_d
+        gen_h, dev_h, store = out_h
+        *_, lp_d = pipelined_loop(gen_d, train_fn, dev_d, sched, params,
+                                  opt, rng)
+        *_, lp_h = pipelined_loop(gen_h, train_fn, dev_h, sched, params,
+                                  opt, rng, host_store=store)
+        _, _, lo_d, _ = offline_loop(gen_d, train_fn, dev_d, sched,
+                                     params, opt, rng)
+        _, _, lo_h, _ = offline_loop(gen_h, train_fn, dev_h, sched,
+                                     params, opt, rng, host_store=store)
+    lp_d, lp_h = np.asarray(lp_d), np.asarray(lp_h)
+    lo_d, lo_h = np.asarray(lo_d), np.asarray(lo_h)
+    assert np.isfinite(lp_h).all()
+    assert lp_h.tobytes() == lp_d.tobytes(), (lp_h, lp_d)
+    assert lo_h.tobytes() == lo_d.tobytes(), (lo_h, lo_d)
+    assert lp_h.tobytes() == lo_h.tobytes(), (lp_h, lo_h)
+    assert store.bytes_issued > 0
+
+
+def test_store_roundtrip_serializes_buffers_out_of_band():
+    """The offline storage path must hand array bodies back as pickle-5
+    out-of-band buffers (zero extra memcpy), reconstruct bit-exactly,
+    and keep the header free of the row payload."""
+    payload = {"rows": np.arange(4096, dtype=np.float32).reshape(64, 64),
+               "ids": np.arange(64, dtype=np.int32)}
+    header, buffers = _store_roundtrip(payload)
+    assert len(buffers) >= 2, "array bodies were inlined, not out-of-band"
+    assert len(header) < payload["rows"].nbytes // 2
+    back = _load_roundtrip((header, buffers))
+    np.testing.assert_array_equal(np.asarray(back["rows"]),
+                                  payload["rows"])
+    np.testing.assert_array_equal(np.asarray(back["ids"]), payload["ids"])
+
+
+def test_chunked_host_feature_table_is_bitwise_identical():
+    """``features_on_host=True`` builds the table in bounded-memory
+    chunks; every chunk size must consume the Generator stream exactly
+    like the one-shot draw — bit-for-bit, including the non-chunk-aligned
+    tail."""
+    want = node_features(1000, 8, seed=3)
+    for chunk in (64, 256, 1 << 16):
+        got = node_features(1000, 8, seed=3, features_on_host=True,
+                            chunk_rows=chunk)
+        assert got.tobytes() == want.tobytes(), chunk

@@ -7,6 +7,7 @@ from . import (  # noqa: F401
     cacheconfig_required,
     collective_axis,
     discarded_update,
+    host_transfer,
     pallas_blockspec,
     tracer_branch,
     unseeded_rng,

@@ -1,0 +1,157 @@
+"""host-transfer: blocking device->host round-trips on traced values.
+
+The L3 host feature store (``core/host_store.py``) makes host transfers
+a first-class, *deliberately placed* part of the fetch path: gathers are
+issued outside the jitted step and overlap the next step's compute.
+The hazard this rule encodes is the accidental version — a host
+round-trip *inside* a ``jit``/``shard_map`` function or Pallas kernel:
+
+* ``jax.device_get(x)`` / ``np.asarray(x)`` on a tracer raises a
+  ``TracerArrayConversionError`` at best; on a concrete-but-traced
+  value it silently bakes one step's data into the compiled program;
+* ``x.block_until_ready()`` under tracing is a no-op on the tracer
+  (nothing to wait for) that *reads* as a synchronization point — the
+  barrier the author wanted never exists in the compiled program.
+
+The fix is always the same: keep the value on device (``jnp`` ops) and
+move the transfer/synchronization outside the traced function — the
+issue/collect split in ``host_store.py`` is the worked example.
+
+Scope mirrors ``tracer-branch``: only provably-traced functions are
+analyzed, and only values derived from their (non-static) parameters
+are tainted, so host-side driver code that legitimately calls
+``np.asarray``/``block_until_ready`` (e.g. the store's ``_gather``)
+never fires.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set, Tuple
+
+from ..astutil import call_tail
+from ..core import rule
+from .tracer_branch import _SKIP_SCOPES, _collect_candidates, _tainted_use
+
+
+def _numpy_aliases(tree) -> Set[str]:
+    """Local names bound to the real numpy module (never ``jax.numpy``)."""
+    aliases = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "numpy":
+                    aliases.add(a.asname or "numpy")
+    return aliases
+
+
+def _flag_call(node: ast.Call, tainted: Set[str], np_names: Set[str],
+               fn_name: str, how: str):
+    """Finding tuple when *node* is a blocking host transfer on a tainted
+    value, else None."""
+    tail = call_tail(node.func)
+    if tail == "device_get" and any(
+            _tainted_use(a, tainted) is not None for a in node.args):
+        return (node.lineno,
+                f"jax.device_get() on a traced value inside a {how} "
+                f"function '{fn_name}' blocks on a device->host copy — "
+                f"keep the value on device or move the transfer outside "
+                f"the traced function (see core/host_store.py's "
+                f"issue/collect split)")
+    if (tail in ("asarray", "array")
+            and isinstance(node.func, ast.Attribute)
+            and isinstance(node.func.value, ast.Name)
+            and node.func.value.id in np_names
+            and any(_tainted_use(a, tainted) is not None
+                    for a in node.args)):
+        return (node.lineno,
+                f"np.{tail}() on a traced value inside a {how} function "
+                f"'{fn_name}' materializes it on the host — use "
+                f"jnp.{tail} (stays on device) or hoist the conversion "
+                f"out of the traced function")
+    if tail == "block_until_ready":
+        recv_tainted = (isinstance(node.func, ast.Attribute)
+                        and _tainted_use(node.func.value, tainted)
+                        is not None)
+        if recv_tainted or any(_tainted_use(a, tainted) is not None
+                               for a in node.args):
+            return (node.lineno,
+                    f"block_until_ready() on a traced value inside a "
+                    f"{how} function '{fn_name}' is a silent no-op under "
+                    f"tracing — the barrier never exists in the compiled "
+                    f"program; synchronize outside the traced function")
+    return None
+
+
+def _analyze(fn, static_names, static_nums, is_kernel, how,
+             np_names: Set[str], findings: List[Tuple[int, str]]):
+    params = [a.arg for a in (*fn.args.posonlyargs, *fn.args.args)]
+    if not is_kernel:
+        params += [a.arg for a in fn.args.kwonlyargs]
+    tainted = {p for i, p in enumerate(params)
+               if p not in static_names and i not in static_nums
+               and p != "self"}
+
+    def check_calls(expr):
+        stack = [expr]
+        while stack:
+            node = stack.pop()
+            if isinstance(node, _SKIP_SCOPES):
+                continue
+            if isinstance(node, ast.Call):
+                hit = _flag_call(node, tainted, np_names, fn.name, how)
+                if hit is not None:
+                    findings.append(hit)
+            stack.extend(ast.iter_child_nodes(node))
+
+    def visit(stmt):
+        if isinstance(stmt, _SKIP_SCOPES):
+            return
+        if isinstance(stmt, ast.Assign):
+            check_calls(stmt.value)
+            is_tainted = _tainted_use(stmt.value, tainted) is not None
+            for tgt in stmt.targets:
+                for name in ast.walk(tgt):
+                    if isinstance(name, ast.Name):
+                        (tainted.add if is_tainted
+                         else tainted.discard)(name.id)
+        elif isinstance(stmt, ast.AugAssign):
+            check_calls(stmt.value)
+            if (isinstance(stmt.target, ast.Name)
+                    and _tainted_use(stmt.value, tainted) is not None):
+                tainted.add(stmt.target.id)
+        elif isinstance(stmt, (ast.If, ast.While)):
+            check_calls(stmt.test)
+            for s in (*stmt.body, *stmt.orelse):
+                visit(s)
+        elif isinstance(stmt, ast.For):
+            check_calls(stmt.iter)
+            for s in (*stmt.body, *stmt.orelse):
+                visit(s)
+        elif isinstance(stmt, ast.With):
+            for s in stmt.body:
+                visit(s)
+        elif isinstance(stmt, ast.Try):
+            for s in (*stmt.body, *stmt.orelse, *stmt.finalbody):
+                visit(s)
+        elif isinstance(stmt, (ast.Return, ast.Expr)) and stmt.value:
+            check_calls(stmt.value)
+
+    for stmt in fn.body:
+        visit(stmt)
+
+
+@rule("host-transfer")
+def check(tree, ctx):
+    """Flag ``jax.device_get``/``np.asarray``/``.block_until_ready()`` on
+    values derived from the parameters of provably-traced functions."""
+    findings: List[Tuple[int, str]] = []
+    np_names = _numpy_aliases(tree)
+    seen = set()
+    for fn, names, nums, is_kernel, how in _collect_candidates(tree):
+        key = (id(fn), frozenset(names), frozenset(nums), is_kernel)
+        if key in seen:
+            continue
+        seen.add(key)
+        _analyze(fn, names, nums, is_kernel, how, np_names, findings)
+    for item in sorted(set(findings)):
+        yield item
