@@ -470,6 +470,11 @@ def train_gcn(args) -> dict:
                     # ids were owner-fetched instead (lost hit, not a bug)
                     line += f" demoted={demoted}"
             print(line)
+    if pending is not None:
+        # a zero-step run (resume landing exactly at args.steps) primes the
+        # gather but never reaches the loop's drain; rows() memoizes, so on
+        # every other path this hits the already-landed buffer for free
+        pending.rows()
     jax.block_until_ready(carry[0])
     dt = time.perf_counter() - t0
     nodes_per_iter = batch.nodes_per_iteration()

@@ -722,6 +722,7 @@ def test_cache_requires_dedup():
     table = jnp.zeros((8, 2))
     cache = init_cache(8, 2)
     with pytest.raises(ValueError):
+        # graphlint: disable=cacheconfig-required  # asserting this exact rejection path
         fetch_rows(table, jnp.zeros(4, jnp.int32), "data", dedup=False,
                    cache=cache)
 
@@ -733,6 +734,7 @@ def test_cache_requires_cfg():
     table = jnp.zeros((8, 2))
     cache = init_cache(8, 2)
     with pytest.raises(ValueError):
+        # graphlint: disable=cacheconfig-required  # the missing cfg IS what this test asserts
         fetch_rows(table, jnp.zeros(4, jnp.int32), "data", cache=cache)
 
 

@@ -509,11 +509,13 @@ def test_json_report_shape():
 # ---------------------------------------------------------------------------
 
 def test_zero_findings_on_real_tree_within_budget():
-    """`python -m tools.graphlint src benchmarks examples` exits 0 on the
-    committed tree, inside the CI wall-clock budget — same code path CI
-    runs, so a new hazard or a slow rule fails here first."""
+    """`python -m tools.graphlint src benchmarks examples tests tools`
+    exits 0 on the committed tree, inside the CI wall-clock budget — the
+    same code path (including the project-wide dataflow rules) CI runs,
+    so a new hazard or a slow rule fails here first."""
     t0 = time.monotonic()
-    findings = lint_paths(["src", "benchmarks", "examples"],
+    findings = lint_paths(["src", "benchmarks", "examples",
+                           "tests", "tools"],
                           Config.load(), root=REPO_ROOT)
     elapsed = time.monotonic() - t0
     errors = [f for f in findings if f.severity == "error"]
@@ -523,9 +525,12 @@ def test_zero_findings_on_real_tree_within_budget():
 
 
 def test_rule_registry_covers_the_issue_hazard_classes():
-    """All seven hazard classes stay registered — removing a rule without
+    """All ten hazard classes stay registered — removing a rule without
     replacing its coverage fails the build."""
+    from tools.graphlint.core import PROJECT_RULES
     assert {"discarded-functional-update", "tracer-branch",
             "collective-axis", "cacheconfig-required",
             "pallas-blockspec", "unseeded-rng",
             "host-transfer"} <= set(RULES)
+    assert {"handle-lifecycle", "closure-capture",
+            "carry-structure"} <= set(PROJECT_RULES)

@@ -1,0 +1,733 @@
+"""graphlint v2: the project-wide dataflow rules and the analysis engine.
+
+Fixture pairs (bug fires / fixed version is silent) for the three
+interprocedural rules — ``handle-lifecycle``, ``closure-capture``,
+``carry-structure`` — plus property tests that pound the CFG builder
+and the reaching-definitions fixpoint with generated structured control
+flow.  The property tests run under ``tests/_hypothesis_stub.py`` when
+hypothesis is not installed (deterministic examples, no shrinking).
+"""
+from __future__ import annotations
+
+import ast
+import io
+import json
+import random
+import textwrap
+
+from hypothesis import given, settings, strategies as st
+
+from tools import _report
+from tools.graphlint.analysis.cfg import ENTRY, EXIT, build_cfg
+from tools.graphlint.analysis.defuse import ReachingDefs, assigned_names
+from tools.graphlint.core import (Config, RunStats, changed_files,
+                                  lint_source)
+
+_AXES = frozenset({"pod", "data", "model"})
+
+
+def _fired(source: str):
+    src = textwrap.dedent(source)
+    return {f.rule for f in lint_source("fixture.py", src, mesh_axes=_AXES)}
+
+
+def _assert_fires(rule: str, source: str):
+    fired = _fired(source)
+    assert rule in fired, f"expected {rule!r} to fire, got {fired or '{}'}"
+
+
+def _assert_silent(source: str):
+    fired = _fired(source)
+    assert not fired, f"expected no findings, got {fired}"
+
+
+# ---------------------------------------------------------------------------
+# handle-lifecycle
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_leaked_executor_fires():
+    _assert_fires("handle-lifecycle", """\
+        from concurrent.futures import ThreadPoolExecutor
+
+        def launch(work):
+            pool = ThreadPoolExecutor(max_workers=2)
+            pool.submit(work)
+        """)
+
+
+def test_lifecycle_shutdown_executor_silent():
+    _assert_silent("""\
+        from concurrent.futures import ThreadPoolExecutor
+
+        def launch(work):
+            pool = ThreadPoolExecutor(max_workers=2)
+            pool.submit(work)
+            pool.shutdown()
+        """)
+
+
+def test_lifecycle_context_managed_executor_silent():
+    _assert_silent("""\
+        from concurrent.futures import ThreadPoolExecutor
+
+        def launch(work):
+            with ThreadPoolExecutor(max_workers=2) as pool:
+                pool.submit(work)
+        """)
+
+
+def test_lifecycle_undrained_gather_fires():
+    """The PR 7 double-buffer hazard: an issued gather nobody collects."""
+    _assert_fires("handle-lifecycle", """\
+        def prologue(host_store, ids):
+            pending = host_store.issue(ids)
+            return 0
+        """)
+
+
+def test_lifecycle_drained_gather_silent():
+    _assert_silent("""\
+        def prologue(host_store, ids):
+            pending = host_store.issue(ids)
+            return pending.rows()
+        """)
+
+
+def test_lifecycle_branch_that_skips_drain_fires():
+    """One CFG path drains, the other falls off the end — still a leak."""
+    _assert_fires("handle-lifecycle", """\
+        def maybe(host_store, ids, flag):
+            pending = host_store.issue(ids)
+            if flag:
+                return pending.rows()
+            return 0
+        """)
+
+
+def test_lifecycle_none_guard_drain_silent():
+    """`if h is not None: h.rows()` is the canonical optional-handle
+    drain; the live-handle path cannot take the guard's skip side."""
+    _assert_silent("""\
+        def run(host_store, ids, steps):
+            pending = None
+            if steps:
+                pending = host_store.issue(ids)
+            for t in range(steps):
+                pass
+            if pending is not None:
+                pending.rows()
+        """)
+
+
+def test_lifecycle_clobbered_reissue_fires():
+    """Overwriting an undrained handle loses the gather it held."""
+    _assert_fires("handle-lifecycle", """\
+        def reissue(host_store, a, b):
+            pending = host_store.issue(a)
+            pending = host_store.issue(b)
+            return pending.rows()
+        """)
+
+
+def test_lifecycle_escaping_handle_silent():
+    """A handle that escapes (returned, stored) is the caller's problem."""
+    _assert_silent("""\
+        def hand_off(host_store, ids, registry):
+            pending = host_store.issue(ids)
+            registry.append(pending)
+
+        def forward(host_store, ids):
+            pending = host_store.issue(ids)
+            return pending
+        """)
+
+
+def test_lifecycle_unjoined_thread_fires_joined_silent():
+    _assert_fires("handle-lifecycle", """\
+        import threading
+
+        def spawn(fn):
+            t = threading.Thread(target=fn)
+            t.start()
+        """)
+    _assert_silent("""\
+        import threading
+
+        def spawn(fn):
+            t = threading.Thread(target=fn)
+            t.start()
+            t.join()
+        """)
+
+
+def test_lifecycle_unstopped_loader_fires_at_module_scope():
+    """PR 1's leak class: a PrefetchLoader nobody stops — and module
+    top-level scopes are analyzed too, not just functions."""
+    _assert_fires("handle-lifecycle", """\
+        loader = PrefetchLoader(batches, depth=2)
+        first = next(iter(loader.queue))
+        """)
+    _assert_silent("""\
+        loader = PrefetchLoader(batches, depth=2)
+        first = next(iter(loader.queue))
+        loader.stop()
+        """)
+
+
+def test_lifecycle_raise_path_is_not_a_leak():
+    """Exception propagation is modelled as 'path vanishes', not a leak."""
+    _assert_silent("""\
+        def run(host_store, ids, ok):
+            pending = host_store.issue(ids)
+            if not ok:
+                raise ValueError("bad ids")
+            return pending.rows()
+        """)
+
+
+def test_lifecycle_suppression_works():
+    _assert_silent("""\
+        def launch(host_store, ids):
+            # graphlint: disable=handle-lifecycle  # drained by the caller via the store registry
+            pending = host_store.issue(ids)
+            return 0
+        """)
+
+
+# ---------------------------------------------------------------------------
+# closure-capture
+# ---------------------------------------------------------------------------
+
+def test_capture_mutated_module_list_fires():
+    _assert_fires("closure-capture", """\
+        import jax
+
+        schedule = []
+
+        def step(x):
+            return x + len(schedule)
+
+        step = jax.jit(step)
+
+        def push(v):
+            schedule.append(v)
+        """)
+
+
+def test_capture_immutable_tuple_silent():
+    _assert_silent("""\
+        import jax
+
+        schedule = (1, 2, 3)
+
+        def step(x):
+            return x + len(schedule)
+
+        step = jax.jit(step)
+        """)
+
+
+def test_capture_unmutated_list_silent():
+    """A list nobody mutates is frozen in practice — no finding."""
+    _assert_silent("""\
+        import jax
+
+        schedule = [1, 2, 3]
+
+        def step(x):
+            return x + len(schedule)
+
+        step = jax.jit(step)
+        """)
+
+
+def test_capture_through_factory_fires():
+    """The repo's make_*_fn idiom: jit(make_step(...)) traces the inner
+    def, whose captures resolve through the enclosing scopes."""
+    _assert_fires("closure-capture", """\
+        import jax
+
+        stats = {}
+
+        def make_step(lr):
+            def step(params, grads):
+                return params - lr * grads * stats.get("scale", 1)
+            return step
+
+        step = jax.jit(make_step(0.1))
+
+        def record(k, v):
+            stats.update({k: v})
+        """)
+
+
+def test_capture_through_partial_and_decorator_fires():
+    _assert_fires("closure-capture", """\
+        import functools
+        import jax
+        import numpy as np
+
+        buf = np.zeros((4,))
+
+        @jax.jit
+        def step(x):
+            return x + buf
+
+        def refill():
+            buf[0] = 1.0
+        """)
+
+
+def test_capture_traced_method_reading_reassigned_attr_fires():
+    _assert_fires("closure-capture", """\
+        import jax
+
+        class Runner:
+            def __init__(self):
+                self.scale = 1.0
+
+            def recalibrate(self):
+                self.scale = 2.0
+
+            def step(self, x):
+                return x * self.scale
+
+        r = Runner()
+        fast = jax.jit(r.step)
+        """)
+
+
+def test_capture_init_only_attr_silent():
+    _assert_silent("""\
+        import jax
+
+        class Runner:
+            def __init__(self):
+                self.scale = 1.0
+
+            def step(self, x):
+                return x * self.scale
+
+        r = Runner()
+        fast = jax.jit(r.step)
+        """)
+
+
+def test_capture_suppression_works():
+    _assert_silent("""\
+        import jax
+
+        table = []
+
+        def step(x):
+            # graphlint: disable=closure-capture  # table is sealed before the first trace
+            return x + len(table)
+
+        step = jax.jit(step)
+
+        def seal(v):
+            table.append(v)
+        """)
+
+
+# ---------------------------------------------------------------------------
+# carry-structure
+# ---------------------------------------------------------------------------
+
+def test_carry_arity_drift_fires():
+    """The pack site grew a slot the unpack site never learned about."""
+    _assert_fires("carry-structure", """\
+        def step(carry, x):
+            params, opt = carry
+            return (params, opt), x
+
+        def loop(params, opt, batch, xs):
+            carry = (params, opt, batch)
+            for x in xs:
+                out = step(carry, x)
+            return out
+        """)
+
+
+def test_carry_matching_arity_silent():
+    _assert_silent("""\
+        def step(carry, x):
+            params, opt, batch = carry
+            return (params, opt, batch), x
+
+        def loop(params, opt, batch, xs):
+            carry = (params, opt, batch)
+            for x in xs:
+                out = step(carry, x)
+            return out
+        """)
+
+
+def test_carry_transposed_elements_fire():
+    _assert_fires("carry-structure", """\
+        def step(carry):
+            opt, params = carry
+            return opt
+
+        def loop(params, opt):
+            carry = (params, opt)
+            return step(carry)
+        """)
+
+
+def test_carry_variant_packs_skipped():
+    """Cached/uncached variant carries (3- or 4-tuples depending on a
+    flag) are ambiguous — the rule skips rather than guesses."""
+    _assert_silent("""\
+        def step(carry, x):
+            params, opt, batch = carry
+            return (params, opt, batch), x
+
+        def loop(params, opt, batch, cache, cached, xs):
+            if cached:
+                carry = (params, opt, batch, cache)
+            else:
+                carry = (params, opt, batch)
+            for x in xs:
+                out = step(carry, x)
+            return out
+        """)
+
+
+def test_carry_return_arity_drift_fires():
+    _assert_fires("carry-structure", """\
+        def make_outputs():
+            return 1, 2, 3
+
+        a, b = make_outputs()
+        """)
+
+
+def test_carry_jit_factory_resolution_fires():
+    """Interprocedural resolution through jit + a factory return."""
+    _assert_fires("carry-structure", """\
+        import jax
+
+        def make_step(train):
+            def step(carry, x):
+                params, opt = carry
+                return (params, opt), train(x)
+            return step
+
+        def loop(params, opt, batch, train, x):
+            step = jax.jit(make_step(train))
+            out, loss = step((params, opt, batch), x)
+            return out
+        """)
+
+
+def test_carry_loop_carried_redefinition_skipped():
+    """`carry, loss = step(carry, ...)` makes the pack provenance
+    ambiguous at the call (the loop-carried def reaches it too) — the
+    rule skips instead of guessing, like the real pipelined_loop."""
+    _assert_silent("""\
+        import jax
+
+        def make_step(train):
+            def step(carry, x):
+                params, opt = carry
+                return (params, opt), train(x)
+            return step
+
+        def loop(params, opt, batch, train, xs):
+            step = jax.jit(make_step(train))
+            carry = (params, opt, batch)
+            for x in xs:
+                carry, loss = step(carry, x)
+            return carry
+        """)
+
+
+def test_carry_subscript_out_of_range_fires():
+    _assert_fires("carry-structure", """\
+        def tail(params, opt, batch):
+            carry = (params, opt, batch)
+            return carry[3]
+        """)
+
+
+def test_carry_checkpoint_drift_fires():
+    _assert_fires("carry-structure", """\
+        from repro.train import checkpoint
+
+        def run(d, params, opt, sched):
+            checkpoint.save(d, 1, (params, opt, sched))
+            params, opt = checkpoint.restore(d, 1, (params, opt))
+            return params
+        """)
+
+
+def test_carry_checkpoint_matched_silent():
+    _assert_silent("""\
+        from repro.train import checkpoint
+
+        def run(d, params, opt):
+            checkpoint.save(d, 1, (params, opt))
+            params, opt = checkpoint.restore(d, 1, (params, opt))
+            return params
+        """)
+
+
+# ---------------------------------------------------------------------------
+# CFG / reaching-defs property tests on generated control flow
+# ---------------------------------------------------------------------------
+
+_NAMES = ("a", "b", "c")
+
+
+def _gen_block(rng: random.Random, depth: int, indent: int,
+               terminators: bool, in_loop: bool, lines: list) -> None:
+    """Append a random structured block at *indent* to *lines*."""
+    pad = "    " * indent
+    for _ in range(rng.randint(1, 3)):
+        kinds = ["assign", "assign", "aug", "expr"]
+        if depth > 0:
+            kinds += ["if", "for", "while", "try", "with"]
+        if terminators:
+            kinds += ["return", "raise"]
+            if in_loop:
+                kinds += ["break", "continue"]
+        kind = rng.choice(kinds)
+        tgt, src = rng.choice(_NAMES), rng.choice(_NAMES)
+        if kind == "assign":
+            lines.append(f"{pad}{tgt} = {src} + 1")
+        elif kind == "aug":
+            lines.append(f"{pad}{tgt} += 1")
+        elif kind == "expr":
+            lines.append(f"{pad}print({src})")
+        elif kind == "return":
+            lines.append(f"{pad}return {src}")
+        elif kind == "raise":
+            lines.append(f"{pad}raise ValueError({src})")
+        elif kind in ("break", "continue"):
+            lines.append(f"{pad}{kind}")
+        elif kind == "if":
+            lines.append(f"{pad}if {src} > 0:")
+            _gen_block(rng, depth - 1, indent + 1, terminators, in_loop,
+                       lines)
+            if rng.random() < 0.5:
+                lines.append(f"{pad}else:")
+                _gen_block(rng, depth - 1, indent + 1, terminators,
+                           in_loop, lines)
+        elif kind == "for":
+            lines.append(f"{pad}for {tgt} in range(2):")
+            _gen_block(rng, depth - 1, indent + 1, terminators, True,
+                       lines)
+        elif kind == "while":
+            lines.append(f"{pad}while {src} < 3:")
+            _gen_block(rng, depth - 1, indent + 1, terminators, True,
+                       lines)
+        elif kind == "try":
+            lines.append(f"{pad}try:")
+            _gen_block(rng, depth - 1, indent + 1, terminators, in_loop,
+                       lines)
+            lines.append(f"{pad}except ValueError:")
+            _gen_block(rng, depth - 1, indent + 1, terminators, in_loop,
+                       lines)
+            if rng.random() < 0.3:
+                lines.append(f"{pad}finally:")
+                _gen_block(rng, depth - 1, indent + 1, False, in_loop,
+                           lines)
+        elif kind == "with":
+            lines.append(f"{pad}with ctx() as {tgt}:")
+            _gen_block(rng, depth - 1, indent + 1, terminators, in_loop,
+                       lines)
+
+
+def _generate_program(seed: int, terminators: bool) -> ast.Module:
+    rng = random.Random(seed)
+    lines: list = []
+    _gen_block(rng, depth=3, indent=0, terminators=terminators,
+               in_loop=False, lines=lines)
+    return ast.parse("\n".join(lines))
+
+
+def _check_wellformed(cfg) -> None:
+    nodes = set(cfg.nodes())
+    assert ENTRY in nodes and EXIT in nodes
+    assert ENTRY not in cfg.stmts and EXIT not in cfg.stmts
+    assert not cfg.succ[EXIT], "EXIT must have no successors"
+    for src, dsts in cfg.succ.items():
+        assert src in nodes
+        for d in dsts:
+            assert d in nodes, f"edge {src}->{d} dangles"
+    for nid in cfg.stmts:
+        assert nid in cfg.header_exprs
+
+
+@settings(max_examples=40)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_cfg_invariants_on_terminator_free_flow(seed):
+    """Without return/raise/break, every statement gets exactly one
+    reachable node and EXIT is reachable."""
+    tree = _generate_program(seed, terminators=False)
+    n_stmts = sum(1 for node in ast.walk(tree)
+                  if isinstance(node, ast.stmt))
+    cfg = build_cfg(tree.body)
+    _check_wellformed(cfg)
+    assert len(cfg.stmts) == n_stmts
+    reachable = cfg.reachable(ENTRY)
+    assert EXIT in reachable
+    assert reachable == set(cfg.nodes()), "unreachable node in structured flow"
+
+
+@settings(max_examples=40)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_cfg_invariants_with_terminators(seed):
+    """Return/raise/break/continue prune paths but never corrupt the
+    graph: edges stay well-formed, raise never reaches EXIT directly,
+    return reaches only EXIT."""
+    tree = _generate_program(seed, terminators=True)
+    n_stmts = sum(1 for node in ast.walk(tree)
+                  if isinstance(node, ast.stmt))
+    cfg = build_cfg(tree.body)
+    _check_wellformed(cfg)
+    assert len(cfg.stmts) <= n_stmts
+    # inside a try body, ANY statement (return and raise included) may
+    # jump to a handler entry — those are the only permitted extras
+    stmt_nids = {id(s): nid for nid, s in cfg.stmts.items()}
+    handler_entries = {
+        stmt_nids[id(h.body[0])]
+        for node in ast.walk(tree) if isinstance(node, ast.Try)
+        for h in node.handlers if id(h.body[0]) in stmt_nids}
+    for nid, stmt in cfg.stmts.items():
+        if isinstance(stmt, ast.Return):
+            assert cfg.succ[nid] <= {EXIT} | handler_entries
+        elif isinstance(stmt, ast.Raise):
+            assert cfg.succ[nid] <= handler_entries, \
+                "raise must terminate its path (handlers aside)"
+
+
+@settings(max_examples=40)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.booleans())
+def test_reaching_defs_sites_are_real_definitions(seed, terminators):
+    """Every (name, site) the fixpoint reports either is the synthetic
+    parameter def at ENTRY or names a node that really assigns it."""
+    tree = _generate_program(seed, terminators=terminators)
+    cfg = build_cfg(tree.body)
+    rd = ReachingDefs(cfg, params={"p"})
+    for nid in cfg.nodes():
+        for name, site in rd.defs_in(nid):
+            if site == ENTRY:
+                assert name == "p"
+                continue
+            assert name in assigned_names(cfg.stmts[site],
+                                          cfg.header_exprs[site])
+
+
+@settings(max_examples=25)
+@given(st.lists(st.sampled_from(_NAMES), min_size=1, max_size=8))
+def test_reaching_defs_straightline_last_def_wins(names):
+    """In straight-line code exactly the textually last definition of
+    each name reaches EXIT."""
+    src = "\n".join(f"{n} = {i}" for i, n in enumerate(names))
+    tree = ast.parse(src)
+    cfg = build_cfg(tree.body)
+    rd = ReachingDefs(cfg)
+    last_lineno = {n: i + 1 for i, n in enumerate(names)}
+    by_lineno = {stmt.lineno: nid for nid, stmt in cfg.stmts.items()}
+    for name, lineno in last_lineno.items():
+        assert rd.reaching(EXIT, name) == frozenset({by_lineno[lineno]})
+
+
+def test_reaching_defs_branch_merges_both_definitions():
+    src = textwrap.dedent("""\
+        if cond:
+            x = 1
+        else:
+            x = 2
+        use(x)
+        """)
+    tree = ast.parse(src)
+    cfg = build_cfg(tree.body)
+    rd = ReachingDefs(cfg)
+    (use_nid,) = [nid for nid, s in cfg.stmts.items() if s.lineno == 5]
+    sites = rd.reaching(use_nid, "x")
+    assert len(sites) == 2, "both branch definitions must reach the use"
+
+
+# ---------------------------------------------------------------------------
+# runner surfaces: stats, changed-only plumbing, SARIF
+# ---------------------------------------------------------------------------
+
+def test_stats_table_reports_rules_and_total():
+    stats = RunStats()
+    lint_source_with_stats = textwrap.dedent("""\
+        def f(store, ids):
+            pending = store.issue(ids)
+            return 0
+        """)
+    from tools.graphlint.core import build_entry, lint_entries
+    findings = lint_entries([build_entry("fixture.py",
+                                         lint_source_with_stats)],
+                            Config(), mesh_axes=_AXES, stats=stats)
+    assert any(f.rule == "handle-lifecycle" for f in findings)
+    table = stats.table()
+    assert "handle-lifecycle" in table and "TOTAL" in table
+    assert stats.findings["handle-lifecycle"] == 1
+
+
+def test_report_only_filters_findings_but_not_the_index(tmp_path):
+    """--changed-only reports only changed files, yet project rules still
+    see the whole tree (the index is unfiltered)."""
+    from tools.graphlint.core import lint_paths
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(store, ids):\n"
+                   "    pending = store.issue(ids)\n"
+                   "    return 0\n")
+    ok = tmp_path / "ok.py"
+    ok.write_text("x = 1\n")
+    everything = lint_paths([str(tmp_path)], Config(), root=str(tmp_path))
+    assert {f.rule for f in everything} == {"handle-lifecycle"}
+    filtered = lint_paths([str(tmp_path)], Config(), root=str(tmp_path),
+                          report_only={"ok.py"})
+    assert filtered == []
+
+
+def test_changed_files_merge_base_plumbing():
+    """Against HEAD the diff set is just the working-tree delta — a set;
+    a bogus ref degrades to None (full lint), never an exception."""
+    head = changed_files(base="HEAD")
+    assert head is None or isinstance(head, set)
+    assert changed_files(base="no-such-ref-anywhere") is None
+
+
+def test_sarif_log_shape_and_emit():
+    findings = [{"path": "src/x.py", "line": 3, "check": "handle-lifecycle",
+                 "severity": "error", "message": "leaked"},
+                {"path": "src/y.py", "line": 7, "check": "carry-structure",
+                 "severity": "warning", "message": "drifted"}]
+    log = _report.sarif_log(findings, tool_name="graphlint",
+                            rule_docs={"closure-capture": "docs"})
+    assert log["version"] == "2.1.0"
+    run = log["runs"][0]
+    assert run["tool"]["driver"]["name"] == "graphlint"
+    rule_ids = [r["id"] for r in run["tool"]["driver"]["rules"]]
+    assert rule_ids == sorted(rule_ids)
+    assert {"handle-lifecycle", "carry-structure",
+            "closure-capture"} <= set(rule_ids)
+    res = run["results"]
+    assert res[0]["ruleId"] == "handle-lifecycle"
+    assert res[0]["level"] == "error" and res[1]["level"] == "warning"
+    loc = res[0]["locations"][0]["physicalLocation"]
+    assert loc["artifactLocation"]["uri"] == "src/x.py"
+    assert loc["region"]["startLine"] == 3
+    assert res[0]["ruleIndex"] == rule_ids.index("handle-lifecycle")
+
+    buf = io.StringIO()
+    _report.emit(findings, fmt="sarif", stream=buf, tool_name="graphlint")
+    assert json.loads(buf.getvalue())["version"] == "2.1.0"
+
+
+def test_sarif_out_writes_file(tmp_path):
+    out = tmp_path / "lint.sarif"
+    _report.write_sarif([], str(out), tool_name="graphlint")
+    data = json.loads(out.read_text())
+    assert data["runs"][0]["tool"]["driver"]["name"] == "graphlint"
+    assert data["runs"][0]["results"] == []

@@ -7,6 +7,10 @@ through this module so CI gets one consistent surface:
 * ``json`` — a single ``{"findings": [...], "counts": {...}}`` object
 * ``github`` — workflow commands (``::error file=...``) so a failing CI
   step annotates the offending line directly in the PR diff
+* ``sarif`` — minimal SARIF 2.1.0, the interchange format GitHub code
+  scanning ingests (``github/codeql-action/upload-sarif``), so lint
+  findings show up as code-scanning alerts with history, not just as
+  one-off step annotations
 
 A *finding* is a plain dict with keys ``path`` (repo-relative), ``line``
 (1-based int), ``check`` (rule / check id), ``severity`` (``"error"`` or
@@ -17,7 +21,10 @@ from __future__ import annotations
 import json
 import sys
 
-FORMATS = ("human", "json", "github")
+FORMATS = ("human", "json", "github", "sarif")
+
+SARIF_SCHEMA = ("https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+                "master/Schemata/sarif-schema-2.1.0.json")
 
 
 def _gh_escape(value: str) -> str:
@@ -53,11 +60,71 @@ def format_human(finding: dict) -> str:
         msg=finding["message"])
 
 
-def emit(findings, fmt: str = "human", stream=None) -> None:
+def sarif_log(findings, tool_name: str, rule_docs=None) -> dict:
+    """A minimal SARIF 2.1.0 log object for *findings*.
+
+    *rule_docs* optionally maps rule id -> one-line description; rules
+    referenced by findings always appear in the driver's rule table so
+    code scanning can render them."""
+    rule_docs = rule_docs or {}
+    rule_ids = sorted({str(f["check"]) for f in findings} | set(rule_docs))
+    rules = [{"id": rid,
+              "shortDescription": {"text": rule_docs.get(rid, rid)}}
+             for rid in rule_ids]
+    rule_index = {rid: i for i, rid in enumerate(rule_ids)}
+    results = []
+    for f in findings:
+        rid = str(f["check"])
+        results.append({
+            "ruleId": rid,
+            "ruleIndex": rule_index[rid],
+            "level": ("error" if f.get("severity", "error") == "error"
+                      else "warning"),
+            "message": {"text": str(f["message"])},
+            "locations": [{
+                "physicalLocation": {
+                    "artifactLocation": {
+                        "uri": str(f["path"]).replace("\\", "/"),
+                        "uriBaseId": "ROOT",
+                    },
+                    "region": {"startLine": int(f.get("line", 1))},
+                },
+            }],
+        })
+    return {
+        "$schema": SARIF_SCHEMA,
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {"name": tool_name,
+                                "informationUri":
+                                    "https://example.invalid/repro-lint",
+                                "rules": rules}},
+            "originalUriBaseIds": {"ROOT": {"uri": "file:///"}},
+            "results": results,
+        }],
+    }
+
+
+def write_sarif(findings, path: str, tool_name: str,
+                rule_docs=None) -> None:
+    """Serialize :func:`sarif_log` to *path* (the ``--sarif-out`` flag)."""
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(sarif_log(findings, tool_name, rule_docs=rule_docs),
+                  f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def emit(findings, fmt: str = "human", stream=None,
+         tool_name: str = "repro-lint") -> None:
     """Write *findings* (list of finding dicts) to *stream* in *fmt*."""
     stream = stream if stream is not None else sys.stdout
     if fmt not in FORMATS:
         raise ValueError(f"unknown format {fmt!r}; expected one of {FORMATS}")
+    if fmt == "sarif":
+        json.dump(sarif_log(findings, tool_name), stream, indent=2,
+                  sort_keys=True)
+        stream.write("\n")
+        return
     if fmt == "json":
         counts = {"error": 0, "warning": 0}
         for f in findings:

@@ -20,8 +20,10 @@ breaks the build — not the reader:
    container lacks).
 
 Findings are emitted through ``tools/_report.py`` — the same
-``--format=human|json|github`` surface as ``tools/graphlint`` — so CI
-failures annotate the offending file and line in the PR diff.
+``--format=human|json|github|sarif`` surface as ``tools/graphlint`` —
+so CI failures annotate the offending file and line in the PR diff,
+and ``--sarif-out FILE`` additionally writes a SARIF 2.1.0 log for the
+code-scanning upload step.
 
 Usage::
 
@@ -224,12 +226,21 @@ def main() -> int:
                     help="minimum docstring coverage percent (default 100)")
     ap.add_argument("--format", choices=_report.FORMATS, default="human",
                     help="finding output format (default: human)")
+    ap.add_argument("--sarif-out", metavar="FILE", default=None,
+                    help="also write findings as SARIF 2.1.0 to FILE "
+                         "(for github/codeql-action/upload-sarif)")
     args = ap.parse_args()
     sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
     problems = check_markdown_links()
     pct, missing = check_docstrings()
     _report.emit(problems + missing, fmt=args.format,
-                 stream=sys.stderr if args.format == "human" else sys.stdout)
+                 stream=sys.stderr if args.format == "human" else sys.stdout,
+                 tool_name="check_docs")
+    if args.sarif_out:
+        _report.write_sarif(
+            problems + missing, args.sarif_out, tool_name="check_docs",
+            rule_docs={"markdown-link": "relative link/anchor must resolve",
+                       "docstring": "public API symbol lacks a docstring"})
     failed = bool(problems)
     if args.format == "human":
         print(f"docstring coverage: {pct:.1f}% "

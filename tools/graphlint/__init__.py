@@ -12,9 +12,11 @@ Rules register themselves in :mod:`tools.graphlint.core`; importing
 from .core import (  # noqa: F401
     Config,
     Finding,
+    PROJECT_RULES,
     RULES,
     lint_paths,
     lint_source,
+    project_rule,
     rule,
 )
 from . import rules  # noqa: F401  (imports register the rule set)

@@ -3,6 +3,14 @@
 Exit status is 1 when any error-severity finding survives suppression
 filtering (warnings print but do not fail), or when ``--max-seconds`` is
 exceeded — the CI gate asserts the pass stays off the critical path.
+
+``--changed-only`` restricts *reporting* to files touched since
+``git merge-base HEAD origin/main`` (override the base with
+``--changed-base``) while still indexing the whole tree, so the
+project-wide dataflow rules stay sound — the pre-commit recipe in
+``docs/LINTING.md`` uses it.  ``--stats`` prints a per-rule wall-time
+table; ``--sarif-out FILE`` additionally writes the findings as SARIF
+2.1.0 for ``github/codeql-action/upload-sarif``.
 """
 from __future__ import annotations
 
@@ -15,9 +23,10 @@ import time
 if __package__ in (None, ""):  # pragma: no cover
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.dirname(os.path.abspath(__file__)))))
-    from tools.graphlint.core import Config, RULES, lint_paths
+    from tools.graphlint.core import (Config, RunStats, all_rules,
+                                      changed_files, lint_paths)
 else:
-    from .core import Config, RULES, lint_paths
+    from .core import Config, RunStats, all_rules, changed_files, lint_paths
 
 _REPORT_DIR = os.path.dirname(os.path.dirname(
     os.path.dirname(os.path.abspath(__file__))))
@@ -42,26 +51,60 @@ def main(argv=None) -> int:
     ap.add_argument("--max-seconds", type=float, default=None,
                     help="fail if the lint run takes longer than this "
                          "(the CI wall-clock budget)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print a per-rule wall-time table after linting")
+    ap.add_argument("--changed-only", action="store_true",
+                    help="report findings only in files changed vs the "
+                         "merge base (the whole tree is still indexed)")
+    ap.add_argument("--changed-base", default="origin/main", metavar="REF",
+                    help="base ref for --changed-only (default: origin/main)")
+    ap.add_argument("--sarif-out", default=None, metavar="FILE",
+                    help="additionally write findings as SARIF 2.1.0 "
+                         "to FILE (for github/codeql-action/upload-sarif)")
     args = ap.parse_args(argv)
 
     if args.list_rules:
         config = Config.load(args.config)
-        for name in sorted(RULES):
-            fn = RULES[name]
+        rules = all_rules()
+        for name in sorted(rules):
+            fn = rules[name]
             doc = (fn.__doc__ or "").strip().split("\n")[0]
             print(f"{name} [{config.severity_of(name)}] {doc}")
         return 0
     if not args.paths:
-        ap.error("no paths given (e.g. src/ benchmarks/ examples/)")
+        if args.changed_only:
+            # bare `--changed-only` (the pre-commit recipe): lint the
+            # default CI scope, report only what the diff touches
+            args.paths = ["src", "benchmarks", "examples", "tests", "tools"]
+        else:
+            ap.error("no paths given (e.g. src/ benchmarks/ examples/)")
+
+    report_only = None
+    if args.changed_only:
+        report_only = changed_files(args.changed_base)
+        if report_only is None:
+            print(f"graphlint: --changed-only: cannot resolve merge base "
+                  f"vs {args.changed_base!r}; linting everything",
+                  file=sys.stderr)
 
     t0 = time.monotonic()
     config = Config.load(args.config)
-    findings = lint_paths(args.paths, config)
+    stats = RunStats()
+    findings = lint_paths(args.paths, config, stats=stats,
+                          report_only=report_only)
     elapsed = time.monotonic() - t0
 
-    _report.emit([f.as_dict() for f in findings], fmt=args.format)
+    dicts = [f.as_dict() for f in findings]
+    _report.emit(dicts, fmt=args.format, tool_name="graphlint")
+    if args.sarif_out:
+        rule_docs = {name: (fn.__doc__ or name).strip().split("\n")[0]
+                     for name, fn in all_rules().items()}
+        _report.write_sarif(dicts, args.sarif_out, tool_name="graphlint",
+                            rule_docs=rule_docs)
     n_err = sum(1 for f in findings if f.severity == "error")
     n_warn = len(findings) - n_err
+    if args.stats:
+        print(stats.table())
     if args.format == "human":
         print(f"graphlint: {n_err} error(s), {n_warn} warning(s) "
               f"in {elapsed:.2f}s")

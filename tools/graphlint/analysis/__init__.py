@@ -1,0 +1,25 @@
+"""Phase-1 analysis layer: the project-wide index the dataflow rules run on.
+
+graphlint v2 splits a lint run into two phases.  Phase 1 parses every
+file ONCE and builds this package's structures over the shared ASTs:
+
+* :mod:`symbols`   — per-module symbol tables (imports, functions with
+  qualified names and enclosing scopes) rolled up into a
+  :class:`~tools.graphlint.analysis.symbols.ProjectIndex`;
+* :mod:`callgraph` — callable resolution across modules (through
+  ``functools.partial``, local bindings, and ``make_*`` factories) plus
+  the set of functions that provably flow into ``jax.jit`` /
+  ``shard_map`` / ``pallas_call``;
+* :mod:`cfg`       — a statement-level control-flow graph per function
+  (or module top level), the substrate for all-paths queries;
+* :mod:`defuse`    — reaching definitions over a CFG, the substrate for
+  "what was this name when the call happened" queries.
+
+Phase 2 runs the per-file syntactic rules and the project-wide dataflow
+rules (``handle-lifecycle``, ``closure-capture``, ``carry-structure``)
+against the index — see ``tools/graphlint/core.py``.
+"""
+from .callgraph import CallGraph  # noqa: F401
+from .cfg import CFG, build_cfg  # noqa: F401
+from .defuse import ReachingDefs, assigned_names  # noqa: F401
+from .symbols import FunctionInfo, ModuleInfo, ProjectIndex  # noqa: F401

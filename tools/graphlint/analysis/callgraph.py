@@ -1,0 +1,264 @@
+"""Callable resolution + traced-function discovery over the index.
+
+The cross-file question the dataflow rules ask constantly is "which
+project function does this expression denote" — through a bare name, an
+import, a local binding (``step = jax.jit(make_pipelined_step(...))``),
+``functools.partial``, or a factory call whose *return value* is the
+callable (the repo's ``make_*_fn`` idiom).  :meth:`CallGraph.resolve`
+answers it syntactically and conservatively: it returns every candidate
+it can prove, or an empty list when it cannot — rules skip what they
+cannot resolve rather than guess.
+
+On top of resolution the graph computes the **traced set**: every
+function that flows into ``jax.jit`` / ``shard_map`` / ``pallas_call``
+(directly, by name, decorated, via partial, or via a factory return),
+closed transitively over calls — a helper called from a jitted function
+executes under tracing too, so its closure captures are just as baked.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..astutil import call_tail
+from .symbols import FunctionInfo, ModuleInfo, ProjectIndex
+
+#: call targets whose first argument's function is traced
+TRACE_SINKS = {"jit": "jit", "shard_map": "shard_map",
+               "pallas_call": "pallas_call"}
+
+
+def _shallow_nodes(body):
+    """Every AST node in *body* without entering nested def/class scopes
+    (lambdas stay in — they share the enclosing scope's names)."""
+    stack = list(body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            stack.extend(node.decorator_list)
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _is_jit_decorator(dec: ast.expr) -> Optional[str]:
+    """The sink kind a decorator implies, else None."""
+    tail = call_tail(dec)
+    if tail in TRACE_SINKS:
+        return TRACE_SINKS[tail]
+    if isinstance(dec, ast.Call):
+        inner = call_tail(dec.func)
+        if inner in TRACE_SINKS:
+            return TRACE_SINKS[inner]
+        if inner == "partial" and dec.args:
+            return _is_jit_decorator(dec.args[0])
+    return None
+
+
+class CallGraph:
+    """Project call graph facets: resolution, traced set, call edges."""
+
+    def __init__(self, index: ProjectIndex):
+        self.index = index
+        #: FunctionInfo -> how it is traced ("jit"/"shard_map"/"pallas_call")
+        self.traced: Dict[FunctionInfo, str] = {}
+        #: FunctionInfo -> project functions it calls (resolved)
+        self.calls: Dict[FunctionInfo, Set[FunctionInfo]] = {}
+        self._local_bindings: Dict[Tuple[str, str], Dict[str, ast.expr]] = {}
+        self._build()
+
+    # -- resolution ---------------------------------------------------------
+
+    def _bindings(self, module: ModuleInfo,
+                  fi: Optional[FunctionInfo]) -> Dict[str, ast.expr]:
+        """name -> last syntactic ``name = expr`` in a scope body (the
+        module top level when *fi* is None).  Nested defs are skipped —
+        they are separate scopes."""
+        key = (module.path, fi.qualname if fi else "<module>")
+        if key in self._local_bindings:
+            return self._local_bindings[key]
+        out: Dict[str, ast.expr] = {}
+        body = fi.node.body if fi else module.tree.body
+        stack = list(body)
+        while stack:
+            stmt = stack.pop(0)
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)):
+                out[stmt.targets[0].id] = stmt.value
+            for field in ("body", "orelse", "finalbody"):
+                stack.extend(getattr(stmt, field, []) or [])
+            for handler in getattr(stmt, "handlers", []) or []:
+                stack.extend(handler.body)
+        self._local_bindings[key] = out
+        return out
+
+    def _receiver_class(self, recv_name: str, module: ModuleInfo,
+                        fi: Optional[FunctionInfo]) -> Optional[str]:
+        """The top-level class *recv_name* is an instance of, when its
+        binding in the scope chain is syntactically ``ClassName(...)``."""
+        scope = fi
+        bound = None
+        while scope is not None:
+            bound = self._bindings(module, scope).get(recv_name)
+            if bound is not None:
+                break
+            scope = scope.parent
+        if bound is None:
+            bound = self._bindings(module, None).get(recv_name)
+        if isinstance(bound, ast.Call):
+            tail = call_tail(bound.func)
+            if tail in module.classes:
+                return tail
+        return None
+
+    def _nested_defs(self, fi: FunctionInfo, name: str) -> List[FunctionInfo]:
+        module = self.index.modules[fi.path]
+        return [c for c in module.children.get(fi.qualname, [])
+                if c.name == name]
+
+    def resolve(self, expr: ast.expr, module: ModuleInfo,
+                fi: Optional[FunctionInfo],
+                _seen: Optional[Set[int]] = None) -> List[FunctionInfo]:
+        """All project functions *expr* can denote in the given scope.
+
+        Handles names (scope chain -> local binding -> top-level def ->
+        import), dotted attributes, ``functools.partial(f, ...)``,
+        ``jax.jit(f)`` (transparent — jit returns a wrapper around f),
+        and factory calls (``make_x(...)``: resolves to the functions
+        ``make_x`` returns).  Unresolvable expressions yield ``[]``.
+        """
+        seen = _seen if _seen is not None else set()
+        if id(expr) in seen:
+            return []
+        seen.add(id(expr))
+
+        if isinstance(expr, ast.Name):
+            scope = fi
+            while scope is not None:
+                nested = self._nested_defs(scope, expr.id)
+                if nested:
+                    return nested
+                bound = self._bindings(module, scope).get(expr.id)
+                if bound is not None:
+                    return self.resolve(bound, module, scope, seen)
+                scope = scope.parent
+            if expr.id in module.toplevel:
+                return [module.toplevel[expr.id]]
+            bound = self._bindings(module, None).get(expr.id)
+            if bound is not None:
+                return self.resolve(bound, module, None, seen)
+            target = self.index.resolve_function(module, expr.id)
+            return [target] if target is not None else []
+        if isinstance(expr, ast.Attribute):
+            if isinstance(expr.value, ast.Name):
+                # alias.fn where alias imports an indexed module
+                dotted = module.imports.get(expr.value.id)
+                if dotted:
+                    target_mod = self.index.resolve_module(dotted)
+                    if target_mod and expr.attr in target_mod.toplevel:
+                        return [target_mod.toplevel[expr.attr]]
+                # obj.method where obj binds to ClassName(...) in scope
+                cls = self._receiver_class(expr.value.id, module, fi)
+                if cls is not None:
+                    method = module.functions.get(f"{cls}.{expr.attr}")
+                    if method is not None:
+                        return [method]
+            return []
+        if isinstance(expr, ast.Call):
+            tail = call_tail(expr.func)
+            if tail == "partial" and expr.args:
+                return self.resolve(expr.args[0], module, fi, seen)
+            if tail in TRACE_SINKS and expr.args:
+                return self.resolve(expr.args[0], module, fi, seen)
+            factories = self.resolve(expr.func, module, fi, seen)
+            out: List[FunctionInfo] = []
+            for factory in factories:
+                out.extend(self.returned_functions(factory, seen))
+            return out
+        return []
+
+    def returned_functions(self, fi: FunctionInfo,
+                           _seen: Optional[Set[int]] = None
+                           ) -> List[FunctionInfo]:
+        """Project functions *fi* can return (the factory idiom).
+
+        Scans *fi*'s own return statements (not nested scopes'); tuple
+        returns contribute each element, so
+        ``return jax.jit(gen_fn), device_args`` resolves ``gen_fn``."""
+        module = self.index.modules[fi.path]
+        out: List[FunctionInfo] = []
+        for stmt in fi.node.body:
+            for ret in self._shallow_returns(stmt):
+                if ret.value is None:
+                    continue
+                values = (ret.value.elts
+                          if isinstance(ret.value, ast.Tuple)
+                          else [ret.value])
+                for value in values:
+                    out.extend(self.resolve(value, module, fi, _seen))
+        return out
+
+    @staticmethod
+    def _shallow_returns(stmt: ast.stmt):
+        """Return statements in *stmt* without entering nested scopes."""
+        stack = [stmt]
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda, ast.ClassDef)):
+                continue
+            if isinstance(node, ast.Return):
+                yield node
+            stack.extend(ast.iter_child_nodes(node))
+
+    # -- traced set ---------------------------------------------------------
+
+    def _mark(self, fis: List[FunctionInfo], how: str) -> None:
+        for fi in fis:
+            self.traced.setdefault(fi, how)
+
+    def _build(self) -> None:
+        # 1. decorator-traced functions
+        for fi in self.index.iter_functions():
+            for dec in fi.node.decorator_list:
+                how = _is_jit_decorator(dec)
+                if how is not None:
+                    self.traced.setdefault(fi, how)
+        # 2. sink call sites, resolved in their enclosing scope (shallow:
+        #    nested defs are their own scopes and get their own pass)
+        for module, fi, body in self.index.iter_scopes():
+            for node in _shallow_nodes(body):
+                if not isinstance(node, ast.Call):
+                    continue
+                tail = call_tail(node.func)
+                if tail in TRACE_SINKS and node.args:
+                    self._mark(self.resolve(node.args[0], module, fi),
+                               TRACE_SINKS[tail])
+        # 3. call edges between project functions (used for transitive
+        #    tracing: helpers called from traced functions trace too)
+        for module, fi, body in self.index.iter_scopes():
+            if fi is None:
+                continue
+            callees: Set[FunctionInfo] = set()
+            for node in _shallow_nodes(body):
+                if isinstance(node, ast.Call):
+                    tail = call_tail(node.func)
+                    if tail in TRACE_SINKS:
+                        continue          # sink edges handled above
+                    for target in self.resolve(node.func, module, fi):
+                        if target != fi:
+                            callees.add(target)
+            self.calls[fi] = callees
+        # 4. transitive closure over call edges
+        work = list(self.traced)
+        while work:
+            fi = work.pop()
+            how = self.traced[fi]
+            for callee in self.calls.get(fi, ()):
+                if callee not in self.traced:
+                    self.traced[callee] = how
+                    work.append(callee)

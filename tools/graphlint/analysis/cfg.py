@@ -1,0 +1,189 @@
+"""Statement-level control-flow graphs for graphlint's dataflow rules.
+
+One node per *statement* (plus synthetic ``ENTRY``/``EXIT``), which is
+the right granularity for the lint queries: "does every path from this
+``store.issue()`` reach a ``rows()`` call", "which assignments reach
+this call site".  Compound statements contribute ONE node holding only
+their header expressions (an ``If``'s test, a ``For``'s iterator, a
+``With``'s context items); their bodies become separate nodes wired
+with the real branch/loop edges, so a rule scanning a node never sees
+a nested body twice.
+
+Exception edges are deliberately approximate: every statement inside a
+``try`` body may jump to each handler, and a ``raise`` terminates its
+path without reaching ``EXIT`` (propagating an exception is not the
+leak class the lifecycle rule chases, and modelling it as a leak would
+flag every error path that lacks a ``finally``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+ENTRY = 0
+EXIT = 1
+
+#: statements that open a new scope — their bodies are separate CFGs
+SCOPE_STMTS = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+
+
+class CFG:
+    """A per-scope control-flow graph over statement nodes.
+
+    ``stmts`` maps node id -> the owning :class:`ast.stmt`; the
+    synthetic ``ENTRY``/``EXIT`` ids have no statement.  ``succ`` holds
+    forward edges.  ``header_exprs`` maps a node to the expression
+    subtrees evaluated *at* that node (for compound statements, only
+    the header — never the nested body).
+    """
+
+    def __init__(self):
+        self.succ: Dict[int, Set[int]] = {ENTRY: set(), EXIT: set()}
+        self.stmts: Dict[int, ast.stmt] = {}
+        self.header_exprs: Dict[int, List[ast.AST]] = {}
+
+    def nodes(self) -> Iterable[int]:
+        """All node ids, synthetic ones included."""
+        return self.succ.keys()
+
+    def preds(self) -> Dict[int, Set[int]]:
+        """Reverse edge map (computed on demand)."""
+        rev: Dict[int, Set[int]] = {n: set() for n in self.succ}
+        for src, dsts in self.succ.items():
+            for d in dsts:
+                rev[d].add(src)
+        return rev
+
+    def reachable(self, start: int = ENTRY) -> Set[int]:
+        """Node ids reachable from *start* (including it)."""
+        seen = {start}
+        stack = [start]
+        while stack:
+            for nxt in self.succ.get(stack.pop(), ()):
+                if nxt not in seen:
+                    seen.add(nxt)
+                    stack.append(nxt)
+        return seen
+
+
+def _header_exprs(stmt: ast.stmt) -> List[ast.AST]:
+    """The expressions a statement evaluates at its own CFG node."""
+    if isinstance(stmt, (ast.If, ast.While)):
+        return [stmt.test]
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return [stmt.iter]
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        return [item.context_expr for item in stmt.items]
+    if isinstance(stmt, ast.Try):
+        return []
+    if isinstance(stmt, SCOPE_STMTS):
+        # decorators/defaults evaluate here; the body is its own scope
+        out: List[ast.AST] = list(stmt.decorator_list)
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out += [d for d in stmt.args.defaults]
+            out += [d for d in stmt.args.kw_defaults if d is not None]
+        return out
+    return [stmt]
+
+
+class _Builder:
+    """Recursive-descent CFG construction over a statement list."""
+
+    def __init__(self):
+        self.cfg = CFG()
+        self._next = EXIT + 1
+        # (loop_header_id, break_frontier) innermost-last
+        self._loops: List[Tuple[int, Set[int]]] = []
+
+    def _node(self, stmt: ast.stmt) -> int:
+        nid = self._next
+        self._next += 1
+        self.cfg.succ[nid] = set()
+        self.cfg.stmts[nid] = stmt
+        self.cfg.header_exprs[nid] = _header_exprs(stmt)
+        return nid
+
+    def _link(self, frontier: Set[int], nid: int) -> None:
+        for src in frontier:
+            self.cfg.succ[src].add(nid)
+
+    def seq(self, stmts: List[ast.stmt], frontier: Set[int]) -> Set[int]:
+        """Wire *stmts* sequentially; returns the fall-through frontier."""
+        for stmt in stmts:
+            if not frontier:
+                break                    # unreachable tail (after return)
+            frontier = self.one(stmt, frontier)
+        return frontier
+
+    def one(self, stmt: ast.stmt, frontier: Set[int]) -> Set[int]:
+        nid = self._node(stmt)
+        self._link(frontier, nid)
+
+        if isinstance(stmt, (ast.Return, ast.Raise)):
+            # Raise still terminates the path; only Return reaches EXIT
+            # (exception propagation is modelled as "path vanishes")
+            if isinstance(stmt, ast.Return):
+                self.cfg.succ[nid].add(EXIT)
+            return set()
+        if isinstance(stmt, ast.Break):
+            if self._loops:
+                self._loops[-1][1].add(nid)
+            return set()
+        if isinstance(stmt, ast.Continue):
+            if self._loops:
+                self.cfg.succ[nid].add(self._loops[-1][0])
+            return set()
+        if isinstance(stmt, ast.If):
+            body_f = self.seq(stmt.body, {nid})
+            else_f = self.seq(stmt.orelse, {nid}) if stmt.orelse else {nid}
+            return body_f | else_f
+        if isinstance(stmt, (ast.While, ast.For, ast.AsyncFor)):
+            self._loops.append((nid, set()))
+            body_f = self.seq(stmt.body, {nid})
+            self._link(body_f, nid)       # back edge
+            _, breaks = self._loops.pop()
+            infinite = (isinstance(stmt, ast.While)
+                        and isinstance(stmt.test, ast.Constant)
+                        and bool(stmt.test.value))
+            out: Set[int] = set() if infinite else {nid}
+            if stmt.orelse:
+                out = self.seq(stmt.orelse, out)
+            return out | breaks
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            return self.seq(stmt.body, {nid})
+        if isinstance(stmt, ast.Try):
+            before = self._next
+            body_f = self.seq(stmt.body, {nid})
+            body_nodes = set(range(before, self._next))
+            out: Set[int] = set()
+            for handler in stmt.handlers:
+                # any statement in the body (or none) may raise into it
+                out |= self.seq(handler.body, body_nodes | {nid})
+            if stmt.orelse:
+                body_f = self.seq(stmt.orelse, body_f)
+            out |= body_f
+            if stmt.finalbody:
+                out = self.seq(stmt.finalbody, out)
+            return out
+        if isinstance(stmt, ast.Match):
+            out = set()
+            for case in stmt.cases:
+                out |= self.seq(case.body, {nid})
+            return out | {nid}           # no case may match
+        # simple statements (incl. nested def/class headers) fall through
+        return {nid}
+
+
+def build_cfg(body: List[ast.stmt]) -> CFG:
+    """Build the CFG of one scope from its statement list.
+
+    Pass a function's ``node.body`` for function scopes, or a module's
+    top-level statements for script scopes (``examples/`` launchers
+    create handles at module level too)."""
+    b = _Builder()
+    frontier = b.seq(body, {ENTRY})
+    for src in frontier:
+        b.cfg.succ[src].add(EXIT)
+    if not b.cfg.stmts:                   # empty body: entry falls out
+        b.cfg.succ[ENTRY].add(EXIT)
+    return b.cfg

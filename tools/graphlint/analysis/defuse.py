@@ -1,0 +1,119 @@
+"""Reaching definitions over a :mod:`cfg` graph (def-use substrate).
+
+A *definition* is "statement node N binds name X" — assignment targets,
+``for`` targets, ``with ... as`` names, walrus expressions in the
+statement's header, imports, and nested ``def``/``class`` statements.
+Function parameters are modelled as definitions at ``ENTRY``, so a use
+whose reaching defs include ``ENTRY`` is visibly "maybe the parameter"
+rather than silently unbound.
+
+The fixpoint is the textbook forward may-analysis: a definition of X
+kills every other definition of X, and ``IN(n)`` is the union of the
+predecessors' ``OUT``.  graphlint uses it to answer "which pack sites
+can this carry variable come from at this call" (``carry-structure``)
+and to keep the CFG property-tested from two independent directions.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, FrozenSet, List, Set, Tuple
+
+from .cfg import CFG, ENTRY
+
+#: one definition: (name, defining node id)
+Def = Tuple[str, int]
+
+
+def _target_names(target: ast.AST, out: Set[str]) -> None:
+    if isinstance(target, ast.Name):
+        out.add(target.id)
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            _target_names(elt, out)
+    elif isinstance(target, ast.Starred):
+        _target_names(target.value, out)
+    # Attribute/Subscript stores mutate an object, they bind no name
+
+
+def assigned_names(stmt: ast.stmt,
+                   header_exprs: List[ast.AST]) -> Set[str]:
+    """Names *stmt* binds at its own CFG node.
+
+    ``header_exprs`` is the node's header list from the CFG (walrus
+    expressions inside it count; nested bodies never reach here)."""
+    names: Set[str] = set()
+    if isinstance(stmt, ast.Assign):
+        for tgt in stmt.targets:
+            _target_names(tgt, names)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is None:
+            pass                          # bare annotation binds nothing
+        else:
+            _target_names(stmt.target, names)
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        _target_names(stmt.target, names)
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        for item in stmt.items:
+            if item.optional_vars is not None:
+                _target_names(item.optional_vars, names)
+    elif isinstance(stmt, (ast.Import, ast.ImportFrom)):
+        for alias in stmt.names:
+            names.add((alias.asname or alias.name).split(".")[0])
+    elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+        names.add(stmt.name)
+    elif isinstance(stmt, ast.ExceptHandler):  # pragma: no cover
+        if stmt.name:
+            names.add(stmt.name)
+    for expr in header_exprs:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.NamedExpr):
+                _target_names(node.target, names)
+    return names
+
+
+class ReachingDefs:
+    """Reaching-definition sets per CFG node, computed to fixpoint."""
+
+    def __init__(self, cfg: CFG, params: Set[str] = frozenset()):
+        self.cfg = cfg
+        self._gen: Dict[int, Set[str]] = {}
+        for nid, stmt in cfg.stmts.items():
+            self._gen[nid] = assigned_names(stmt, cfg.header_exprs[nid])
+        self._in: Dict[int, Set[Def]] = {n: set() for n in cfg.nodes()}
+        self._out: Dict[int, Set[Def]] = {n: set() for n in cfg.nodes()}
+        self._out[ENTRY] = {(p, ENTRY) for p in params}
+        self._solve()
+
+    def _transfer(self, nid: int, reaching: Set[Def]) -> Set[Def]:
+        gen = self._gen.get(nid)
+        if not gen:
+            return reaching
+        return ({(name, site) for name, site in reaching
+                 if name not in gen}
+                | {(name, nid) for name in gen})
+
+    def _solve(self) -> None:
+        preds = self.cfg.preds()
+        work = list(self.cfg.nodes())
+        while work:
+            nid = work.pop()
+            if nid == ENTRY:
+                continue
+            new_in: Set[Def] = set()
+            for p in preds[nid]:
+                new_in |= self._out[p]
+            new_out = self._transfer(nid, new_in)
+            if new_in != self._in[nid] or new_out != self._out[nid]:
+                self._in[nid] = new_in
+                self._out[nid] = new_out
+                work.extend(self.cfg.succ.get(nid, ()))
+
+    def reaching(self, nid: int, name: str) -> FrozenSet[int]:
+        """Node ids of the definitions of *name* that reach *nid*'s
+        entry (``ENTRY`` means "the parameter / nothing local")."""
+        return frozenset(site for n, site in self._in[nid] if n == name)
+
+    def defs_in(self, nid: int) -> FrozenSet[Def]:
+        """The full reaching-definition set at *nid*'s entry."""
+        return frozenset(self._in[nid])

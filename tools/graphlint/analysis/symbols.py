@@ -1,0 +1,260 @@
+"""Module symbol tables and the project-wide index (phase 1).
+
+The index is built ONCE per lint run from the already-parsed ASTs
+(``core.FileEntry`` — one ``ast.parse`` per file, shared by every
+rule).  It answers the cross-file questions the dataflow rules ask:
+
+* which module does this repo-relative path implement
+  (``src/repro/core/pipeline.py`` -> ``repro.core.pipeline``);
+* which function does ``from ..core.pipeline import pipelined_loop``
+  resolve to;
+* what is the enclosing scope chain of a nested ``def`` (closure
+  analysis walks it outward);
+* the (cached) CFG and reaching-defs of any function or module scope.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from .cfg import CFG, build_cfg
+from .defuse import ReachingDefs
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    """One function definition, qualified by file and lexical scope."""
+
+    path: str                      #: repo-relative path of the file
+    module: str                    #: dotted module name ("" for scripts)
+    qualname: str                  #: e.g. ``make_pipelined_step.<locals>.step``
+    name: str                      #: bare name
+    node: ast.AST                  #: the FunctionDef/AsyncFunctionDef
+    parent: Optional["FunctionInfo"]   #: enclosing function, if nested
+    cls: Optional[str]             #: enclosing class name, if a method
+    lineno: int
+
+    def __hash__(self):            # identity keyed by definition site
+        return hash((self.path, self.qualname, self.lineno))
+
+    def __eq__(self, other):
+        return (isinstance(other, FunctionInfo)
+                and (self.path, self.qualname, self.lineno)
+                == (other.path, other.qualname, other.lineno))
+
+    def scope_chain(self) -> List["FunctionInfo"]:
+        """This function, then each enclosing function outward."""
+        chain, fi = [], self
+        while fi is not None:
+            chain.append(fi)
+            fi = fi.parent
+        return chain
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    """Per-file symbol table over the shared AST."""
+
+    path: str
+    name: str                      #: dotted module name ("" if not importable)
+    tree: ast.Module
+    imports: Dict[str, str]        #: local alias -> dotted origin
+    functions: Dict[str, FunctionInfo]       #: qualname -> info (all scopes)
+    toplevel: Dict[str, FunctionInfo]        #: bare name -> top-level defs
+    classes: Dict[str, ast.ClassDef]         #: top-level class defs
+    children: Dict[Optional[str], List[FunctionInfo]]  #: parent qualname -> nested defs
+
+
+def module_name_for(rel_path: str) -> str:
+    """Dotted module name for a repo-relative path (import-compatible:
+    ``src/`` is the package root; scripts keep their directory prefix
+    so ``tools/check_docs.py`` -> ``tools.check_docs``)."""
+    p = rel_path.replace("\\", "/")
+    if p.startswith("src/"):
+        p = p[len("src/"):]
+    if not p.endswith(".py"):
+        return ""
+    p = p[:-3]
+    if p.endswith("/__init__"):
+        p = p[: -len("/__init__")]
+    return p.replace("/", ".")
+
+
+class _FunctionCollector(ast.NodeVisitor):
+    def __init__(self, path: str, module: str):
+        self.path = path
+        self.module = module
+        self.functions: Dict[str, FunctionInfo] = {}
+        self.children: Dict[Optional[str], List[FunctionInfo]] = {}
+        self._fn_stack: List[FunctionInfo] = []
+        self._cls_stack: List[str] = []
+        self._qual: List[str] = []
+
+    def _add(self, node) -> FunctionInfo:
+        qual = ".".join((*self._qual, node.name))
+        fi = FunctionInfo(
+            path=self.path, module=self.module, qualname=qual,
+            name=node.name, node=node,
+            parent=self._fn_stack[-1] if self._fn_stack else None,
+            cls=self._cls_stack[-1] if self._cls_stack else None,
+            lineno=node.lineno)
+        self.functions[qual] = fi
+        parent_key = fi.parent.qualname if fi.parent else None
+        self.children.setdefault(parent_key, []).append(fi)
+        return fi
+
+    def visit_FunctionDef(self, node):
+        fi = self._add(node)
+        self._fn_stack.append(fi)
+        self._qual += [node.name, "<locals>"]
+        self.generic_visit(node)
+        self._qual = self._qual[:-2]
+        self._fn_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_ClassDef(self, node):
+        self._cls_stack.append(node.name)
+        self._qual.append(node.name)
+        self.generic_visit(node)
+        self._qual.pop()
+        self._cls_stack.pop()
+
+    def visit_Lambda(self, node):
+        pass                               # not tracked as named scopes
+
+
+def build_module_info(path: str, tree: ast.Module) -> ModuleInfo:
+    """Symbol-table one parsed file."""
+    imports: Dict[str, str] = {}
+    module = module_name_for(path)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                imports[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom):
+            if node.module is None:
+                continue
+            base = node.module
+            if node.level:                 # relative: resolve against module
+                parts = module.split(".")
+                anchor = parts[: len(parts) - node.level]
+                base = ".".join((*anchor, node.module))
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                imports[a.asname or a.name] = f"{base}.{a.name}"
+    coll = _FunctionCollector(path, module)
+    coll.visit(tree)
+    toplevel = {fi.name: fi for fi in coll.children.get(None, [])
+                if fi.cls is None}
+    classes = {n.name: n for n in tree.body if isinstance(n, ast.ClassDef)}
+    return ModuleInfo(path=path, name=module, tree=tree, imports=imports,
+                      functions=coll.functions, toplevel=toplevel,
+                      classes=classes, children=coll.children)
+
+
+class ProjectIndex:
+    """The shared phase-1 artifact: one entry per parsed file, plus the
+    lazily-built call graph and per-function CFG/def-use caches.
+
+    ``entries`` maps repo-relative path -> ``core.FileEntry`` (the
+    single-parse cache); files that failed to parse are skipped here
+    (they already carry a ``parse-error`` finding).
+    """
+
+    #: sentinel qualname for a module's top-level statement scope
+    MODULE_SCOPE = "<module>"
+
+    def __init__(self, entries: Dict[str, "object"]):
+        self.entries = entries
+        self.modules: Dict[str, ModuleInfo] = {}          # by path
+        self.modules_by_name: Dict[str, ModuleInfo] = {}
+        for path, entry in entries.items():
+            if entry.tree is None:
+                continue
+            info = build_module_info(path, entry.tree)
+            self.modules[path] = info
+            if info.name:
+                self.modules_by_name[info.name] = info
+        self._cfgs: Dict[Tuple[str, str], CFG] = {}
+        self._reaching: Dict[Tuple[str, str], ReachingDefs] = {}
+        self._callgraph = None
+
+    # -- lazy facets --------------------------------------------------------
+
+    @property
+    def callgraph(self):
+        """The project call graph (built on first use)."""
+        if self._callgraph is None:
+            from .callgraph import CallGraph
+            self._callgraph = CallGraph(self)
+        return self._callgraph
+
+    def iter_functions(self):
+        """Every FunctionInfo in the project, grouped by module."""
+        for info in self.modules.values():
+            yield from info.functions.values()
+
+    def iter_scopes(self):
+        """(module, fi_or_None, body) for every function scope plus each
+        module's top-level statement scope (fi None)."""
+        for info in self.modules.values():
+            yield info, None, [s for s in info.tree.body]
+            for fi in info.functions.values():
+                yield info, fi, fi.node.body
+
+    def cfg_of(self, path: str, fi: Optional[FunctionInfo]) -> CFG:
+        """CFG of a function scope (or the module scope when *fi* is
+        None), cached per definition site."""
+        key = (path, fi.qualname if fi else self.MODULE_SCOPE)
+        if key not in self._cfgs:
+            body = fi.node.body if fi else self.modules[path].tree.body
+            self._cfgs[key] = build_cfg(body)
+        return self._cfgs[key]
+
+    def reaching_of(self, path: str,
+                    fi: Optional[FunctionInfo]) -> ReachingDefs:
+        """Reaching definitions for a scope, cached with its CFG."""
+        key = (path, fi.qualname if fi else self.MODULE_SCOPE)
+        if key not in self._reaching:
+            params = set()
+            if fi is not None:
+                a = fi.node.args
+                params = {p.arg for p in (*a.posonlyargs, *a.args,
+                                          *a.kwonlyargs)}
+                if a.vararg:
+                    params.add(a.vararg.arg)
+                if a.kwarg:
+                    params.add(a.kwarg.arg)
+            self._reaching[key] = ReachingDefs(self.cfg_of(path, fi),
+                                               params=params)
+        return self._reaching[key]
+
+    # -- name resolution ----------------------------------------------------
+
+    def resolve_module(self, dotted: str) -> Optional[ModuleInfo]:
+        """ModuleInfo for a dotted module name, if it is in this index."""
+        return self.modules_by_name.get(dotted)
+
+    def resolve_function(self, module: ModuleInfo,
+                         name: str) -> Optional[FunctionInfo]:
+        """Resolve a bare *name* used in *module* to a project function:
+        a top-level def, or an import chased into another indexed
+        module (one hop — re-exports via ``__init__`` resolve because
+        the ``from .x import y`` alias records the defining path)."""
+        if name in module.toplevel:
+            return module.toplevel[name]
+        dotted = module.imports.get(name)
+        seen = set()
+        while dotted and dotted not in seen:
+            seen.add(dotted)
+            mod_name, _, attr = dotted.rpartition(".")
+            target = self.modules_by_name.get(mod_name)
+            if target is None:
+                return None
+            if attr in target.toplevel:
+                return target.toplevel[attr]
+            dotted = target.imports.get(attr)
+        return None

@@ -1,10 +1,25 @@
 """graphlint framework: registry, config, suppressions, and the runner.
 
+Since v2 a lint run has two phases:
+
+* **phase 1 — index.**  Every file is read and parsed exactly once into
+  a :class:`FileEntry` (AST + suppression table); the entries roll up
+  into a :class:`~tools.graphlint.analysis.symbols.ProjectIndex`
+  (module symbol tables, call graph, per-function CFG/def-use caches —
+  see ``tools/graphlint/analysis/``).
+* **phase 2 — rules.**  Per-file syntactic rules (registered with
+  :func:`rule`) run against each entry's shared AST; project-wide
+  dataflow rules (registered with :func:`project_rule`) run once
+  against the index and may report findings in any file.
+
 The moving parts, in the order a lint run uses them:
 
-* :func:`rule` — decorator that registers a rule function.  A rule takes
+* :func:`rule` — decorator registering a per-file rule.  A rule takes
   ``(tree, ctx)`` — the parsed :class:`ast.Module` and a
   :class:`FileContext` — and yields ``(lineno, message)`` pairs.
+* :func:`project_rule` — decorator registering a project rule.  It
+  takes the :class:`ProjectIndex` and yields ``(path, lineno,
+  message)`` triples.
 * :class:`Config` — the ``[tool.graphlint]`` block of ``pyproject.toml``
   (enable/disable lists, per-rule severity, exclude globs, extra
   collective axis names).  Loads via :mod:`tomllib` on 3.11+, falling
@@ -14,18 +29,26 @@ The moving parts, in the order a lint run uses them:
   on the line above) the flagged line.  A suppression **must** carry a
   trailing justification (``-- why`` or ``# why``); a bare or malformed
   suppression is itself reported as ``bad-suppression`` and cannot be
-  suppressed.
+  suppressed.  Project-rule findings obey the same per-file table.
 * :func:`lint_source` / :func:`lint_paths` — run the enabled rules and
   return :class:`Finding` objects with config-resolved severities.
+  ``lint_paths`` accepts ``stats=`` (per-rule wall time, the
+  ``--stats`` surface) and ``report_only=`` (the ``--changed-only``
+  filter: the index still spans every file so cross-file analyses stay
+  sound, but only findings in the changed set are reported).
 """
 from __future__ import annotations
 
 import ast
 import dataclasses
 import fnmatch
+import io
 import os
 import re
-from typing import Callable, Dict, Iterable, List, Optional, Tuple
+import subprocess
+import time
+import tokenize
+from typing import Callable, Dict, Iterable, List, Optional, Set, Tuple
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))))
@@ -63,27 +86,85 @@ class FileContext:
     mesh_axes: frozenset      #: axis names rules treat as legitimate
 
 
-#: rule-id -> rule function; populated by the :func:`rule` decorator
+@dataclasses.dataclass
+class FileEntry:
+    """The single-parse cache record for one file (phase 1).
+
+    Every rule — and the project index — consumes this one parse;
+    ``tree`` is None when the file does not parse (the runner then
+    emits ``parse-error`` and the file is skipped by the index)."""
+
+    path: str
+    source: str
+    lines: List[str]
+    tree: Optional[ast.Module]
+    parse_error: Optional[SyntaxError]
+    suppressed: Dict[int, set]            #: lineno -> silenced rule ids
+    problems: List[Tuple[int, str]]       #: malformed suppressions
+
+
+def build_entry(path: str, source: str) -> FileEntry:
+    """Parse *source* once into a :class:`FileEntry`."""
+    lines = source.splitlines()
+    suppressed, problems = parse_suppressions(lines)
+    tree, err = None, None
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        err = exc
+    return FileEntry(path=path, source=source, lines=lines, tree=tree,
+                     parse_error=err, suppressed=suppressed,
+                     problems=problems)
+
+
+#: rule-id -> per-file rule function; populated by :func:`rule`
 RULES: Dict[str, Callable] = {}
+
+#: rule-id -> project-wide rule function; populated by :func:`project_rule`
+PROJECT_RULES: Dict[str, Callable] = {}
+
+
+def all_rules() -> Dict[str, Callable]:
+    """Both registries merged (rule ids are unique across them)."""
+    return {**RULES, **PROJECT_RULES}
+
+
+def _register(registry: Dict[str, Callable], name: str,
+              default_severity: str):
+    if default_severity not in SEVERITIES:
+        raise ValueError(f"bad severity {default_severity!r}")
+    if name in RULES or name in PROJECT_RULES:
+        raise ValueError(f"duplicate rule id {name!r}")
+
+    def deco(fn):
+        fn.rule_name = name
+        fn.default_severity = default_severity
+        registry[name] = fn
+        return fn
+
+    return deco
 
 
 def rule(name: str, default_severity: str = "error"):
-    """Register a rule function under *name* with a default severity.
+    """Register a per-file rule under *name* with a default severity.
 
     The decorated function must accept ``(tree, ctx)`` and yield
     ``(lineno, message)`` tuples; its docstring becomes the catalog
     entry shown by ``--list-rules``.
     """
-    if default_severity not in SEVERITIES:
-        raise ValueError(f"bad severity {default_severity!r}")
+    return _register(RULES, name, default_severity)
 
-    def deco(fn):
-        fn.rule_name = name
-        fn.default_severity = default_severity
-        RULES[name] = fn
-        return fn
 
-    return deco
+def project_rule(name: str, default_severity: str = "error"):
+    """Register a project-wide dataflow rule under *name*.
+
+    The decorated function must accept the
+    :class:`~tools.graphlint.analysis.symbols.ProjectIndex` and yield
+    ``(path, lineno, message)`` triples — it sees every file at once,
+    which is what lets it check relationships *between* functions
+    (handle lifecycles, closure captures, carry structures).
+    """
+    return _register(PROJECT_RULES, name, default_severity)
 
 
 # ---------------------------------------------------------------------------
@@ -181,7 +262,7 @@ class Config:
     def from_dict(cls, raw: dict) -> "Config":
         """Build a Config from a ``[tool.graphlint]`` mapping, validating
         rule ids and severity values so typos fail loudly."""
-        known = set(RULES)
+        known = set(RULES) | set(PROJECT_RULES)
         cfg = cls(
             enable=tuple(raw.get("enable", ())),
             disable=tuple(raw.get("disable", ())),
@@ -211,16 +292,24 @@ class Config:
         return cls.from_dict(raw.get("tool", {}).get("graphlint", {}))
 
     def enabled_rules(self) -> Dict[str, Callable]:
-        """The registry filtered by the enable/disable lists."""
+        """The per-file registry filtered by the enable/disable lists."""
         names = self.enable or tuple(RULES)
-        return {n: RULES[n] for n in names if n not in self.disable}
+        return {n: RULES[n] for n in names
+                if n in RULES and n not in self.disable}
+
+    def enabled_project_rules(self) -> Dict[str, Callable]:
+        """The project registry filtered by the enable/disable lists."""
+        names = self.enable or tuple(PROJECT_RULES)
+        return {n: PROJECT_RULES[n] for n in names
+                if n in PROJECT_RULES and n not in self.disable}
 
     def severity_of(self, rule_name: str) -> str:
         """Config override, else the rule's registered default."""
         if rule_name in self.severity:
             return self.severity[rule_name]
-        if rule_name in RULES:
-            return RULES[rule_name].default_severity
+        fn = all_rules().get(rule_name)
+        if fn is not None:
+            return fn.default_severity
         return "error"
 
     def is_excluded(self, rel_path: str) -> bool:
@@ -263,6 +352,29 @@ _SUPPRESS_RE = re.compile(
 _JUSTIFY_RE = re.compile(r"^\s*(?:--|#)\s*(?P<why>\S.*)$")
 
 
+def _comment_tokens(lines: List[str]):
+    """Yield ``(lineno, col, text)`` for every real COMMENT token.
+
+    Tokenizing (rather than regex-scanning raw lines) is what keeps a
+    ``# graphlint:`` mention inside a string literal — a docstring, an
+    error message, a lint-test fixture — from being parsed as a live
+    suppression.  Sources that do not tokenize fall back to a naive
+    first-``#`` scan so a broken file still gets its suppressions (and
+    its malformed-suppression findings) reported."""
+    src = "\n".join(lines) + ("\n" if lines else "")
+    try:
+        toks = list(tokenize.generate_tokens(io.StringIO(src).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        for idx, line in enumerate(lines, start=1):
+            pos = line.find("#")
+            if pos >= 0:
+                yield idx, pos, line[pos:]
+        return
+    for tok in toks:
+        if tok.type == tokenize.COMMENT:
+            yield tok.start[0], tok.start[1], tok.string
+
+
 def parse_suppressions(lines: List[str]):
     """Scan *lines* for suppression comments.
 
@@ -273,22 +385,23 @@ def parse_suppressions(lines: List[str]):
     justification or an unknown rule id.  Problems surface as
     ``bad-suppression`` findings, which are never suppressible.
     """
+    known = set(RULES) | set(PROJECT_RULES)
     suppressed: Dict[int, set] = {}
     problems: List[Tuple[int, str]] = []
-    for idx, line in enumerate(lines, start=1):
-        m = _SUPPRESS_RE.search(line)
+    for idx, col, comment in _comment_tokens(lines):
+        m = _SUPPRESS_RE.search(comment)
         if not m:
-            if re.search(r"#\s*graphlint:", line):
+            if re.search(r"#\s*graphlint:", comment):
                 problems.append(
                     (idx, "unparseable graphlint comment; expected "
                           "'# graphlint: disable=<rule>[,rule]  # justification'"))
             continue
         names = {n.strip() for n in m.group("rules").split(",")}
-        unknown = sorted(n for n in names if n not in RULES)
+        unknown = sorted(n for n in names if n not in known)
         if unknown:
             problems.append(
                 (idx, f"suppression names unknown rule(s) {unknown}; "
-                      f"known rules: {sorted(RULES)}"))
+                      f"known rules: {sorted(known)}"))
             continue
         just = _JUSTIFY_RE.match(m.group("rest"))
         if not just:
@@ -297,7 +410,7 @@ def parse_suppressions(lines: List[str]):
                       "'# graphlint: disable=<rule>  # why it is safe'"))
             continue
         target = idx
-        before = line[:m.start()].strip()
+        before = lines[idx - 1][:col].strip() if idx <= len(lines) else ""
         if not before:           # comment-only line silences the next line
             target = idx + 1
         suppressed.setdefault(target, set()).update(names)
@@ -308,39 +421,127 @@ def parse_suppressions(lines: List[str]):
 # runner
 # ---------------------------------------------------------------------------
 
-def lint_source(path: str, source: str, config: Optional[Config] = None,
-                mesh_axes: Optional[frozenset] = None) -> List[Finding]:
-    """Lint one file's *source*; *path* is used for reporting only."""
+class RunStats:
+    """Per-rule wall-time and finding counters (the ``--stats`` table)."""
+
+    def __init__(self):
+        self.seconds: Dict[str, float] = {}
+        self.findings: Dict[str, int] = {}
+        self.n_files = 0
+        self.parse_seconds = 0.0
+        self.index_seconds = 0.0
+
+    def add(self, rule_name: str, dt: float, n: int) -> None:
+        """Accumulate one timed rule invocation."""
+        self.seconds[rule_name] = self.seconds.get(rule_name, 0.0) + dt
+        self.findings[rule_name] = self.findings.get(rule_name, 0) + n
+
+    def table(self) -> str:
+        """Human-readable per-rule timing table, slowest first."""
+        rows = [f"{'rule':<32} {'seconds':>8} {'findings':>9}",
+                f"{'parse+suppressions':<32} {self.parse_seconds:>8.3f} "
+                f"{'-':>9}",
+                f"{'project index':<32} {self.index_seconds:>8.3f} {'-':>9}"]
+        for name in sorted(self.seconds, key=self.seconds.get,
+                           reverse=True):
+            rows.append(f"{name:<32} {self.seconds[name]:>8.3f} "
+                        f"{self.findings[name]:>9d}")
+        total = (sum(self.seconds.values()) + self.parse_seconds
+                 + self.index_seconds)
+        rows.append(f"{'TOTAL (' + str(self.n_files) + ' files)':<32} "
+                    f"{total:>8.3f} {sum(self.findings.values()):>9d}")
+        return "\n".join(rows)
+
+
+def lint_entries(entries: List[FileEntry], config: Optional[Config] = None,
+                 mesh_axes: Optional[frozenset] = None,
+                 stats: Optional[RunStats] = None,
+                 report_only: Optional[Set[str]] = None) -> List[Finding]:
+    """Run both rule phases over pre-parsed *entries*.
+
+    This is THE runner: ``lint_source`` and ``lint_paths`` are wrappers
+    that build the entry list.  ``report_only`` (a set of repo-relative
+    paths) filters which files may *report* findings; the project index
+    always spans every entry so cross-file dataflow stays sound.
+    """
+    from .analysis import ProjectIndex
+
     config = config if config is not None else Config()
     axes = mesh_axes if mesh_axes is not None else mesh_axis_names()
     axes = frozenset(axes) | frozenset(config.collective_axes)
-    lines = source.splitlines()
-    ctx = FileContext(path=path, source=source, lines=lines,
-                      config=config, mesh_axes=axes)
+    stats = stats if stats is not None else RunStats()
+    stats.n_files += len(entries)
+
     findings: List[Finding] = []
+    reportable = (lambda p: True) if report_only is None else (
+        lambda p: p in report_only)
 
-    suppressed, problems = parse_suppressions(lines)
-    for lineno, message in problems:
-        findings.append(Finding(path=path, line=lineno,
-                                rule="bad-suppression", severity="error",
-                                message=message))
-    try:
-        tree = ast.parse(source, filename=path)
-    except SyntaxError as exc:
-        findings.append(Finding(
-            path=path, line=exc.lineno or 1, rule="parse-error",
-            severity="error", message=f"file does not parse: {exc.msg}"))
-        return findings
+    file_rules = config.enabled_rules()
+    for entry in entries:
+        if not reportable(entry.path):
+            continue
+        for lineno, message in entry.problems:
+            findings.append(Finding(path=entry.path, line=lineno,
+                                    rule="bad-suppression",
+                                    severity="error", message=message))
+        if entry.tree is None:
+            exc = entry.parse_error
+            findings.append(Finding(
+                path=entry.path, line=(exc.lineno or 1) if exc else 1,
+                rule="parse-error", severity="error",
+                message=f"file does not parse: "
+                        f"{exc.msg if exc else 'unknown error'}"))
+            continue
+        ctx = FileContext(path=entry.path, source=entry.source,
+                          lines=entry.lines, config=config, mesh_axes=axes)
+        for name, fn in file_rules.items():
+            sev = config.severity_of(name)
+            t0 = time.perf_counter()
+            hits = [(lineno, message) for lineno, message
+                    in fn(entry.tree, ctx)
+                    if name not in entry.suppressed.get(lineno, ())]
+            stats.add(name, time.perf_counter() - t0, len(hits))
+            findings.extend(
+                Finding(path=entry.path, line=lineno, rule=name,
+                        severity=sev, message=message)
+                for lineno, message in hits)
 
-    for name, fn in config.enabled_rules().items():
-        sev = config.severity_of(name)
-        for lineno, message in fn(tree, ctx):
-            if name in suppressed.get(lineno, ()):
-                continue
-            findings.append(Finding(path=path, line=lineno, rule=name,
-                                    severity=sev, message=message))
+    project_rules = config.enabled_project_rules()
+    if project_rules:
+        t0 = time.perf_counter()
+        index = ProjectIndex({e.path: e for e in entries})
+        stats.index_seconds += time.perf_counter() - t0
+        by_path = {e.path: e for e in entries}
+        for name, fn in project_rules.items():
+            sev = config.severity_of(name)
+            t0 = time.perf_counter()
+            hits = []
+            for path, lineno, message in fn(index):
+                entry = by_path.get(path)
+                if entry is None or not reportable(path):
+                    continue
+                if name in entry.suppressed.get(lineno, ()):
+                    continue
+                hits.append((path, lineno, message))
+            stats.add(name, time.perf_counter() - t0, len(hits))
+            findings.extend(
+                Finding(path=path, line=lineno, rule=name, severity=sev,
+                        message=message)
+                for path, lineno, message in hits)
+
     findings.sort(key=lambda f: (f.path, f.line, f.rule))
     return findings
+
+
+def lint_source(path: str, source: str, config: Optional[Config] = None,
+                mesh_axes: Optional[frozenset] = None) -> List[Finding]:
+    """Lint one file's *source*; *path* is used for reporting only.
+
+    Project rules run against a single-file index, which is exactly
+    what the fixture tests want: an interprocedural hazard expressed in
+    one file still fires."""
+    return lint_entries([build_entry(path, source)], config,
+                        mesh_axes=mesh_axes)
 
 
 def iter_python_files(paths: Iterable[str], config: Config,
@@ -366,14 +567,56 @@ def iter_python_files(paths: Iterable[str], config: Config,
                     yield full, rel
 
 
+def changed_files(base: str = "origin/main",
+                  root: Optional[str] = None) -> Optional[Set[str]]:
+    """Repo-relative paths touched vs ``git merge-base HEAD <base>``.
+
+    The set covers committed, staged, unstaged, AND untracked changes —
+    everything a pre-commit run wants linted.  Returns None when the
+    base ref does not exist (fresh clone without the remote): callers
+    fall back to a full lint rather than silently linting nothing."""
+    root = root or REPO_ROOT
+
+    def _git(*args) -> Optional[str]:
+        try:
+            proc = subprocess.run(["git", *args], cwd=root,
+                                  capture_output=True, text=True,
+                                  timeout=30)
+        except (OSError, subprocess.TimeoutExpired):
+            return None
+        return proc.stdout if proc.returncode == 0 else None
+
+    merge_base = _git("merge-base", "HEAD", base)
+    if merge_base is None:
+        return None
+    changed: Set[str] = set()
+    diff = _git("diff", "--name-only", merge_base.strip())
+    if diff is None:
+        return None
+    changed.update(line for line in diff.splitlines() if line)
+    untracked = _git("ls-files", "--others", "--exclude-standard")
+    if untracked:
+        changed.update(line for line in untracked.splitlines() if line)
+    return changed
+
+
 def lint_paths(paths: Iterable[str], config: Optional[Config] = None,
-               root: Optional[str] = None) -> List[Finding]:
-    """Lint every Python file under *paths* (files or directories)."""
+               root: Optional[str] = None,
+               stats: Optional[RunStats] = None,
+               report_only: Optional[Set[str]] = None) -> List[Finding]:
+    """Lint every Python file under *paths* (files or directories).
+
+    Each file is read and parsed exactly once (phase 1); every rule —
+    per-file and project-wide — consumes the shared entry."""
     config = config if config is not None else Config.load()
     axes = mesh_axis_names() | frozenset(config.collective_axes)
-    findings: List[Finding] = []
+    stats = stats if stats is not None else RunStats()
+    t0 = time.perf_counter()
+    entries: List[FileEntry] = []
     for absolute, rel in iter_python_files(paths, config, root=root):
         with open(absolute, encoding="utf-8") as f:
             source = f.read()
-        findings.extend(lint_source(rel, source, config, mesh_axes=axes))
-    return findings
+        entries.append(build_entry(rel, source))
+    stats.parse_seconds += time.perf_counter() - t0
+    return lint_entries(entries, config, mesh_axes=axes, stats=stats,
+                        report_only=report_only)

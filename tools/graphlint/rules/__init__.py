@@ -1,12 +1,17 @@
 """Rule modules; importing this package registers every rule with
-:data:`tools.graphlint.core.RULES`.  One module per hazard class — see
+:data:`tools.graphlint.core.RULES` (per-file syntactic rules) or
+:data:`tools.graphlint.core.PROJECT_RULES` (project-wide dataflow
+rules over the phase-1 index).  One module per hazard class — see
 ``docs/LINTING.md`` for the catalog and the historical bug each rule
 encodes.
 """
 from . import (  # noqa: F401
     cacheconfig_required,
+    carry_structure,
+    closure_capture,
     collective_axis,
     discarded_update,
+    handle_lifecycle,
     host_transfer,
     pallas_blockspec,
     tracer_branch,

@@ -1,0 +1,341 @@
+"""carry-structure: pack and unpack sites of carry tuples must agree.
+
+The pipelined/offline loops thread a positional carry tuple
+(``(params, opt_state, batch[, cache])``) through jitted step functions,
+and checkpointing saves/restores the same tuple shape.  Nothing in
+Python checks that the packer and the unpacker agree: add a cache slot
+to the pack site and forget one unpack site, and the loop trains on a
+transposed carry (the PR 3 "dead CacheConfig" incident was exactly a
+pack/unpack drift that type-checked fine).
+
+The rule checks, interprocedurally through the call graph (including
+``functools.partial``, ``jax.jit(f)``, and ``make_*_fn`` factory
+returns):
+
+* a call passing a tuple (literal, or a variable whose reaching
+  definitions are all tuple literals of one arity) to a parameter the
+  callee tuple-unpacks with a different arity — or the same arity with
+  the same element names in a different order (a transposition);
+* ``a, b = f(...)`` where every return in every resolved callee is a
+  tuple literal of a different arity;
+* ``x[k]`` where every reaching definition of ``x`` is a tuple literal
+  with fewer than ``k + 1`` elements;
+* ``checkpoint.save(..., (…))`` vs ``restore(..., (…))`` arity drift
+  within one module.
+
+Anything ambiguous — multiple pack arities (the cached/uncached carry
+variants), unresolvable callees, reaching defs that include a parameter
+— is skipped, not guessed at.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..astutil import call_tail, dotted_name, keyword_arg
+from ..core import project_rule
+from ..analysis.cfg import ENTRY
+
+#: dotted receivers that syntactically mark a checkpoint call site
+_CKPT_RECEIVERS = frozenset({"checkpoint", "ckpt"})
+_CKPT_MODULE = "repro.train.checkpoint"
+
+
+def _tuple_literal(expr: ast.expr) -> Optional[Tuple[int, Optional[List[str]]]]:
+    """``(arity, element names or None)`` for a tuple literal."""
+    if not isinstance(expr, ast.Tuple):
+        return None
+    names = [e.id if isinstance(e, ast.Name) else None for e in expr.elts]
+    return len(expr.elts), (names if all(n is not None for n in names)
+                            else None)
+
+
+def _pack_of(arg: ast.expr, nid: int, cfg,
+             reaching) -> Optional[Tuple[int, Optional[List[str]], int]]:
+    """``(arity, names, pack lineno)`` when *arg* is provably one tuple
+    shape at this node: a literal, or a name whose reaching defs are all
+    single-target tuple-literal assignments of one arity."""
+    lit = _tuple_literal(arg)
+    if lit is not None:
+        return lit[0], lit[1], arg.lineno
+    if not isinstance(arg, ast.Name):
+        return None
+    sites = reaching.reaching(nid, arg.id)
+    if not sites or ENTRY in sites:
+        return None
+    packs = []
+    for site in sites:
+        stmt = cfg.stmts.get(site)
+        if not (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)):
+            return None
+        site_lit = _tuple_literal(stmt.value)
+        if site_lit is None:
+            return None
+        packs.append((site_lit[0], site_lit[1], stmt.lineno))
+    arities = {p[0] for p in packs}
+    if len(arities) != 1:
+        return None                        # cached/uncached variant packs
+    name_lists = {tuple(p[1]) for p in packs if p[1] is not None}
+    names = list(name_lists.pop()) if len(name_lists) == 1 else None
+    return packs[0][0], names, packs[0][2]
+
+
+def _positional_params(fi) -> Optional[List[str]]:
+    """Positional parameter names of a candidate, or None to skip it
+    (methods and ``*args`` make positions unreliable)."""
+    if fi.cls is not None:
+        return None
+    a = fi.node.args
+    if a.vararg is not None:
+        return None
+    return [p.arg for p in (*a.posonlyargs, *a.args)]
+
+
+def _unpack_of(fi, param: str) -> Optional[Tuple[int, Optional[List[str]]]]:
+    """The tuple-unpack shape a callee applies to *param*, if exactly
+    one ``a, b, ... = param`` exists in its body (own scope only)."""
+    shapes = []
+    stack = list(fi.node.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Lambda)):
+            continue
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Tuple)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == param):
+            tgt = node.targets[0]
+            names = [e.id if isinstance(e, ast.Name) else None
+                     for e in tgt.elts]
+            shapes.append((len(tgt.elts),
+                           names if all(n is not None for n in names)
+                           else None))
+        stack.extend(ast.iter_child_nodes(node))
+    if len({s[0] for s in shapes}) != 1:
+        return None
+    names = shapes[0][1] if len(shapes) == 1 else None
+    return shapes[0][0], names
+
+
+def _return_arities(fi) -> Optional[Set[int]]:
+    """Arity set when every return of *fi* is a tuple literal, else None."""
+    arities: Set[int] = set()
+    stack = list(fi.node.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Lambda)):
+            continue
+        if isinstance(node, ast.Return):
+            if not isinstance(node.value, ast.Tuple):
+                return None
+            arities.add(len(node.value.elts))
+        stack.extend(ast.iter_child_nodes(node))
+    return arities or None
+
+
+def _resolve_flow(func: ast.expr, nid: int, cfg, reaching, index,
+                  module, fi, cg) -> List:
+    """Resolve a call target like ``cg.resolve``, but flow-sensitively
+    for bare names: only the definitions REACHING this node count, so a
+    name rebound differently on two branches (``run = jit(a)`` /
+    ``run = jit(b)``) resolves per-path instead of to whichever binding
+    is syntactically last.  Unknown provenance resolves to ``[]``."""
+    if not isinstance(func, ast.Name):
+        return cg.resolve(func, module, fi)
+    sites = reaching.reaching(nid, func.id)
+    if not sites:
+        return cg.resolve(func, module, fi)   # global/import/enclosing
+    if ENTRY in sites:
+        return []                             # maybe a parameter
+    out = []
+    for site in sites:
+        stmt = cfg.stmts.get(site)
+        if (isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and stmt.name == func.id):
+            cand = [f for f in module.functions.values()
+                    if f.node is stmt]
+            if not cand:
+                return []
+            out.extend(cand)
+            continue
+        if not (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)):
+            return []
+        resolved = cg.resolve(stmt.value, module, fi)
+        if not resolved:
+            return []                         # one opaque path: give up
+        out.extend(resolved)
+    return out
+
+
+def _ckpt_call_kind(call: ast.Call, module, fi, cg) -> Optional[str]:
+    """"save"/"restore" when *call* targets the checkpoint module."""
+    tail = call_tail(call.func)
+    if tail not in ("save", "restore"):
+        return None
+    for cand in cg.resolve(call.func, module, fi):
+        if cand.module == _CKPT_MODULE and cand.name == tail:
+            return tail
+    if isinstance(call.func, ast.Attribute):
+        dotted = dotted_name(call.func.value)
+        if dotted and dotted.split(".")[-1] in _CKPT_RECEIVERS:
+            return tail
+    return None
+
+
+def _ckpt_tree_arg(call: ast.Call, kind: str) -> Optional[ast.expr]:
+    """The saved/restored tree argument (positional 2, or tree=/like=)."""
+    kw = keyword_arg(call, "tree" if kind == "save" else "like")
+    if kw is not None:
+        return kw
+    if len(call.args) > 2 and not any(isinstance(a, ast.Starred)
+                                      for a in call.args[:3]):
+        return call.args[2]
+    return None
+
+
+@project_rule("carry-structure")
+def carry_structure(index):
+    """carry tuple pack/unpack sites disagree on arity or element order
+    (step carries, factory returns, checkpoint save/restore trees)."""
+    cg = index.callgraph
+    ckpt: Dict[str, Dict[str, List[Tuple[int, Optional[List[str]], int]]]] = {}
+
+    for module, fi, body in index.iter_scopes():
+        cfg = index.cfg_of(module.path, fi)
+        reaching = index.reaching_of(module.path, fi)
+        for nid, stmt in cfg.stmts.items():
+            exprs = cfg.header_exprs.get(nid, [])
+
+            for expr in exprs:
+                for node in ast.walk(expr):
+                    if isinstance(node, ast.Call):
+                        yield from _check_call(node, nid, cfg, reaching,
+                                               index, module, fi, cg)
+                        kind = _ckpt_call_kind(node, module, fi, cg)
+                        if kind is not None:
+                            tree = _ckpt_tree_arg(node, kind)
+                            if tree is not None:
+                                pack = _pack_of(tree, nid, cfg, reaching)
+                                if pack is not None:
+                                    ckpt.setdefault(module.path, {}) \
+                                        .setdefault(kind, []).append(pack)
+                    elif isinstance(node, ast.Subscript):
+                        yield from _check_subscript(node, nid, cfg,
+                                                    reaching, module.path)
+
+            if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Tuple)
+                    and isinstance(stmt.value, ast.Call)):
+                yield from _check_return_unpack(stmt, nid, cfg, reaching,
+                                                index, module, fi, cg)
+
+    # checkpoint save/restore drift, paired per module
+    for path, kinds in sorted(ckpt.items()):
+        saves, restores = kinds.get("save", []), kinds.get("restore", [])
+        save_arities = {p[0] for p in saves}
+        restore_arities = {p[0] for p in restores}
+        if len(save_arities) != 1 or not restores:
+            continue                      # no pair, or ambiguous saves
+        (s_arity,) = save_arities
+        for r_arity, r_names, r_line in restores:
+            if r_arity != s_arity:
+                yield (path, r_line,
+                       f"checkpoint restore expects a {r_arity}-tuple but "
+                       f"save at line {saves[0][2]} writes a "
+                       f"{s_arity}-tuple; the carry shapes drifted")
+            elif (r_names is not None and saves[0][1] is not None
+                  and set(r_names) == set(saves[0][1])
+                  and r_names != saves[0][1]):
+                yield (path, r_line,
+                       f"checkpoint restore unpacks ({', '.join(r_names)}) "
+                       f"but save at line {saves[0][2]} packs "
+                       f"({', '.join(saves[0][1])}); element order drifted")
+
+
+def _check_call(call: ast.Call, nid: int, cfg, reaching, index, module,
+                fi, cg):
+    """Tuple-shaped positional args vs the callee's unpack of that param."""
+    if any(isinstance(a, ast.Starred) for a in call.args):
+        return
+    candidates = [c for c in _resolve_flow(call.func, nid, cfg, reaching,
+                                           index, module, fi, cg)
+                  if _positional_params(c) is not None]
+    if not candidates:
+        return
+    for i, arg in enumerate(call.args):
+        pack = _pack_of(arg, nid, cfg, reaching)
+        if pack is None:
+            continue
+        arity, names, pack_line = pack
+        unpacks = []
+        for cand in candidates:
+            params = _positional_params(cand)
+            if i >= len(params):
+                unpacks = []
+                break
+            shape = _unpack_of(cand, params[i])
+            if shape is None:
+                unpacks = []
+                break
+            unpacks.append((cand, shape))
+        if not unpacks or len({u[1][0] for u in unpacks}) != 1:
+            continue                      # unresolved or variant callees
+        cand, (n, unames) = unpacks[0]
+        if arity != n:
+            yield (module.path, call.lineno,
+                   f"call packs a {arity}-tuple (line {pack_line}) into "
+                   f"'{cand.name}', which unpacks it as a {n}-tuple "
+                   f"(line {cand.lineno}); the carry shapes drifted")
+        elif (names is not None and unames is not None
+              and set(names) == set(unames) and names != unames):
+            yield (module.path, call.lineno,
+                   f"call packs ({', '.join(names)}) but '{cand.name}' "
+                   f"unpacks ({', '.join(unames)}); element order is "
+                   f"transposed")
+
+
+def _check_subscript(node: ast.Subscript, nid: int, cfg, reaching,
+                     path: str):
+    """Constant index beyond every reaching tuple-literal pack's arity."""
+    if not (isinstance(node.value, ast.Name)
+            and isinstance(node.slice, ast.Constant)
+            and isinstance(node.slice.value, int)):
+        return
+    k = node.slice.value
+    pack = _pack_of(node.value, nid, cfg, reaching)
+    if pack is None:
+        return
+    arity, _, pack_line = pack
+    if k >= arity or k < -arity:
+        yield (path, node.lineno,
+               f"'{node.value.id}[{k}]' indexes past the {arity}-tuple "
+               f"packed at line {pack_line}")
+
+
+def _check_return_unpack(stmt: ast.Assign, nid: int, cfg, reaching,
+                         index, module, fi, cg):
+    """``a, b = f(...)`` vs the tuple arity every callee returns."""
+    tgt = stmt.targets[0]
+    if not all(isinstance(e, ast.Name) for e in tgt.elts):
+        return
+    k = len(tgt.elts)
+    candidates = [c for c in _resolve_flow(stmt.value.func, nid, cfg,
+                                           reaching, index, module, fi, cg)
+                  if c.cls is None]
+    if not candidates:
+        return
+    arities: Set[int] = set()
+    for cand in candidates:
+        ret = _return_arities(cand)
+        if ret is None:
+            return
+        arities |= ret
+    if len(arities) == 1 and k not in arities:
+        (n,) = arities
+        yield (module.path, stmt.lineno,
+               f"unpacks {k} values from '{call_tail(stmt.value.func)}', "
+               f"whose returns are {n}-tuples; the shapes drifted")

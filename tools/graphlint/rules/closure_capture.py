@@ -1,0 +1,244 @@
+"""closure-capture: traced functions must not close over mutable host state.
+
+``jax.jit``/``shard_map``/``pallas_call`` bake closure captures at
+*trace* time: a captured Python list, dict, or numpy array is read once
+during tracing and the compiled executable never sees later mutations —
+the classic "I appended to the schedule but the jitted step kept the old
+one" bug.  Worse, mutating captured state *inside* a traced function is
+a silent trace-time side effect that runs once, not per step.
+
+The rule uses the project call graph to find every function that flows
+into a trace sink (decorated, ``jit(f)`` by name, through
+``functools.partial``, or returned from a ``make_*_fn`` factory — and
+transitively, helpers called from traced code).  For each, it resolves
+free names through the enclosing scopes to their binding and flags the
+capture when the binding is recognizably mutable (list/dict/set
+literal or constructor, host ``np.*`` array) AND some statement in the
+binding's scope actually mutates it.  Reads of ``self.X`` inside a
+traced method are flagged when ``self.X`` is reassigned outside
+``__init__`` — attribute state on a traced method is re-read only on
+retrace.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..astutil import call_tail
+from ..core import project_rule
+
+#: builtin/collections constructors that produce mutable containers
+_MUTABLE_CALLS = frozenset({"list", "dict", "set", "bytearray",
+                            "defaultdict", "deque", "OrderedDict",
+                            "Counter"})
+#: numpy array constructors (host-mutable buffers)
+_NP_CTORS = frozenset({"zeros", "ones", "empty", "full", "array",
+                       "arange", "zeros_like", "ones_like", "empty_like"})
+#: container methods that mutate the receiver in place
+_MUTATORS = frozenset({"append", "extend", "insert", "pop", "remove",
+                       "clear", "update", "setdefault", "add", "popitem",
+                       "appendleft", "extendleft", "fill", "sort",
+                       "reverse", "discard"})
+
+
+def _is_numpy_alias(name: str, imports: Dict[str, str]) -> bool:
+    return imports.get(name) == "numpy"
+
+
+def _mutable_binding_kind(value: ast.expr,
+                          imports: Dict[str, str]) -> Optional[str]:
+    """A short description when *value* builds a mutable object, else None."""
+    if isinstance(value, (ast.List, ast.ListComp)):
+        return "list"
+    if isinstance(value, (ast.Dict, ast.DictComp)):
+        return "dict"
+    if isinstance(value, (ast.Set, ast.SetComp)):
+        return "set"
+    if isinstance(value, ast.Call):
+        tail = call_tail(value.func)
+        if isinstance(value.func, ast.Name) and tail in _MUTABLE_CALLS:
+            return tail
+        if (isinstance(value.func, ast.Attribute)
+                and isinstance(value.func.value, ast.Name)
+                and _is_numpy_alias(value.func.value.id, imports)
+                and value.func.attr in _NP_CTORS):
+            return f"np.{value.func.attr} array"
+    return None
+
+
+def _scope_bindings(body: List[ast.stmt]) -> Dict[str, ast.expr]:
+    """name -> last ``name = expr`` at any nesting of *body*, without
+    entering nested function/class scopes."""
+    out: Dict[str, ast.expr] = {}
+    stack = list(body)
+    while stack:
+        stmt = stack.pop(0)
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)):
+            out[stmt.targets[0].id] = stmt.value
+        for field in ("body", "orelse", "finalbody"):
+            stack.extend(getattr(stmt, field, []) or [])
+        for handler in getattr(stmt, "handlers", []) or []:
+            stack.extend(handler.body)
+    return out
+
+
+def _bound_in_function(fn: ast.AST) -> Set[str]:
+    """Names the function scope binds: params, assignments, nested defs."""
+    bound: Set[str] = set()
+    a = fn.args
+    for p in (*a.posonlyargs, *a.args, *a.kwonlyargs):
+        bound.add(p.arg)
+    if a.vararg:
+        bound.add(a.vararg.arg)
+    if a.kwarg:
+        bound.add(a.kwarg.arg)
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            bound.add(node.name)
+            continue                       # nested scope binds elsewhere
+        if isinstance(node, ast.Name) and isinstance(node.ctx,
+                                                     (ast.Store, ast.Del)):
+            bound.add(node.id)
+        if isinstance(node, ast.Global) or isinstance(node, ast.Nonlocal):
+            bound.update(node.names)       # treated as bound: skip flagging
+        stack.extend(ast.iter_child_nodes(node))
+    return bound
+
+
+def _free_reads(fn: ast.AST, bound: Set[str]) -> Dict[str, int]:
+    """free name -> first read lineno inside *fn* (nested defs included:
+    their captures are baked through the same trace)."""
+    out: Dict[str, int] = {}
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load)
+                and node.id not in bound):
+            out.setdefault(node.id, node.lineno)
+    return out
+
+
+def _mutations_of(scope_node: ast.AST, name: str,
+                  binding_value: ast.expr) -> Optional[int]:
+    """Lineno of a statement mutating *name* in *scope_node*'s subtree
+    (rebinding via plain ``=`` is not a mutation), else None."""
+    for node in ast.walk(scope_node):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == name
+                and node.func.attr in _MUTATORS):
+            return node.lineno
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for tgt in targets:
+                if (isinstance(tgt, (ast.Subscript, ast.Attribute))
+                        and isinstance(tgt.value, ast.Name)
+                        and tgt.value.id == name):
+                    return node.lineno
+                if (isinstance(node, ast.AugAssign)
+                        and isinstance(tgt, ast.Name) and tgt.id == name):
+                    return node.lineno
+        if isinstance(node, ast.Delete):
+            for tgt in node.targets:
+                if (isinstance(tgt, ast.Subscript)
+                        and isinstance(tgt.value, ast.Name)
+                        and tgt.value.id == name):
+                    return node.lineno
+    return None
+
+
+def _resolve_capture(index, module, fi,
+                     name: str) -> Optional[Tuple[ast.expr, ast.AST]]:
+    """``(binding_value, defining_scope_node)`` for free *name* seen from
+    *fi*: enclosing functions outward, then module globals."""
+    scope = fi.parent
+    while scope is not None:
+        a = scope.node.args
+        params = {p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)}
+        if a.vararg:
+            params.add(a.vararg.arg)
+        if a.kwarg:
+            params.add(a.kwarg.arg)
+        if name in params:
+            return None                   # parameter: provenance unknown
+        value = _scope_bindings(scope.node.body).get(name)
+        if value is not None:
+            return value, scope.node
+        scope = scope.parent
+    value = _scope_bindings(module.tree.body).get(name)
+    if value is not None:
+        return value, module.tree
+    return None
+
+
+def _self_attr_stores(cls_node: ast.ClassDef) -> Tuple[Set[str], Dict[str, int]]:
+    """(attrs assigned in __init__, attrs assigned elsewhere -> lineno)."""
+    init_attrs: Set[str] = set()
+    other: Dict[str, int] = {}
+    for item in cls_node.body:
+        if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for node in ast.walk(item):
+            if (isinstance(node, ast.Attribute)
+                    and isinstance(node.ctx, ast.Store)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == "self"):
+                if item.name == "__init__":
+                    init_attrs.add(node.attr)
+                else:
+                    other.setdefault(node.attr, node.lineno)
+    return init_attrs, other
+
+
+@project_rule("closure-capture")
+def closure_capture(index):
+    """traced function closes over mutable host state that is mutated
+    elsewhere; the compiled executable keeps the trace-time snapshot."""
+    cg = index.callgraph
+    for fi, how in sorted(cg.traced.items(),
+                          key=lambda kv: (kv[0].path, kv[0].lineno)):
+        module = index.modules[fi.path]
+        bound = _bound_in_function(fi.node)
+        for name, read_line in sorted(_free_reads(fi.node, bound).items()):
+            resolved = _resolve_capture(index, module, fi, name)
+            if resolved is None:
+                continue
+            value, scope_node = resolved
+            kind = _mutable_binding_kind(value, module.imports)
+            if kind is None:
+                continue
+            mut_line = _mutations_of(scope_node, name, value)
+            if mut_line is None:
+                continue
+            yield (fi.path, read_line,
+                   f"'{fi.name}' is traced (via {how}) but closes over "
+                   f"mutable {kind} '{name}' (bound at line {value.lineno}, "
+                   f"mutated at line {mut_line}); the trace bakes the "
+                   f"capture — pass it as an argument or freeze it")
+
+        # self.X reads in traced methods, where X is reassigned post-init
+        if fi.cls is not None and fi.cls in module.classes:
+            init_attrs, reassigned = _self_attr_stores(
+                module.classes[fi.cls])
+            del init_attrs  # reassignment outside __init__ is the hazard
+            flagged: Set[str] = set()
+            for node in ast.walk(fi.node):
+                if (isinstance(node, ast.Attribute)
+                        and isinstance(node.ctx, ast.Load)
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id == "self"
+                        and node.attr in reassigned
+                        and node.attr not in flagged):
+                    flagged.add(node.attr)
+                    yield (fi.path, node.lineno,
+                           f"traced method '{fi.cls}.{fi.name}' reads "
+                           f"'self.{node.attr}', which is reassigned at "
+                           f"line {reassigned[node.attr]}; traced code "
+                           f"sees the trace-time value until a retrace")

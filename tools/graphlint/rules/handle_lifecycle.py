@@ -1,0 +1,209 @@
+"""handle-lifecycle: async handles must be drained/joined on every path.
+
+The repo's host-gather pipeline hands out *handles* whose work is only
+made visible by a finalizer call: ``HostFeatureStore.issue()`` returns a
+``HostGather`` that must be ``rows()``/``host_rows()``-drained (PR 7's
+double buffer silently drops a round if the pending gather is never
+collected), ``PrefetchLoader`` must be ``stop()``-ed (the PR 1 thread
+leak kept a daemon thread spinning after the loader was garbage),
+``ThreadPoolExecutor`` must be ``shutdown()`` and ``threading.Thread``
+must be ``join()``-ed or the process exits with work in flight.
+
+This is a path property, so the rule walks the CFG: from each handle
+creation it searches for a path to scope exit on which the handle is
+neither finalized nor escapes (returned, stored in a container, passed
+to a call, aliased, iterated).  ``with``-managed handles are exempt —
+the context manager is the finalizer.  A redefinition that clobbers an
+undrained handle is reported at the clobbering line.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from ..astutil import call_tail, dotted_name
+from ..core import project_rule
+from ..analysis.cfg import ENTRY, EXIT
+from ..analysis.defuse import assigned_names
+
+#: constructor tail -> the finalizer methods that discharge the handle
+_CREATORS: Dict[str, frozenset] = {
+    "ThreadPoolExecutor": frozenset({"shutdown"}),
+    "Thread": frozenset({"join"}),
+    "PrefetchLoader": frozenset({"stop"}),
+}
+
+#: receivers whose ``.issue()`` returns a HostGather handle
+_STORE_NAMES = frozenset({"store", "host_store", "feature_store", "l3",
+                          "l3_store", "hfs"})
+_GATHER_FINALIZERS = frozenset({"rows", "host_rows", "collect"})
+
+
+def _store_names_in(body: List[ast.stmt]) -> Set[str]:
+    """Names syntactically bound to ``HostFeatureStore(...)`` in *body*
+    (any nesting level — a scope-wide approximation is fine here)."""
+    out: Set[str] = set()
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and isinstance(node.value, ast.Call)
+                    and call_tail(node.value.func) == "HostFeatureStore"):
+                out.add(node.targets[0].id)
+    return out
+
+
+def _creator_finalizers(value: ast.expr,
+                        store_names: Set[str]) -> Optional[Tuple[frozenset, str]]:
+    """``(finalizers, description)`` when *value* constructs a tracked
+    handle, else None."""
+    if not isinstance(value, ast.Call):
+        return None
+    tail = call_tail(value.func)
+    if tail in _CREATORS:
+        return _CREATORS[tail], f"{tail}(...)"
+    if tail == "issue" and isinstance(value.func, ast.Attribute):
+        recv = value.func.value
+        recv_name = None
+        if isinstance(recv, ast.Name):
+            recv_name = recv.id
+        elif isinstance(recv, ast.Attribute):
+            recv_name = recv.attr
+        if recv_name is not None and (recv_name in _STORE_NAMES
+                                      or recv_name in store_names):
+            return _GATHER_FINALIZERS, f"{recv_name}.issue(...)"
+    return None
+
+
+def _walk_with_parent(expr: ast.AST) -> Iterator[Tuple[ast.AST, Optional[ast.AST]]]:
+    stack: List[Tuple[ast.AST, Optional[ast.AST]]] = [(expr, None)]
+    while stack:
+        node, parent = stack.pop()
+        yield node, parent
+        for child in ast.iter_child_nodes(node):
+            stack.append((child, node))
+
+
+def _is_none_test(parent: Optional[ast.AST]) -> bool:
+    """True when the name occurrence only compares against None."""
+    return (isinstance(parent, ast.Compare)
+            and all(isinstance(c, ast.Constant) and c.value is None
+                    for c in parent.comparators))
+
+
+def _classify_use(stmt: Optional[ast.stmt], exprs: List[ast.AST],
+                  name: str, finalizers: frozenset) -> Optional[str]:
+    """How a CFG node treats handle *name*: ``"consume"`` (a finalizer
+    method is reached — dominates), ``"escape"`` (the bare name flows
+    somewhere we cannot track: call argument, container, return, alias,
+    iteration), or None (untouched / neutral method access).  Truthiness
+    and ``is None`` tests inspect the handle without capturing it, so
+    they stay neutral — the None-guard refinement below relies on it."""
+    escaped = False
+    for expr in exprs:
+        for node, parent in _walk_with_parent(expr):
+            if not (isinstance(node, ast.Name) and node.id == name):
+                continue
+            if isinstance(node.ctx, ast.Store):
+                continue                  # a rebinding target is not a use
+            if isinstance(parent, ast.Attribute) and parent.value is node:
+                if parent.attr in finalizers:
+                    return "consume"
+                continue                  # h.start(), h.submit(...): neutral
+            if _is_none_test(parent):
+                continue
+            if parent is None and isinstance(stmt, (ast.If, ast.While)):
+                continue                  # `if h:` — a bare truthiness test
+            escaped = True
+    return "escape" if escaped else None
+
+
+def _feasible_successors(cfg, nid: int, stmt: ast.stmt, name: str,
+                         stmt_to_nid: Dict[int, int]) -> Set[int]:
+    """Successors of *nid* a LIVE handle *name* can actually take.
+
+    The canonical finalize-an-optional-handle idiom is a None guard
+    (``if h is not None: h.rows()``).  On any path where ``h`` holds the
+    tracked handle it is not None, so the guard's skip/else side is
+    infeasible — without this refinement every guarded drain would be a
+    false leak.  Applies only to tests that are exactly ``h``, ``not
+    h``, ``h is None``, or ``h is not None``."""
+    succ = cfg.succ.get(nid, set())
+    if not isinstance(stmt, ast.If) or not stmt.body:
+        return succ
+    test, positive = stmt.test, None
+    if isinstance(test, ast.Name) and test.id == name:
+        positive = True
+    elif (isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not)
+            and isinstance(test.operand, ast.Name)
+            and test.operand.id == name):
+        positive = False
+    elif (isinstance(test, ast.Compare) and len(test.ops) == 1
+            and isinstance(test.left, ast.Name) and test.left.id == name
+            and _is_none_test(test)):
+        positive = isinstance(test.ops[0], ast.IsNot)
+    if positive is None:
+        return succ
+    body_entry = stmt_to_nid.get(id(stmt.body[0]))
+    if body_entry is None:
+        return succ
+    return succ & {body_entry} if positive else succ - {body_entry}
+
+
+@project_rule("handle-lifecycle")
+def handle_lifecycle(index):
+    """async handle (issue()/Thread/PrefetchLoader/executor) may leak: a
+    CFG path reaches scope exit without draining or escaping it."""
+    for module, fi, body in index.iter_scopes():
+        store_names = _store_names_in(body)
+        cfg = index.cfg_of(module.path, fi)
+        for nid, stmt in cfg.stmts.items():
+            if not (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)):
+                continue
+            created = _creator_finalizers(stmt.value, store_names)
+            if created is None:
+                continue
+            finalizers, desc = created
+            name = stmt.targets[0].id
+            leak = _find_leak(cfg, nid, name, finalizers)
+            if leak is None:
+                continue
+            leak_nid, why = leak
+            where = ("scope exit" if leak_nid == EXIT else
+                     f"line {cfg.stmts[leak_nid].lineno}")
+            fins = "/".join(f".{f}()" for f in sorted(finalizers))
+            yield (module.path, stmt.lineno,
+                   f"handle '{name}' from {desc} can reach {where} "
+                   f"({why}) without {fins}; drain or join it on every "
+                   f"path, or hand it off explicitly")
+
+
+def _find_leak(cfg, def_nid: int, name: str,
+               finalizers: frozenset) -> Optional[Tuple[int, str]]:
+    """First CFG node proving a leaking path from *def_nid*, else None.
+
+    BFS over successors; a consuming or escaping node satisfies its
+    path (not expanded), EXIT or a clobbering redefinition without
+    prior consumption is the leak witness."""
+    stmt_to_nid = {id(s): n for n, s in cfg.stmts.items()}
+    seen: Set[int] = set()
+    work = list(cfg.succ.get(def_nid, ()))
+    while work:
+        nid = work.pop()
+        if nid in seen:
+            continue
+        seen.add(nid)
+        if nid == EXIT:
+            return EXIT, "falls off the end"
+        stmt = cfg.stmts.get(nid)
+        if stmt is None:          # ENTRY cannot reappear; defensive
+            continue
+        use = _classify_use(stmt, cfg.header_exprs.get(nid, []), name,
+                            finalizers)
+        if use is not None:
+            continue              # this path is satisfied
+        if name in assigned_names(stmt, cfg.header_exprs.get(nid, [])):
+            return nid, "is overwritten undrained"
+        work.extend(_feasible_successors(cfg, nid, stmt, name, stmt_to_nid))
+    return None
