@@ -22,7 +22,7 @@ def main() -> None:
 
     from . import (feature_cache, gen_throughput, host_fetch, kernel_bench,
                    load_balance, padding_and_dropping, pipeline_overlap,
-                   tree_reduce_bench)
+                   serve_latency, tree_reduce_bench)
 
     suites = {
         "gen_throughput": lambda: gen_throughput.bench(scale=False),
@@ -33,6 +33,7 @@ def main() -> None:
         "padding_and_dropping": padding_and_dropping.bench,
         "feature_cache": feature_cache.bench,
         "host_fetch": host_fetch.bench,
+        "serve_latency": serve_latency.bench,
     }
     if args.scale:
         suites["gen_throughput_1M"] = lambda: gen_throughput.bench(scale=True)

@@ -1,0 +1,188 @@
+"""Serving-tier latency: p50/p99, sustained QPS, and the zero-recompile gate.
+
+The serving tier's whole design — bucket ladder compiled at startup,
+read-mostly cache, forward-only program — exists to keep re-JIT and
+cache churn off the request path.  This benchmark drives the REAL serve
+driver (``repro.launch.serve.serve_gcn``: bounded request queue,
+producer thread, ``GraphServer``) over a synthetic Zipf request stream
+and reports, per worker count:
+
+  * ``p50_ms`` / ``p99_ms`` — end-to-end request latency percentiles
+    (enqueue to predictions-on-host, queue wait included);
+  * ``qps`` — sustained requests/second over the drained stream;
+  * ``request_path_compiles`` — programs compiled AFTER startup warmup,
+    read from the jit executable-cache probe
+    (``repro.launch.serve.jit_compile_count``).
+
+Gates ``main`` enforces on the W=4 smoke configuration:
+
+  * **zero request-path recompiles** — every request must land on a
+    bucket compiled at startup (the latency-killer claim, asserted
+    exactly, not statistically);
+  * **p99 tail bound** — ``p99 <= max(10 x p50, 50ms)``: a ratio, not an
+    absolute time, so the gate survives runner-speed drift while still
+    catching a bimodal tail (a stray compile, a host sync, a cold
+    bucket).
+
+Each cell runs in a FRESH interpreter (``--cell``), the same
+measurement hygiene as ``benchmarks/host_fetch.py``: cells measured in
+one process inherit allocator and JIT-cache state and are not
+comparable.
+
+    PYTHONPATH=src python -m benchmarks.serve_latency [--smoke] \
+        [--workers N] [--requests K] [--out BENCH_serve_latency.json]
+
+Emits the ``name,us_per_call,derived`` CSV rows the harness expects
+(``us_per_call`` is the cell's p50 request latency).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+
+def _cell_env(workers: int) -> dict:
+    """Child-process environment for one cell: the forced host device
+    count must be in ``XLA_FLAGS`` before the child imports jax."""
+    env = dict(os.environ)
+    if workers > 1:
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={workers} "
+            + env.get("XLA_FLAGS", ""))
+    return env
+
+
+def _run_cell(spec: dict) -> dict:
+    """Run one :func:`measure` cell in a fresh interpreter (the
+    host_fetch hygiene rule: cells sharing a process inherit each
+    other's allocator and JIT-cache state and bias later cells slow)."""
+    cmd = [sys.executable, "-m", "benchmarks.serve_latency",
+           "--cell", json.dumps(spec)]
+    proc = subprocess.run(cmd, capture_output=True, text=True,
+                          env=_cell_env(spec.get("workers", 4)))
+    if proc.returncode != 0:
+        raise RuntimeError(f"cell {spec} failed:\n{proc.stderr}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def measure(*, workers: int = 4, nodes: int = 8_192, requests: int = 160,
+            buckets: str = "8,16,32", warmup_sweeps: int = 4,
+            queue_depth: int = 32, seed: int = 0) -> dict:
+    """One cell: the full serve driver (queue + producer thread + bucket
+    ladder + read-mostly cache) over a Zipf request stream.
+
+    Runs ``repro.launch.serve.serve_gcn`` exactly as the CLI would — the
+    benchmark measures the driver users run, not a stripped-down
+    stand-in — and returns its result record (p50/p99/qps/compile
+    counts) tagged with the cell configuration."""
+    from repro.launch.serve import serve_gcn
+
+    args = argparse.Namespace(
+        arch="graphgen-gcn", smoke=True, seed=seed, workers=workers,
+        nodes=nodes, avg_degree=10.0, buckets=buckets, requests=requests,
+        queue_depth=queue_depth, warmup_sweeps=warmup_sweeps,
+        warmup_head=0, warm_from=None)
+    rec = serve_gcn(args)
+    rec.update(workers=workers, nodes=nodes, buckets=buckets)
+    return rec
+
+
+def sweep(*, smoke: bool = False, workers: int = 4, requests: int = None,
+          seed: int = 0) -> dict:
+    """W=1 and W=``workers`` serve cells, each in a fresh interpreter.
+
+    The W=1 cell is the no-collectives floor (probe and fetch are local
+    gathers); the W=``workers`` cell pays the frozen probe round and is
+    the configuration the CI gates check."""
+    nodes = 8_192 if smoke else 65_536
+    requests = requests or (160 if smoke else 512)
+    cells = [1] + ([workers] if workers > 1 else [])
+    results = [
+        _run_cell(dict(workers=w, nodes=nodes, requests=requests,
+                       seed=seed))
+        for w in cells
+    ]
+    return {
+        "benchmark": "serve_latency",
+        "workers": workers,
+        "nodes": nodes,
+        "requests": requests,
+        "results": results,
+    }
+
+
+def bench() -> list:
+    """Harness entry (benchmarks.run): smoke-size sweep, CSV rows
+    (``us_per_call`` is the p50 request latency)."""
+    rec = sweep(smoke=True, workers=1)
+    return [
+        (f"serve_latency_w{r['workers']}", r["p50_ms"] * 1e3,
+         f"p99_ms={r['p99_ms']:.2f},qps={r['qps']:.1f},"
+         f"request_compiles={r['request_path_compiles']}")
+        for r in rec["results"]
+    ]
+
+
+def main() -> None:
+    """CLI: run the sweep, print CSV rows, enforce the serve gates."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes (the CI configuration)")
+    ap.add_argument("--workers", type=int, default=4,
+                    help="forced host devices for the gated cell "
+                         "(the W=4 smoke configuration)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="requests per cell")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write JSON here")
+    ap.add_argument("--cell", default=None,
+                    help="(internal) measure one cell from a JSON spec "
+                         "and print its result — how sweep() isolates "
+                         "cells in fresh interpreters")
+    args = ap.parse_args()
+    if args.cell:
+        print(json.dumps(measure(**json.loads(args.cell))))
+        return
+
+    rec = sweep(smoke=args.smoke, workers=args.workers,
+                requests=args.requests, seed=args.seed)
+    print("name,us_per_call,derived")
+    for r in rec["results"]:
+        print(f"serve_latency_w{r['workers']},{r['p50_ms'] * 1e3:.1f},"
+              f"p99_ms={r['p99_ms']:.2f},qps={r['qps']:.1f},"
+              f"request_compiles={r['request_path_compiles']},"
+              f"startup_compiles={r['startup_compiles']}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"wrote {args.out}", file=sys.stderr)
+
+    failed = False
+    for r in rec["results"]:
+        # the zero-recompile gate: exact, per cell — one request landing
+        # on an uncompiled shape is a ladder bug, not noise
+        if r["request_path_compiles"] != 0:
+            print(f"WARNING: W={r['workers']} served requests on "
+                  f"{r['request_path_compiles']} uncompiled shapes — "
+                  f"the bucket ladder must cover the request stream",
+                  file=sys.stderr)
+            failed = True
+        # the tail gate: ratio-based so runner drift cannot flip it; the
+        # 50ms floor keeps sub-ms-p50 cells from failing on scheduler
+        # jitter alone
+        bound = max(10.0 * r["p50_ms"], 50.0)
+        if r["p99_ms"] > bound:
+            print(f"WARNING: W={r['workers']} p99 {r['p99_ms']:.2f}ms > "
+                  f"bound {bound:.2f}ms (max(10 x p50, 50ms)) — the "
+                  f"latency tail is bimodal",
+                  file=sys.stderr)
+            failed = True
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -140,6 +140,13 @@ class CacheConfig(NamedTuple):
                                # (core/host_store.py) — the step's output
                                # then carries a HostMissRequest and the
                                # rows land one step later
+    frozen: bool = False       # read-mostly SERVE view: probes serve hits
+                               # as usual but the admit stage is the
+                               # identity — no admission, no L1 promotion,
+                               # no tag/counter churn — so a pre-warmed
+                               # cache state is bit-stable across requests
+                               # and the admission collectives vanish from
+                               # the request path.  Built via serve_view().
 
     @property
     def n_sets(self) -> int:
@@ -160,7 +167,8 @@ class CacheConfig(NamedTuple):
         ``l1_promote`` as the admission threshold (promotion IS frequency
         admission — a row installs after ``l1_promote`` observations)."""
         return CacheConfig(n_rows=self.l1_rows, admit=self.l1_promote,
-                           assoc=self.l1_assoc, mode="replicated")
+                           assoc=self.l1_assoc, mode="replicated",
+                           frozen=self.frozen)
 
     def l2_config(self) -> "CacheConfig":
         """The L2 tier as a standalone sharded policy (the pre-tiered
@@ -169,7 +177,16 @@ class CacheConfig(NamedTuple):
         return CacheConfig(n_rows=self.n_rows, admit=self.admit,
                            assoc=self.assoc, mode="sharded",
                            wire=self.wire, hit_cap=self.hit_cap,
-                           store=self.store)
+                           store=self.store, frozen=self.frozen)
+
+    def serve_view(self) -> "CacheConfig":
+        """The read-mostly serve view of this policy: same slot layout
+        (so a cache state warmed under ``self`` probes correctly), but
+        ``frozen=True`` — the admit stage becomes the identity, and
+        misses resolve against the device table (``store="device"``;
+        serving never defers rows through the L3 staging path).  This is
+        the config the serving tier compiles its bucket ladder under."""
+        return self._replace(frozen=True, store="device").validated()
 
     def validated(self) -> "CacheConfig":
         """Self after strict cross-field validation (raises ``ValueError``
@@ -221,6 +238,11 @@ class CacheConfig(NamedTuple):
             raise ValueError(
                 f"cache store must be one of {VALID_STORES}, "
                 f"got {self.store!r}")
+        if self.frozen and self.store != "device":
+            raise ValueError(
+                'a frozen (read-mostly serve) cache requires store='
+                '"device" — serving resolves misses against the device '
+                'table, never the L3 staging path (use serve_view())')
         return self
 
     @classmethod

@@ -590,6 +590,38 @@ _CACHE_TIERS = {
 }
 
 
+class _FrozenTier:
+    """Read-mostly serve view of a base strategy (``cfg.frozen``): the
+    probe stage delegates verbatim — hits are served from the warm state
+    through the base mode's full flow, probe round included — but the
+    admit stage is the IDENTITY.  No admission, no L1 promotion, no
+    tag/counter churn, and the admission ``all_to_all`` round disappears
+    from the compiled program entirely, so a pre-warmed cache state is
+    bit-stable across requests (the serving tier's correctness contract)
+    and the request path pays only the probe collectives."""
+
+    def __init__(self, base):
+        self._base = base
+
+    def probe(self, cache, cfg, ids, valid, axis_name, cap, w):
+        """Delegate to the base mode's probe stage unchanged."""
+        return self._base.probe(cache, cfg, ids, valid, axis_name, cap, w)
+
+    def admit(self, cache, cfg, probe, ids, fetched, should, axis_name, w):
+        """Identity: the cache state passes through untouched."""
+        return cache, jnp.int32(0)
+
+
+def _cache_tier(cfg: CacheConfig):
+    """The (probe, admit) strategy pair for *cfg* — the base mode's pair,
+    wrapped read-mostly when ``cfg.frozen`` selects the serve view."""
+    if cfg.mode not in _CACHE_TIERS:
+        raise ValueError(f"unknown cache mode {cfg.mode!r}; "
+                         f"expected one of {sorted(_CACHE_TIERS)}")
+    base = _CACHE_TIERS[cfg.mode]
+    return _FrozenTier(base) if cfg.frozen else base
+
+
 def _host_admit(cache, cfg: CacheConfig, adm_ids: jax.Array,
                 adm_rows: jax.Array, axis_name: str, w: int):
     """Deferred admission: offer the PREVIOUS step's landed L3 rows.
@@ -658,7 +690,7 @@ def _host_fetch(ids, axis_name, capacity_slack, capacity, cache, cache_cfg,
         adm_ids, adm_rows = host_admit
         cache, n_adm, adm_bytes = _host_admit(cache, cache_cfg, adm_ids,
                                               adm_rows, axis_name, w)
-    tier = _CACHE_TIERS[cache_cfg.mode] if cache is not None else None
+    tier = _cache_tier(cache_cfg) if cache is not None else None
     if tier is not None:
         probe = tier.probe(cache, cache_cfg, req_ids, req_valid, axis_name,
                            probe_round_capacity(r, w, capacity_slack), w)
@@ -776,6 +808,13 @@ def fetch_rows(
     ``(out, new_cache, FetchStats, CacheStats)``, and ``n_unique`` counts
     only the ids that went to their owner.
 
+    With ``cache_cfg.frozen`` (the read-mostly serve view,
+    ``CacheConfig.serve_view()``) the probe stage runs unchanged but the
+    admit stage is the identity: ``new_cache`` is the input state
+    bit-for-bit, nothing is admitted or promoted, and the admission
+    collectives drop out of the compiled program — the serving tier's
+    request-path form.
+
     The shard-probe round's RESPONSE rides the wire format
     ``cache_cfg.wire`` selects: ``"dense"`` ships a full ``[W, cap, D]``
     row block back (every probe slot pays a row slot, hit or not);
@@ -817,6 +856,10 @@ def fetch_rows(
     host = store == "host"
     if host and not dedup:
         raise ValueError('fetch_rows(store="host") requires dedup=True')
+    if host and cache_cfg is not None and cache_cfg.frozen:
+        raise ValueError('a frozen (read-mostly serve) cache cannot ride '
+                         'the L3 staging path — serve misses resolve '
+                         'against the device table (see serve_view())')
     if host and table_local is None and feat_dim is None:
         raise ValueError('fetch_rows(store="host") without a device table '
                          'requires feat_dim (the feature row width)')
@@ -893,10 +936,7 @@ def fetch_rows(
     # routing, admission plumbing, and stats below are mode-agnostic
     tier = None
     if cache is not None:
-        if cache_cfg.mode not in _CACHE_TIERS:
-            raise ValueError(f"unknown cache mode {cache_cfg.mode!r}; "
-                             f"expected one of {sorted(_CACHE_TIERS)}")
-        tier = _CACHE_TIERS[cache_cfg.mode]
+        tier = _cache_tier(cache_cfg)
     if tier is not None:
         probe = tier.probe(cache, cache_cfg, req_ids, req_valid,
                            axis_name, slack_cap, w)
@@ -1162,7 +1202,15 @@ def make_generator_fn(
     (L1 replica + L2 shard) in tiered mode.
     ``fetch_capacity`` (optional) pins the per-destination owner-exchange
     capacity; the warm re-calibration hook uses it to shrink the static
-    all_to_all buffers to the steady-state cache-miss count."""
+    all_to_all buffers to the steady-state cache-miss count.
+
+    With a FROZEN ``cache_cfg`` (``CacheConfig.serve_view()``) the
+    generator takes the forward-only serve form:
+    ``gen_fn(device_args, seeds, rng, cache) -> SubgraphBatch`` — the
+    cache is a read-only input (probed, never admitted into, and not
+    returned: read-mostly state has no next version to thread), which is
+    what lets the serving tier hold ONE warm state and replay it across
+    every request without carry plumbing."""
     if not fanouts:
         raise ValueError("fanouts must name at least one hop, got ()")
     if feature_store not in ("device", "host"):
@@ -1177,6 +1225,11 @@ def make_generator_fn(
     row_spec = P(axis_name)
     repl = P()
     cached = cache_cfg is not None and cache_cfg.n_rows > 0
+    frozen = cached and cache_cfg.frozen
+    if frozen and host:
+        raise ValueError('a frozen (read-mostly serve) cache cannot ride '
+                         'the L3 staging path — build the serve generator '
+                         'with feature_store="device"')
     if cached:
         cache_cfg = cache_cfg.validated()
         if cache_cfg.store != feature_store:
@@ -1200,6 +1253,14 @@ def make_generator_fn(
         batch, cache = worker_gen(indptr[0], indices[0], xs, ys, seeds[0],
                                   rng, squeeze_worker_axis(cache))
         return batch, restore_worker_axis(cache)
+
+    # forward-only serve form: the frozen admit stage already returns the
+    # state untouched, so there is no next cache version to ship out —
+    # dropping it here removes the state round-trip from the request path
+    def worker_fn_frozen(indptr, indices, xs, ys, seeds, rng, cache):
+        batch, _ = worker_gen(indptr[0], indices[0], xs, ys, seeds[0],
+                              rng, squeeze_worker_axis(cache))
+        return batch
 
     # host-store variants: no device feature table; the HostMissRequest
     # comes back stacked [W, ...] (out_specs P(axis_name), leading axis
@@ -1241,6 +1302,17 @@ def make_generator_fn(
                 out_specs=(P(axis_name), P(axis_name)),
                 check_rep=False,
             )(indptr, indices, ys, seeds, rng)
+    elif cached and frozen:
+        def gen_fn(device_args, seeds, rng, cache):
+            indptr, indices, xs, ys = device_args
+            return shard_map(
+                worker_fn_frozen,
+                mesh=mesh,
+                in_specs=(graph_spec, graph_spec, row_spec, row_spec,
+                          graph_spec, repl, P(axis_name)),
+                out_specs=P(axis_name),
+                check_rep=False,
+            )(indptr, indices, xs, ys, seeds, rng, cache)
     elif cached:
         def gen_fn(device_args, seeds, rng, cache):
             indptr, indices, xs, ys = device_args

@@ -475,6 +475,18 @@ def train_gcn(args) -> dict:
         # gather but never reaches the loop's drain; rows() memoizes, so on
         # every other path this hits the already-landed buffer for free
         pending.rows()
+    if args.export_serve:
+        if not cached:
+            raise SystemExit("--export-serve checkpoints params + the warm "
+                             "cache state; this run has no cache "
+                             "(--cache-rows 0)")
+        # device mode threads the cache through the pipelined carry; host
+        # mode keeps it in the local variable (see the carry comment above)
+        cache_final = carry[3] if not host else cache
+        ckpt.save_serving_state(args.export_serve, args.steps, carry[0],
+                                cache_final, cache_cfg=cache_cfg)
+        print(f"exported serving state (params + warm cache) to "
+              f"{args.export_serve}")
     jax.block_until_ready(carry[0])
     dt = time.perf_counter() - t0
     nodes_per_iter = batch.nodes_per_iteration()
@@ -612,6 +624,10 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--export-serve", default=None, metavar="DIR",
+                    help="after training, checkpoint params + the warm "
+                         "cache state for the serving tier "
+                         "(repro.launch.serve --warm-from DIR)")
     args = ap.parse_args()
     if args.cache_probe_impl != "jnp":
         from ..core.feature_cache import set_probe_impl

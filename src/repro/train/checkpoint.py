@@ -48,6 +48,9 @@ def _flatten(tree) -> tuple[dict[str, np.ndarray], dict[str, str]]:
 
 
 def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3, extra: Optional[dict] = None) -> str:
+    """Atomically commit ``tree`` as ``<ckpt_dir>/step_<step>`` (npz +
+    meta.json), retaining only the newest ``keep`` checkpoints; ``extra``
+    is recorded verbatim in the metadata.  Returns the committed path."""
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f"tmp.{step}")
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
@@ -76,10 +79,75 @@ def _retain(ckpt_dir: str, keep: int) -> None:
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest committed checkpoint step under ``ckpt_dir`` (None if the
+    directory is missing or holds no ``step_*`` entries)."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
     return int(steps[-1].split("_")[1]) if steps else None
+
+
+def save_serving_state(ckpt_dir: str, step: int, params: Any, cache: Any,
+                       *, keep: int = 3,
+                       cache_cfg: Any = None) -> str:
+    """Checkpoint the frozen-serving bundle: model params + warm cache.
+
+    The serving tier restores this instead of re-warming from scratch —
+    the trained params and the training run's steady-state cache state
+    travel together, so a server comes up with the Zipf head already
+    resident.  ``cache_cfg`` (a ``CacheConfig``) is recorded in the
+    checkpoint metadata; ``restore_serving_state`` refuses a state whose
+    recorded policy disagrees with the one the server was built under
+    (the slot layout is a property of the policy — probing a state under
+    the wrong layout silently yields a near-zero hit rate, not an
+    error)."""
+    extra = {"kind": "serving"}
+    if cache_cfg is not None:
+        extra["cache_cfg"] = dict(cache_cfg._asdict())
+    return save(ckpt_dir, step, {"params": params, "cache": cache},
+                keep=keep, extra=extra)
+
+
+def restore_serving_state(ckpt_dir: str, params_like: Any, cache_like: Any,
+                          *, step: Optional[int] = None,
+                          shardings: Any = None,
+                          expect_cache_cfg: Any = None) -> tuple:
+    """Restore ``(params, cache)`` saved by :func:`save_serving_state`.
+
+    ``params_like``/``cache_like`` supply the target structure and leaf
+    dtypes (e.g. a fresh ``init_gcn`` tree and an empty
+    ``init_cache_state``); ``shardings``, when given, is a matching
+    ``{"params": ..., "cache": ...}`` pytree of shardings for the
+    elastic-reshard placement path.  ``step=None`` selects the latest
+    checkpoint.  ``expect_cache_cfg`` (a ``CacheConfig``) cross-checks
+    the policy recorded at save time — a layout mismatch raises instead
+    of silently probing cold."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(
+                f"no serving checkpoint under {ckpt_dir!r}")
+    if expect_cache_cfg is not None:
+        meta_path = os.path.join(ckpt_dir, f"step_{step:010d}", "meta.json")
+        with open(meta_path) as f:
+            saved = json.load(f).get("extra", {}).get("cache_cfg")
+        if saved is not None:
+            now = {k: v for k, v in expect_cache_cfg._asdict().items()}
+            # the serve view flips frozen/store without changing layout —
+            # compare the layout-bearing fields only
+            layout = ("n_rows", "assoc", "mode", "l1_rows")
+            diff = {k: (saved.get(k), now.get(k))
+                    for k in layout if saved.get(k) != now.get(k)}
+            if diff:
+                raise ValueError(
+                    f"serving checkpoint cache layout mismatch: {diff} "
+                    f"(saved vs serving CacheConfig) — the cache state "
+                    f"only probes correctly under the layout it was "
+                    f"warmed with")
+    tree = restore(ckpt_dir, step,
+                   {"params": params_like, "cache": cache_like},
+                   shardings=shardings)
+    return tree["params"], tree["cache"]
 
 
 def restore(ckpt_dir: str, step: int, like: Any, shardings: Any = None) -> Any:

@@ -862,3 +862,79 @@ def test_grad_sync_tree_equals_default():
         print("SYNC_OK")
     """)
     assert "SYNC_OK" in out
+
+
+#: the serving extension of the matrix: the frozen (read-mostly) serve
+#: generator — the forward-only form the GraphServer compiles — must
+#: produce batches and GCN forward logits bit-identical to the uncached
+#: oracle, while serving real hits from the state warmed by the mutable
+#: generator
+SERVE_MODES = ("replicated", "sharded", "tiered")
+
+
+@pytest.mark.parametrize("w", [1, 4])
+@pytest.mark.parametrize("mode", SERVE_MODES)
+def test_serve_frozen_differential_cells(mode, w):
+    """The serving contract, per mode x W cell: warm a cache with the
+    mutable training generator, freeze it (serve_view), and check the
+    forward-only serve generator's batch is bit-identical to the
+    uncached oracle (rows from the raw table, padded slots exactly
+    zero, labels match) AND the GCN forward logits — what serve()
+    argmaxes — are bit-identical to the oracle batch's.  The frozen
+    cells must also serve warm hits: a serve path that never hits
+    would pass bit-identity trivially by fetching everything."""
+    out = run_forced(f"""
+        MODE, W = {mode!r}, {w}
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.graph.synthetic import powerlaw_graph, node_features, node_labels
+        from repro.core.partition import partition_edges
+        from repro.core.balance import balance_table
+        from repro.core.feature_cache import CacheConfig
+        from repro.core.generation import (make_distributed_generator,
+                                           make_generator_fn)
+        from repro.launch.mesh import make_mesh
+        from repro.models import gcn as gcn_mod
+
+        N, D, C = 600, 8, 7
+        mesh = make_mesh((W,), ("data",))
+        g = powerlaw_graph(N, avg_degree=8, n_hot=3, hot_degree=200, seed=0)
+        part = partition_edges(g, W)
+        X = node_features(N, D); Y = node_labels(N, C)
+        table = balance_table(np.arange(N), W, seed=0)
+        seeds = jnp.asarray(table.per_worker[:, :6])
+        cc = CacheConfig(128, admit=1, assoc=2, mode=MODE,
+                         l1_rows=32 if MODE == "tiered" else 0, l1_promote=2)
+        gen_mut, dev, cache = make_distributed_generator(
+            mesh, part, X, Y, fanouts=(5, 3), cache_cfg=cc)
+        # warm on the ids the serve requests will replay
+        for t in range(3):
+            _, cache = gen_mut(dev, seeds, jax.random.PRNGKey(t % 2), cache)
+        gen_frozen = jax.jit(make_generator_fn(
+            mesh, fanouts=(5, 3), cache_cfg=cc.serve_view()))
+        mcfg = dataclasses.replace(get_config("graphgen-gcn"), gcn_in_dim=D,
+                                   gcn_hidden=16, n_classes=C, fanouts=(5, 3))
+        params = gcn_mod.init_gcn(mcfg, jax.random.PRNGKey(1))
+        fwd = jax.jit(gcn_mod.gcn_forward)
+        hits = 0
+        for t in range(3):
+            rng = jax.random.PRNGKey(t % 2)   # replay the warmed ids
+            b = jax.tree.map(np.asarray, gen_frozen(dev, seeds, rng, cache))
+            assert b.n_dropped.sum() == 0, b.n_dropped
+            np.testing.assert_array_equal(b.x_seed, X[b.seeds])
+            oracle_hops = []
+            for h, m, x in zip(b.hops, b.masks, b.x_hops):
+                want = X[h] * m[..., None]        # padded slots exactly 0
+                np.testing.assert_array_equal(x, want)
+                oracle_hops.append(want)
+            assert (b.labels == Y[b.seeds]).all()
+            oracle = b._replace(x_seed=X[b.seeds], x_hops=tuple(oracle_hops))
+            l_got = np.asarray(fwd(params, jax.tree.map(jnp.asarray, b)))
+            l_want = np.asarray(fwd(params, jax.tree.map(jnp.asarray, oracle)))
+            assert l_got.tobytes() == l_want.tobytes()
+            hits += int(b.n_cache_hits.sum())
+        assert hits > 0, "frozen serve cells must hit the warmed state"
+        print("SERVE_OK", MODE, W, hits)
+    """, devices=w)
+    assert "SERVE_OK" in out

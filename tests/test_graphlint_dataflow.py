@@ -731,3 +731,46 @@ def test_sarif_out_writes_file(tmp_path):
     data = json.loads(out.read_text())
     assert data["runs"][0]["tool"]["driver"]["name"] == "graphlint"
     assert data["runs"][0]["results"] == []
+
+
+def test_lifecycle_serve_producer_thread_join_in_finally():
+    """The serving driver's request-queue worker shape (PR 9): a
+    producer thread feeding a bounded queue is joined in ``finally`` —
+    silent, because the join dominates every exit of the consumer loop
+    — while the same driver without the ``finally`` leaks the thread on
+    the break path and fires."""
+    _assert_silent("""\
+        import queue, threading
+
+        def drive(stream, serve):
+            q = queue.Queue(maxsize=4)
+
+            def producer():
+                for ids in stream:
+                    q.put(ids)
+                q.put(None)
+
+            t = threading.Thread(target=producer)
+            t.start()
+            try:
+                while True:
+                    item = q.get()
+                    if item is None:
+                        break
+                    serve(item)
+            finally:
+                t.join()
+        """)
+    _assert_fires("handle-lifecycle", """\
+        import queue, threading
+
+        def drive(stream, serve):
+            q = queue.Queue(maxsize=4)
+            t = threading.Thread(target=lambda: q.put(None))
+            t.start()
+            while True:
+                item = q.get()
+                if item is None:
+                    return
+                serve(item)
+        """)

@@ -55,6 +55,8 @@ PUBLIC_API_MODULES = (
     "repro.kernels.cache_gather",
     "repro.kernels.ref",
     "repro.kernels.ops",
+    "repro.launch.serve",
+    "repro.train.checkpoint",
 )
 
 #: individually-exported public symbols (``module:name``) from modules
