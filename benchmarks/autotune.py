@@ -1,0 +1,262 @@
+"""Autotuner vs calibration ladders: picked-config step time + rollbacks.
+
+The autotuner's claim (docs/AUTOTUNING.md) is that ONE instrumented
+trace window plus an offline cost-model search finds a configuration at
+least as good as the serial calibration ladders — without paying a
+device run per ladder rung.  This benchmark runs both paths end to end
+on the W=4 smoke graph, then measures the picked configuration of each
+in an identical warm generation loop:
+
+  * ``ladder`` cell — ``calibrate_capacity_slack`` +
+    ``calibrate_probe_hit_cap`` (the pre-autotune tuning path);
+  * ``autotune`` cell — ``repro.launch.autotune.autotune_gcn`` (trace ->
+    fit -> offline search -> live validator); a rejected pick falls back
+    to the ladders and counts as a ROLLBACK.
+
+Gates ``main`` enforces on the smoke configuration:
+
+  * **step-time parity** — the model-picked config's best warm step
+    time is <= 1.05x the ladder-picked config's (the search must not
+    trade the ladders' device probes for a slower pick; the min over
+    the warm window is the comparator because shared-runner scheduler
+    noise only ever ADDS time);
+  * **zero validator rollbacks** — on the smoke graph the trace-floored
+    grid (``observed_floors``) must offer only picks the live validator
+    accepts; a rollback here means the model proposed a config the
+    traced workload already overflowed.
+
+Each cell runs in a FRESH interpreter (``--cell``), the same hygiene as
+``benchmarks/serve_latency.py``: the two paths must not share allocator
+or JIT-cache state.
+
+    PYTHONPATH=src python -m benchmarks.autotune [--smoke] \
+        [--workers N] [--out BENCH_autotune.json]
+
+Emits the ``name,us_per_call,derived`` CSV rows the harness expects
+(``us_per_call`` is the cell's best warm step time).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+#: the step-time parity gate: model-picked <= this multiple of
+#: ladder-picked (best warm step, same measurement loop)
+PARITY_RATIO = 1.05
+
+
+def _cell_env(workers: int) -> dict:
+    """Child-process environment for one cell: the forced host device
+    count must be in ``XLA_FLAGS`` before the child imports jax."""
+    env = dict(os.environ)
+    if workers > 1:
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={workers} "
+            + env.get("XLA_FLAGS", ""))
+    return env
+
+
+def _run_cell(spec: dict) -> dict:
+    cmd = [sys.executable, "-m", "benchmarks.autotune",
+           "--cell", json.dumps(spec)]
+    proc = subprocess.run(cmd, capture_output=True, text=True,
+                          env=_cell_env(spec.get("workers", 4)))
+    if proc.returncode != 0:
+        raise RuntimeError(f"cell {spec} failed:\n{proc.stderr}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def measure(*, path: str = "ladder", workers: int = 4, nodes: int = 4000,
+            batch: int = 8, measure_steps: int = 24, trace_steps: int = 8,
+            seed: int = 0) -> dict:
+    """One cell: pick a config via ``path``, measure it warm.
+
+    Both paths start from the same base configuration (fanouts, cache
+    policy) and the same seed stream, and the picked config is measured
+    by the SAME loop — the comparison isolates the tuning method, not
+    the measurement harness.  An autotune rejection falls back to the
+    ladder pick and reports ``rollbacks=1``."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.balance import balance_table
+    from repro.core.feature_cache import CacheConfig
+    from repro.core.generation import make_distributed_generator
+    from repro.core.partition import partition_edges
+    from repro.graph.synthetic import (node_features, node_labels,
+                                       powerlaw_graph)
+    from repro.launch.autotune import autotune_gcn, candidate_cache_cfg
+    from repro.launch.mesh import make_mesh
+    from repro.launch.train import (CALIBRATION_PROBES,
+                                    calibrate_capacity_slack,
+                                    calibrate_probe_hit_cap)
+
+    w, dim = workers, 16
+    mesh = make_mesh((w,), ("data",))
+    g = powerlaw_graph(nodes, avg_degree=8,
+                       n_hot=max(nodes // 1000, 1), seed=seed)
+    part = partition_edges(g, w)
+    feats = node_features(nodes, dim)
+    labels = node_labels(nodes, 5)
+    table = balance_table(np.arange(nodes), w, seed)
+    fanouts = (3, 4)
+    base_cfg = CacheConfig(256, admit=1, assoc=2, mode="sharded",
+                           wire="compact")
+    n_rngs = max(measure_steps, trace_steps, CALIBRATION_PROBES)
+    rngs = jax.random.split(jax.random.PRNGKey(seed + 1), n_rngs)
+
+    def seeds_for(t):
+        cols = (np.arange(batch) + t * batch) % table.per_worker.shape[1]
+        return jnp.asarray(table.per_worker[:, cols])
+
+    rollbacks = 0
+    picked = None
+    if path == "autotune":
+        res = autotune_gcn(mesh, part, feats, labels, fanouts=fanouts,
+                           cache_cfg=base_cfg, feature_store="device",
+                           batch_per_worker=batch, seeds_for=seeds_for,
+                           rngs=rngs, steps=trace_steps, slack=2.0)
+        if res.accepted:
+            cand = res.candidate
+            picked = (cand.fanouts, float(cand.capacity_slack),
+                      candidate_cache_cfg(base_cfg, cand))
+        else:
+            rollbacks = 1
+            print(f"autotune cell: rollback — {res.reason}",
+                  file=sys.stderr)
+    if picked is None:
+        probes = [(seeds_for(t), rngs[t])
+                  for t in range(CALIBRATION_PROBES)]
+        _, cal_args = make_distributed_generator(mesh, part, feats,
+                                                 labels, fanouts=fanouts)
+        slack = calibrate_capacity_slack(mesh, cal_args, fanouts, probes,
+                                         cache_cfg=base_cfg)
+        cfg = calibrate_probe_hit_cap(mesh, cal_args, fanouts, probes,
+                                      slack, base_cfg)
+        picked = (fanouts, slack, cfg)
+
+    fo, slack, cfg = picked
+    gen_fn, device_args, cache = make_distributed_generator(
+        mesh, part, feats, labels, fanouts=fo, capacity_slack=slack,
+        cache_cfg=cfg)
+    times = []
+    dropped = demoted = 0
+    for t in range(measure_steps):
+        t0 = time.perf_counter()
+        out, cache = gen_fn(device_args, seeds_for(t), rngs[t], cache)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+        dropped += int(np.asarray(out.n_dropped).sum())
+        demoted += int(np.asarray(out.n_probe_demoted).sum())
+    warm = sorted(times[measure_steps // 2:])
+    return {
+        "path": path, "workers": w, "nodes": nodes,
+        # best warm step: same-work comparisons on a shared CPU runner
+        # are far less jittery at the min than at the median (scheduler
+        # noise only ever ADDS time); the median rides along as context
+        "step_us": warm[0] * 1e6,
+        "step_us_p50": warm[len(warm) // 2] * 1e6,
+        "rollbacks": rollbacks,
+        "dropped": dropped, "demoted": demoted,
+        "fanouts": list(fo), "capacity_slack": slack,
+        "cache_rows": cfg.n_rows, "assoc": cfg.assoc,
+        "hit_cap": cfg.hit_cap, "wire": cfg.wire,
+    }
+
+
+def sweep(*, smoke: bool = False, workers: int = 4,
+          seed: int = 0) -> dict:
+    """The ladder and autotune cells, each in a fresh interpreter."""
+    nodes = 4000 if smoke else 20_000
+    results = [
+        _run_cell(dict(path=p, workers=workers, nodes=nodes, seed=seed))
+        for p in ("ladder", "autotune")
+    ]
+    ladder, tuned = results
+    return {
+        "benchmark": "autotune",
+        "workers": workers,
+        "nodes": nodes,
+        "parity_ratio_gate": PARITY_RATIO,
+        "step_ratio": tuned["step_us"] / ladder["step_us"],
+        "results": results,
+    }
+
+
+def bench() -> list:
+    """Harness entry (benchmarks.run): smoke-size sweep, CSV rows
+    (``us_per_call`` is the cell's best warm step time)."""
+    rec = sweep(smoke=True, workers=4)
+    return [
+        (f"autotune_{r['path']}", r["step_us"],
+         f"rollbacks={r['rollbacks']},dropped={r['dropped']},"
+         f"slack={r['capacity_slack']},hit_cap={r['hit_cap']},"
+         f"rows={r['cache_rows']}")
+        for r in rec["results"]
+    ]
+
+
+def main() -> None:
+    """CLI: run the sweep, print CSV rows, enforce the autotune gates."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes (the CI configuration)")
+    ap.add_argument("--workers", type=int, default=4,
+                    help="forced host devices (the W=4 smoke gate)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write JSON here")
+    ap.add_argument("--cell", default=None,
+                    help="(internal) measure one cell from a JSON spec "
+                         "and print its result — how sweep() isolates "
+                         "cells in fresh interpreters")
+    args = ap.parse_args()
+    if args.cell:
+        print(json.dumps(measure(**json.loads(args.cell))))
+        return
+
+    rec = sweep(smoke=args.smoke, workers=args.workers, seed=args.seed)
+    print("name,us_per_call,derived")
+    for r in rec["results"]:
+        print(f"autotune_{r['path']},{r['step_us']:.1f},"
+              f"rollbacks={r['rollbacks']},dropped={r['dropped']},"
+              f"demoted={r['demoted']},fanouts={r['fanouts']},"
+              f"slack={r['capacity_slack']},rows={r['cache_rows']},"
+              f"hit_cap={r['hit_cap']}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"wrote {args.out}", file=sys.stderr)
+
+    ladder, tuned = rec["results"]
+    failed = False
+    # zero-rollback gate: on the smoke graph the floored grid must only
+    # offer picks the live validator accepts — a rollback means the
+    # model proposed a config the traced workload already overflowed
+    if tuned["rollbacks"] != 0:
+        print(f"WARNING: autotune rolled back to the ladders "
+              f"{tuned['rollbacks']} time(s) on the smoke graph — the "
+              f"observed_floors grid filter is not doing its job",
+              file=sys.stderr)
+        failed = True
+    # parity gate: the offline search must not trade the ladders'
+    # device probes for a slower pick (ratio-based: runner drift
+    # cannot flip it)
+    if rec["step_ratio"] > PARITY_RATIO:
+        print(f"WARNING: model-picked config is "
+              f"{rec['step_ratio']:.3f}x the ladder-picked step time "
+              f"(> {PARITY_RATIO}x gate): ladder "
+              f"{ladder['step_us']:.0f}us vs autotune "
+              f"{tuned['step_us']:.0f}us", file=sys.stderr)
+        failed = True
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

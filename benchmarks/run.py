@@ -20,9 +20,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from . import (feature_cache, gen_throughput, host_fetch, kernel_bench,
-                   load_balance, padding_and_dropping, pipeline_overlap,
-                   serve_latency, tree_reduce_bench)
+    from . import (autotune, feature_cache, gen_throughput, host_fetch,
+                   kernel_bench, load_balance, padding_and_dropping,
+                   pipeline_overlap, serve_latency, tree_reduce_bench)
 
     suites = {
         "gen_throughput": lambda: gen_throughput.bench(scale=False),
@@ -34,6 +34,7 @@ def main() -> None:
         "feature_cache": feature_cache.bench,
         "host_fetch": host_fetch.bench,
         "serve_latency": serve_latency.bench,
+        "autotune": autotune.bench,
     }
     if args.scale:
         suites["gen_throughput_1M"] = lambda: gen_throughput.bench(scale=True)

@@ -9,7 +9,7 @@ is touched at import time.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 #: cache associativities the probe/insert paths implement, the cache
 #: placement modes, and the shard-probe wire formats — defined HERE
@@ -191,6 +191,23 @@ class ModelConfig:
         # drops the L1 knobs outside tiered mode, and the strict check
         # lives in CacheConfig.validated() where the policy is final
 
+    def with_candidate(self, cand: "TuneCandidate") -> "ModelConfig":
+        """Self with an autotuner ``TuneCandidate`` applied — the config
+        re-jit seam.
+
+        Returns a new ``ModelConfig`` whose generation knobs (fanouts,
+        cache sizes, associativity, hit cap, capacity slack) are replaced
+        by the candidate's; everything else (model dims, placement mode,
+        wire format, feature store) is untouched.  ``__post_init__``
+        re-validates, so an infeasible candidate raises here — before
+        anything is compiled against it.  The launcher rebuilds
+        ``CacheConfig.from_model`` + the generator from the result;
+        nothing downstream knows the config came from a search."""
+        return dataclasses.replace(
+            self, fanouts=tuple(cand.fanouts), cache_rows=cand.cache_rows,
+            cache_l1_rows=cand.l1_rows, cache_assoc=cand.assoc,
+            cache_hit_cap=cand.hit_cap, capacity_slack=cand.capacity_slack)
+
     @property
     def resolved_head_dim(self) -> int:
         """Per-head attention dim: ``head_dim`` when set explicitly,
@@ -333,6 +350,29 @@ class MeshConfig:
 PEAK_FLOPS_BF16 = 197e12        # per chip, FLOP/s
 HBM_BW = 819e9                  # bytes/s per chip
 ICI_BW = 50e9                   # bytes/s per link
+PCIE_BW = 16e9                  # bytes/s host<->device (PCIe gen4 x16) —
+                                # the L3 host-gather term of the roofline
+
+
+class TuneCandidate(NamedTuple):
+    """One point of the autotuner's joint search space (jax-free).
+
+    The knobs the profile-driven autotuner (``launch/autotune.py``)
+    searches jointly against its trace-fit cost model: the per-hop
+    fanout shape, the cache-tier sizes, the set associativity, the
+    compact-wire payload bound, and the exchange capacity slack.  A
+    candidate is pure data — applying one to a ``ModelConfig``
+    (``ModelConfig.with_candidate``) or a ``CacheConfig`` is THE re-jit
+    seam: the launcher rebuilds the generator from the replaced config,
+    nothing else changes.
+    """
+    fanouts: Tuple[int, ...]    # per-hop fanout shape (workload-defining:
+                                # the default grid pins it to the config's)
+    cache_rows: int             # main-tier (L2) cache slots per worker
+    l1_rows: int                # tiered mode: replicated L1 slots (0 else)
+    assoc: int                  # cache ways per set, in VALID_CACHE_ASSOC
+    hit_cap: int                # compact-wire payload bound (0 = auto)
+    capacity_slack: float       # exchange-capacity slack factor
 
 
 @dataclasses.dataclass(frozen=True)

@@ -356,6 +356,30 @@ class CacheStats(NamedTuple):
                              # store (store="host" only, else 0; the
                              # async gather lands their rows a step later)
 
+    @classmethod
+    def zero(cls) -> "CacheStats":
+        """An all-zero ``CacheStats`` (python ints — combines with either
+        host-side window accumulators or device scalars)."""
+        return cls(*(0,) * len(cls._fields))
+
+    def combine(self, other: "CacheStats") -> "CacheStats":
+        """Merge two windows' telemetry into one window's.
+
+        Every counter is additive EXCEPT ``probe_hit_peak``, which is a
+        per-round maximum — summing it across a window would report a
+        peak no single probe round ever produced, and the hit-cap
+        calibration (and the autotuner's demotion term) would then bound
+        a payload that does not exist.  This is the per-window
+        stat-splitting primitive: the trace recorder keeps per-step
+        records and folds a window (cold half, warm half, whole run)
+        with ``combine`` instead of re-measuring it."""
+        vals = [a + b for a, b in zip(self[:-2], other[:-2])]
+        peak = (jnp.maximum(self.probe_hit_peak, other.probe_hit_peak)
+                if isinstance(self.probe_hit_peak, jax.Array)
+                or isinstance(other.probe_hit_peak, jax.Array)
+                else max(self.probe_hit_peak, other.probe_hit_peak))
+        return CacheStats(*vals, peak, self.n_l3_hits + other.n_l3_hits)
+
 
 def hash_slots(ids: jax.Array, n_sets: int) -> jax.Array:
     """Set index of each id: top bits of the multiplicative hash.

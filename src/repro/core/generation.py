@@ -158,6 +158,22 @@ class FetchStats(NamedTuple):
                             # bytes of the host-store staging round trip
                             # (0 = device-resident feature table)
 
+    @classmethod
+    def zero(cls) -> "FetchStats":
+        """An all-zero ``FetchStats`` (python ints — combines with either
+        host-side window accumulators or device scalars)."""
+        return cls(*(0,) * len(cls._fields))
+
+    def combine(self, other: "FetchStats") -> "FetchStats":
+        """Merge two windows' fetch telemetry into one window's.
+
+        Every ``FetchStats`` field is additive (counts and byte totals),
+        so a window's stats are the fold of its per-step records — the
+        per-window stat-splitting primitive the trace recorder
+        (``launch/autotune.py``) uses to separate the cold burst from
+        the warm steady state without re-measuring either."""
+        return FetchStats(*(a + b for a, b in zip(self, other)))
+
 
 def local_candidates(
     indptr: jax.Array,
@@ -1014,6 +1030,7 @@ def _worker_generate(
     feature_store: str = "device",
     feat_dim: Optional[int] = None,
     host_admit=None,         # (ids [S], rows [S, D]) landed one step ago
+    collect_stats: bool = False,
 ):
     """One worker's slice of an L-hop generation round (runs in shard_map).
 
@@ -1036,6 +1053,16 @@ def _worker_generate(
     The batch's staged feature slots are zero holes until the caller
     patches them with the landed host gather (``patch_batch``); labels
     stay device-resident either way.
+
+    With ``collect_stats=True`` (the autotuner's trace seam) the return
+    grows a ``(FetchStats, CacheStats)`` tail: the feature shuffle's
+    per-worker telemetry, normally folded into the few ``SubgraphBatch``
+    counters, rides out whole so the trace recorder can keep per-step
+    records.  Uncached runs ship a synthesized ``CacheStats`` whose only
+    nonzero field is the conservation remainder (``n_misses`` for the
+    device store, ``n_l3_hits`` for staged host fetches), so the
+    invariant ``n_l1 + n_local + n_shard + n_l3 + n_misses ==
+    n_distinct`` holds for every traced configuration.
     """
     b = seeds.shape[0]
     me = lax.axis_index(axis_name)
@@ -1145,6 +1172,27 @@ def _worker_generate(
         n_cache_misses=n_misses[None],
         n_probe_demoted=n_demoted[None],
     )
+    if collect_stats:
+        if cache is None:
+            # synthesize the cache-tier view of an uncached fetch so the
+            # trace's conservation check holds: every distinct id either
+            # routed to its owner (device store -> n_misses) or staged
+            # for the L3 gather (host store -> n_l3_hits)
+            z = jnp.int32(0)
+            cstats = CacheStats(
+                n_hits=z, n_misses=z if host else fstats.n_unique,
+                n_inserted=z, bytes_saved=z, n_local_hits=z,
+                n_shard_hits=z, n_l1_hits=z, n_probe_demoted=z,
+                probe_hit_peak=z,
+                n_l3_hits=fstats.n_unique if host else z)
+        stats = (fstats, cstats)
+        if cache is not None and req is not None:
+            return batch, cache, req, stats
+        if cache is not None:
+            return batch, cache, stats
+        if req is not None:
+            return batch, req, stats
+        return batch, stats
     if cache is not None and req is not None:
         return batch, cache, req
     if cache is not None:
@@ -1175,6 +1223,7 @@ def make_generator_fn(
     fetch_capacity: Optional[int] = None,
     feature_store: str = "device",
     feat_dim: Optional[int] = None,
+    collect_stats: bool = False,
 ):
     """Pure generator function (no data placement — dry-run lowerable).
 
@@ -1210,7 +1259,13 @@ def make_generator_fn(
     cache is a read-only input (probed, never admitted into, and not
     returned: read-mostly state has no next version to thread), which is
     what lets the serving tier hold ONE warm state and replay it across
-    every request without carry plumbing."""
+    every request without carry plumbing.
+
+    With ``collect_stats=True`` every signature's return grows a stacked
+    ``(FetchStats, CacheStats)`` tail (leaves ``[W]``-leading, sharded
+    ``P(axis_name)``) — the instrumented form the autotuner's trace
+    recorder compiles.  Not available on the frozen serve form (the
+    request path ships answers, not telemetry)."""
     if not fanouts:
         raise ValueError("fanouts must name at least one hop, got ()")
     if feature_store not in ("device", "host"):
@@ -1230,6 +1285,10 @@ def make_generator_fn(
         raise ValueError('a frozen (read-mostly serve) cache cannot ride '
                          'the L3 staging path — build the serve generator '
                          'with feature_store="device"')
+    if frozen and collect_stats:
+        raise ValueError('collect_stats instruments the training-path '
+                         'generator; the frozen serve form ships answers, '
+                         'not telemetry — trace before serve_view()')
     if cached:
         cache_cfg = cache_cfg.validated()
         if cache_cfg.store != feature_store:
@@ -1242,16 +1301,34 @@ def make_generator_fn(
         merge_mode=merge_mode, capacity_slack=capacity_slack,
         cache_cfg=cache_cfg if cached else None,
         fetch_capacity=fetch_capacity,
-        feature_store=feature_store, feat_dim=feat_dim)
+        feature_store=feature_store, feat_dim=feat_dim,
+        collect_stats=collect_stats)
+
+    # the instrumented (collect_stats) form appends the per-worker
+    # (FetchStats, CacheStats) pytree, restored to a [W] leading axis
+    # exactly like the cache state; each wrapper/spec grows the same tail
+    def _stats_tail(stats):
+        return jax.tree.map(lambda a: a[None], stats)
+
+    def _specs(*base):
+        return base + ((P(axis_name),) if collect_stats else ())
 
     # shard_map blocks keep the sharded leading axis of size 1 per worker;
     # the wrappers drop it on the way in and restore it on the way out.
     def worker_fn(indptr, indices, xs, ys, seeds, rng):
-        return worker_gen(indptr[0], indices[0], xs, ys, seeds[0], rng)
+        out = worker_gen(indptr[0], indices[0], xs, ys, seeds[0], rng)
+        if collect_stats:
+            batch, stats = out
+            return batch, _stats_tail(stats)
+        return out
 
     def worker_fn_cached(indptr, indices, xs, ys, seeds, rng, cache):
-        batch, cache = worker_gen(indptr[0], indices[0], xs, ys, seeds[0],
-                                  rng, squeeze_worker_axis(cache))
+        out = worker_gen(indptr[0], indices[0], xs, ys, seeds[0],
+                         rng, squeeze_worker_axis(cache))
+        if collect_stats:
+            batch, cache, stats = out
+            return batch, restore_worker_axis(cache), _stats_tail(stats)
+        batch, cache = out
         return batch, restore_worker_axis(cache)
 
     # forward-only serve form: the frozen admit stage already returns the
@@ -1266,16 +1343,26 @@ def make_generator_fn(
     # comes back stacked [W, ...] (out_specs P(axis_name), leading axis
     # restored the same way as the cache state)
     def worker_fn_host(indptr, indices, ys, seeds, rng):
-        batch, req = worker_gen(indptr[0], indices[0], None, ys, seeds[0],
-                                rng)
+        out = worker_gen(indptr[0], indices[0], None, ys, seeds[0], rng)
+        if collect_stats:
+            batch, req, stats = out
+            return (batch, jax.tree.map(lambda a: a[None], req),
+                    _stats_tail(stats))
+        batch, req = out
         return batch, jax.tree.map(lambda a: a[None], req)
 
     def worker_fn_host_cached(indptr, indices, ys, seeds, rng, cache,
                               adm_ids, adm_rows):
-        batch, cache, req = worker_gen(
+        out = worker_gen(
             indptr[0], indices[0], None, ys, seeds[0], rng,
             squeeze_worker_axis(cache),
             host_admit=(adm_ids[0], adm_rows[0]))
+        if collect_stats:
+            batch, cache, req, stats = out
+            return (batch, restore_worker_axis(cache),
+                    jax.tree.map(lambda a: a[None], req),
+                    _stats_tail(stats))
+        batch, cache, req = out
         return (batch, restore_worker_axis(cache),
                 jax.tree.map(lambda a: a[None], req))
 
@@ -1287,7 +1374,7 @@ def make_generator_fn(
                 mesh=mesh,
                 in_specs=(graph_spec, graph_spec, row_spec, graph_spec,
                           repl, P(axis_name), P(axis_name), P(axis_name)),
-                out_specs=(P(axis_name), P(axis_name), P(axis_name)),
+                out_specs=_specs(P(axis_name), P(axis_name), P(axis_name)),
                 check_rep=False,
             )(indptr, indices, ys, seeds, rng, cache, admit_ids,
               admit_rows)
@@ -1299,7 +1386,7 @@ def make_generator_fn(
                 mesh=mesh,
                 in_specs=(graph_spec, graph_spec, row_spec, graph_spec,
                           repl),
-                out_specs=(P(axis_name), P(axis_name)),
+                out_specs=_specs(P(axis_name), P(axis_name)),
                 check_rep=False,
             )(indptr, indices, ys, seeds, rng)
     elif cached and frozen:
@@ -1321,7 +1408,7 @@ def make_generator_fn(
                 mesh=mesh,
                 in_specs=(graph_spec, graph_spec, row_spec, row_spec,
                           graph_spec, repl, P(axis_name)),
-                out_specs=(P(axis_name), P(axis_name)),
+                out_specs=_specs(P(axis_name), P(axis_name)),
                 check_rep=False,
             )(indptr, indices, xs, ys, seeds, rng, cache)
     else:
@@ -1332,7 +1419,8 @@ def make_generator_fn(
                 mesh=mesh,
                 in_specs=(graph_spec, graph_spec, row_spec, row_spec,
                           graph_spec, repl),
-                out_specs=P(axis_name),
+                out_specs=(_specs(P(axis_name)) if collect_stats
+                           else P(axis_name)),
                 check_rep=False,
             )(indptr, indices, xs, ys, seeds, rng)
 
@@ -1353,6 +1441,7 @@ def make_distributed_generator(
     fetch_capacity: Optional[int] = None,
     feature_store: str = "device",
     host_gather_depth: int = 2,
+    collect_stats: bool = False,
 ):
     """Build the jitted distributed generator with data placed on the mesh.
 
@@ -1368,7 +1457,11 @@ def make_distributed_generator(
     ``host_gather_depth``); only the CSR and labels are placed on the
     mesh and the returns become ``(gen_fn, device_args, store)`` /
     ``(gen_fn, device_args, store, cache0)`` (see ``make_generator_fn``
-    for the host-mode ``gen_fn`` signature)."""
+    for the host-mode ``gen_fn`` signature).
+
+    ``collect_stats=True`` builds the instrumented (trace-recorder) form:
+    ``gen_fn`` additionally returns a stacked per-worker
+    ``(FetchStats, CacheStats)`` tail — see ``make_generator_fn``."""
     w = mesh.shape[axis_name]
     assert part.n_workers == w, (part.n_workers, w)
     host = feature_store == "host"
@@ -1377,7 +1470,8 @@ def make_distributed_generator(
         mesh, fanouts=fanouts, axis_name=axis_name, merge_mode=merge_mode,
         capacity_slack=capacity_slack, cache_cfg=cache_cfg,
         fetch_capacity=fetch_capacity, feature_store=feature_store,
-        feat_dim=int(features.shape[1]) if host else None)
+        feat_dim=int(features.shape[1]) if host else None,
+        collect_stats=collect_stats)
     spec = NamedSharding(mesh, P(axis_name))
     cached = cache_cfg is not None and cache_cfg.n_rows > 0
     if host:

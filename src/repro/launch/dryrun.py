@@ -66,7 +66,8 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
                    merge_mode: str = "butterfly",
                    cache_rows: int = None, cache_mode: str = None,
                    l1_rows: int = None, probe_wire: str = None,
-                   feature_store: str = None) -> dict:
+                   feature_store: str = None,
+                   collect_stats: bool = False) -> dict:
     """The paper's own workload at production scale: one synchronized
     generation+training step on a 530M-node / 5B-edge graph (the paper's
     evaluation graph).  The sampling depth comes from the arch config —
@@ -82,7 +83,13 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
     RAM), the carry grows the in-flight ``HostMissRequest``, and the
     step takes the landed ``[W, S, D]`` gather buffer — proving the
     issue/collect split partitions and compiles at production scale
-    WITHOUT materializing a 530M-row device table spec."""
+    WITHOUT materializing a 530M-row device table spec.
+
+    With ``collect_stats=True`` the cell lowers the autotuner's trace
+    recorder instead: the instrumented generator alone (the recorder
+    times it outside the train step), whose output grows the stacked
+    per-worker ``(FetchStats, CacheStats)`` tail — proving the
+    telemetry seam partitions and compiles at production scale too."""
     from ..core.feature_cache import CacheConfig, cache_state_specs
     from ..core.generation import make_generator_fn, probe_round_capacity
     from ..core.host_store import HostMissRequest
@@ -125,7 +132,8 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
                                capacity_slack=slack,
                                cache_cfg=cache_cfg,
                                feature_store=cfg.feature_store,
-                               feat_dim=cfg.gcn_in_dim if host else None)
+                               feat_dim=cfg.gcn_in_dim if host else None,
+                               collect_stats=collect_stats)
     tcfg = TrainConfig()
 
     def train_fn(params, opt, batch):
@@ -136,7 +144,30 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
     params = jax.eval_shape(lambda: gcn_mod.init_gcn(cfg, jax.random.PRNGKey(0)))
     opt = jax.eval_shape(lambda: init_adam(params))
     batch0 = batch_specs(w * b, fanouts, cfg.gcn_in_dim, n_workers=w)
-    if host:
+    if collect_stats:
+        # trace-recorder cell: the instrumented generator alone (the
+        # recorder drives it outside the train step, see
+        # repro.launch.autotune.record_trace)
+        if host:
+            device_args = (s((w, n_nodes + 1), i32), s((w, e_pad), i32),
+                           s((w * rows, 1), f32))
+        else:
+            device_args = (s((w, n_nodes + 1), i32), s((w, e_pad), i32),
+                           s((w * rows, cfg.gcn_in_dim), f32),
+                           s((w * rows, 1), f32))
+        gen_args = [device_args, seeds, rng]
+        if cached:
+            gen_args.append(cache_state_specs(cache_cfg, cfg.gcn_in_dim,
+                                              n_workers=w))
+        if host and cached:
+            r = b * slots_per_seed(fanouts)
+            stage = max(int(probe_round_capacity(r, 1, slack)), 1)
+            gen_args += [s((w, stage), i32),
+                         s((w, stage, cfg.gcn_in_dim), f32)]
+        t0 = time.time()
+        lowered = jax.jit(gen_fn).lower(*gen_args)
+        t_lower = time.time() - t0
+    elif host:
         # the runtime loop dispatches gen and patch+train as SEPARATE
         # programs (the gather must ride between them — see
         # pipeline.pipelined_loop); for the cost view, lower one
@@ -207,6 +238,7 @@ def lower_gcn_cell(rec: dict, arch: str, multi_pod: bool,
         cache_mode=cfg.cache_mode if cached else None,
         cache_l1_rows=cache_cfg.l1_rows if cached else 0,
         feature_store=cfg.feature_store,
+        collect_stats=collect_stats,
         tokens=w * b * slots_per_seed(fanouts),   # padded node slots per iter
     )
     return rec
@@ -219,7 +251,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                seq_parallel: bool = False, compress: bool = False,
                cache_rows: int = None, cache_mode: str = None,
                l1_rows: int = None, probe_wire: str = None,
-               feature_store: str = None) -> dict:
+               feature_store: str = None,
+               collect_stats: bool = False) -> dict:
     cfg = get_config(arch)
     rec = {
         "arch": arch, "shape": shape_name,
@@ -231,7 +264,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         return lower_gcn_cell(rec, arch, multi_pod, merge_mode=gen_merge,
                               cache_rows=cache_rows, cache_mode=cache_mode,
                               l1_rows=l1_rows, probe_wire=probe_wire,
-                              feature_store=feature_store)
+                              feature_store=feature_store,
+                              collect_stats=collect_stats)
     shape = SHAPES[shape_name]
     rec["kind"] = shape.kind
     if shape_name == "long_500k" and arch not in SUBQUADRATIC:
@@ -367,6 +401,11 @@ def main() -> None:
                     help="GCN cells: feature-table placement override — "
                          "host lowers the L3 issue/collect path with NO "
                          "device feature table in the arg specs")
+    ap.add_argument("--collect-stats", action="store_true",
+                    help="GCN cells: lower the autotuner's instrumented "
+                         "trace-recorder generator (the stacked "
+                         "FetchStats/CacheStats telemetry tail) instead "
+                         "of the train step")
     ap.add_argument("--out", default=None, help="append JSONL here")
     args = ap.parse_args()
     rec = lower_cell(args.arch, args.shape, args.multi_pod,
@@ -376,7 +415,8 @@ def main() -> None:
                      compress=args.compress, cache_rows=args.cache_rows,
                      cache_mode=args.cache_mode, l1_rows=args.l1_rows,
                      probe_wire=args.probe_wire,
-                     feature_store=args.feature_store)
+                     feature_store=args.feature_store,
+                     collect_stats=args.collect_stats)
     line = json.dumps(rec)
     print(line)
     if args.out:

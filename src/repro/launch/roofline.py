@@ -19,20 +19,44 @@ import argparse
 import json
 from collections import defaultdict
 
-from ..core.config import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from ..core.config import HBM_BW, ICI_BW, PCIE_BW, PEAK_FLOPS_BF16
 
 # one decode step generates 1 token/sequence; 6*N_active*tokens is the
 # model-flops floor for train (fwd+bwd); 2*N_active for forward-only.
 _FWD_BWD = {"train": 6.0, "prefill": 2.0, "decode": 2.0}
 
 
+def roofline_terms(flops_per_device: float, hbm_bytes_per_device: float,
+                   wire_bytes_per_device: float,
+                   host_gather_bytes: float = 0.0) -> dict:
+    """Per-device roofline time terms (seconds) for one step.
+
+    The shared seam between the dry-run sweep analysis and the
+    autotuner's offline cost model: compute against ``PEAK_FLOPS_BF16``,
+    HBM traffic against ``HBM_BW``, collective wire bytes against
+    ``ICI_BW``, and the L3 host-gather term against ``PCIE_BW``.  Any
+    count may be zero; every term is non-negative."""
+    return {
+        "compute": max(float(flops_per_device), 0.0) / PEAK_FLOPS_BF16,
+        "memory": max(float(hbm_bytes_per_device), 0.0) / HBM_BW,
+        "collective": max(float(wire_bytes_per_device), 0.0) / ICI_BW,
+        "host": max(float(host_gather_bytes), 0.0) / PCIE_BW,
+    }
+
+
+def step_lower_bound(terms: dict) -> float:
+    """Step-time lower bound from roofline terms: ``max`` over terms —
+    the perfect-overlap assumption the sweep tables already use."""
+    return max(terms.values()) if terms else 0.0
+
+
 def analyse(rec: dict) -> dict | None:
     if rec.get("status") != "ok":
         return None
     chips = rec["chips"]
-    comp = rec["flops_per_device"] / PEAK_FLOPS_BF16
-    mem = rec["bytes_per_device"] / HBM_BW
-    coll = rec["collective_bytes_per_device"]["total"] / ICI_BW
+    terms = roofline_terms(rec["flops_per_device"], rec["bytes_per_device"],
+                           rec["collective_bytes_per_device"]["total"])
+    comp, mem, coll = terms["compute"], terms["memory"], terms["collective"]
     terms = {"compute": comp, "memory": mem, "collective": coll}
     dominant = max(terms, key=terms.get)
     model_flops = (
@@ -40,7 +64,7 @@ def analyse(rec: dict) -> dict | None:
     )
     hlo_global = rec["flops_per_device"] * chips
     useful = model_flops / hlo_global if hlo_global else 0.0
-    bound = max(terms.values())
+    bound = step_lower_bound(terms)
     mfu_bound = (model_flops / chips / PEAK_FLOPS_BF16) / bound if bound else 0.0
     return {
         **rec,

@@ -241,9 +241,36 @@ def train_gcn(args) -> dict:
         cols = (np.arange(b) + t * b) % sw.shape[1]
         return jnp.asarray(sw[:, cols])
 
+    # --- profile-driven autotune: one trace + offline search replaces
+    # the serial calibration ladders; the ladders survive below as the
+    # fallback path the validator rolls back to on rejection ------------
+    autotuned = None
+    if args.autotune:
+        from .autotune import autotune_gcn, candidate_cache_cfg
+        at_rngs = jax.random.split(jax.random.PRNGKey(args.seed + 2),
+                                   max(args.autotune_steps, 1))
+        res = autotune_gcn(
+            mesh, part, feats, labels, fanouts=fanouts,
+            cache_cfg=cache_cfg, feature_store=cfg.feature_store,
+            batch_per_worker=b, seeds_for=seeds_for, rngs=at_rngs,
+            steps=args.autotune_steps,
+            slack=(args.capacity_slack or cfg.capacity_slack or 2.0))
+        if res.accepted:
+            autotuned = res
+            cand = res.candidate
+            cfg = cfg.with_candidate(cand)
+            fanouts = cfg.fanouts
+            if cached:
+                cache_cfg = candidate_cache_cfg(cache_cfg, cand)
+            print(f"autotune: accepted (measured "
+                  f"{res.measured_step_s * 1e3:.1f} ms/step warm)")
+        else:
+            print(f"autotune: WARNING — falling back to the calibration "
+                  f"ladders ({res.reason})")
+
     need_slack_cal = (args.capacity_slack is None
                       and cfg.capacity_slack is None and w > 1
-                      and not host)
+                      and not host and autotuned is None)
     # the compact probe wire needs a hit_cap; calibrate one unless the
     # config pins it or --probe-hit-cap was given (any explicit value —
     # including 0, which selects the uncalibrated half-capacity auto
@@ -253,7 +280,7 @@ def train_gcn(args) -> dict:
                     and cache_cfg.wire == "compact"
                     and cache_cfg.hit_cap == 0
                     and args.probe_hit_cap is None
-                    and not host)
+                    and not host and autotuned is None)
     cal_args = probes = None
     if need_slack_cal or need_hit_cap:
         # place the graph+tables once; every ladder rung (slack AND
@@ -601,6 +628,16 @@ def main() -> None:
                     help="host store gather pipeline depth: 2 overlaps the "
                          "gather with the compute step (default), 1 "
                          "gathers synchronously (the overlap-off baseline)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="replace the serial calibration ladders with one "
+                         "instrumented trace window + an offline cost-model "
+                         "search over (fanouts, cache_rows, l1_rows, assoc, "
+                         "hit_cap, capacity_slack); a live validator "
+                         "accepts the pick or falls back to the ladders")
+    ap.add_argument("--autotune-steps", type=int, default=8,
+                    help="instrumented steps the autotune trace records "
+                         "(the cold half is excluded from the fit; fewer "
+                         "than 4 degrades to the calibration ladders)")
     ap.add_argument("--warm-recalibrate", type=int, default=0,
                     help="after N warm steps, shrink the owner-exchange "
                          "capacity to the observed steady-state cache-miss "

@@ -1,0 +1,474 @@
+"""Autotuner contract tests (``repro.launch.autotune``).
+
+Three layers:
+
+* pure-python trace/model contracts on SYNTHETIC traces built so
+  ``Trace.violations()`` holds by construction (byte fields come from
+  ``static_wire_bytes`` — the same formulas the live telemetry obeys):
+  consistency checking, the cold-half/short-window edges, and the
+  property-tested prediction contract (bytes monotone in capacity, step
+  time positive/finite over the whole grid, bit-identical replay);
+
+* the ``autotune_gcn`` fallback mapping with a monkeypatched
+  instrumented run: corrupted trace -> rejected, short trace ->
+  rejected, live validator drop -> rejected, clean run -> accepted;
+
+* a W=4 differential subprocess: a REAL trace's warm telemetry must be
+  reproduced exactly by the model's anchor prediction, and the
+  predicted step time must hold against a live re-measure within the
+  validator tolerance.  Plus the launcher degradation path: ``--autotune``
+  with a too-short window warns and falls back to the ladders.
+
+The property tests run under ``tests/_hypothesis_stub.py`` when
+hypothesis is not installed.
+"""
+from __future__ import annotations
+
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.launch.autotune as at
+from repro.core.config import TuneCandidate
+from repro.core.feature_cache import CacheConfig
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# synthetic traces: consistent by construction
+# ---------------------------------------------------------------------------
+
+def _tc(mode="sharded", store="device", fanouts=(3, 2), w=4, b=8,
+        rows=256, l1=32, assoc=2, hit_cap=9, slack=1.0,
+        wire="compact") -> at.TracedConfig:
+    cached = mode is not None
+    return at.TracedConfig(
+        fanouts=tuple(fanouts), n_workers=w, batch_per_worker=b,
+        feat_dim=16, itemsize=4, mode=mode,
+        cache_rows=rows if cached else 0,
+        l1_rows=l1 if mode == "tiered" else 0,
+        assoc=assoc if cached else 1, wire=wire,
+        hit_cap=hit_cap if cached else 0,
+        capacity_slack=slack, store=store)
+
+
+def _cache_cfg(tc: at.TracedConfig):
+    if tc.mode is None:
+        return None
+    return CacheConfig(n_rows=tc.cache_rows, mode=tc.mode, assoc=tc.assoc,
+                       l1_rows=tc.l1_rows, wire=tc.wire,
+                       hit_cap=tc.hit_cap, store=tc.store).validated()
+
+
+def _trace(tc: at.TracedConfig, steps=8, hit_frac=0.5,
+           wall=2e-3) -> at.Trace:
+    """A synthetic instrumented window whose records satisfy every
+    conservation identity: tier hits sum to hits, unique == routed or
+    staged, and the byte fields are the static wire formulas verbatim
+    (first step on the host-admit empty_admit prologue buffer)."""
+    probe, gather, admit = at.static_wire_bytes(tc, tc.candidate())
+    w, d, item = tc.n_workers, tc.feat_dim, tc.itemsize
+    admit0 = w * 1 * (4 + d * item) if admit else 0
+    r_all = w * at._requests_per_worker(tc.fanouts, tc.batch_per_worker)
+    cached = tc.mode is not None and tc.cache_rows > 0
+    recs = []
+    for t in range(steps):
+        distinct = max(r_all // 2, 1)
+        hits = int(distinct * hit_frac) if cached else 0
+        rest = distinct - hits
+        l1 = hits // 3 if tc.mode == "tiered" else 0
+        local = (hits - l1) // 2
+        shard = hits - l1 - local
+        l3, misses = (rest, 0) if tc.store == "host" else (0, rest)
+        recs.append(at.TraceRecord(
+            n_requests=r_all, n_unique=l3 if tc.store == "host" else misses,
+            n_dropped=0,
+            probe_round_bytes=w * (probe + (admit0 if t == 0 else admit)),
+            host_gather_bytes=w * gather,
+            n_hits=hits, n_misses=misses, n_l1_hits=l1, n_local_hits=local,
+            n_shard_hits=shard, n_l3_hits=l3, n_probe_demoted=0,
+            probe_hit_peak=max(hits // (w * w), 1) if hits else 0,
+            # the cold half is visibly slower so the exclusion matters
+            wall_time_s=wall * (3.0 if t < steps // 2 else 1.0)))
+    return at.Trace(config=tc, records=tuple(recs))
+
+
+@pytest.mark.parametrize("tc", [
+    _tc(),                                             # sharded / device
+    _tc(mode="tiered"),                                # tiered / device
+    _tc(mode="replicated"),                            # no probe round
+    _tc(mode="sharded", store="host"),                 # L3 admit pipeline
+    _tc(mode=None, store="host"),                      # uncached host
+    _tc(mode=None, w=1),                               # single worker
+    _tc(wire="dense", hit_cap=0),                      # dense probe wire
+], ids=["sharded", "tiered", "replicated", "host-cached", "host-uncached",
+        "w1-uncached", "dense"])
+def test_synthetic_trace_is_consistent(tc):
+    tr = _trace(tc)
+    assert tr.violations() == ()
+    tr.validate()                                      # must not raise
+    assert len(tr.warm_records()) == len(tr.records) // 2
+
+
+def test_violations_catch_each_corruption_class():
+    tr = _trace(_tc(store="host"))
+
+    def corrupt(**kw):
+        recs = (tr.records[0],) + (tr.records[1]._replace(**kw),) \
+            + tr.records[2:]
+        return at.Trace(config=tr.config, records=recs)
+
+    r = tr.records[1]
+    cases = {
+        "negative": corrupt(n_hits=-1),
+        "wall": corrupt(wall_time_s=0.0),
+        "nan wall": corrupt(wall_time_s=float("nan")),
+        "tier sum": corrupt(n_local_hits=r.n_local_hits + 1),
+        "unique": corrupt(n_unique=r.n_unique + 1),
+        "requests": corrupt(n_requests=r.n_requests + 1),
+        "probe bytes": corrupt(probe_round_bytes=r.probe_round_bytes + 1),
+        "gather bytes": corrupt(host_gather_bytes=r.host_gather_bytes + 1),
+        "distinct": corrupt(n_l3_hits=r.n_requests + 5,
+                            n_unique=r.n_requests + 5),
+    }
+    for name, bad in cases.items():
+        assert bad.violations(), f"{name} corruption went undetected"
+        with pytest.raises(at.TraceInconsistent):
+            at.CostModel.fit(bad)
+    # strict=False skips the consistency gate (count corruptions only)
+    at.CostModel.fit(cases["probe bytes"], strict=False)
+
+
+@pytest.mark.parametrize("steps", [0, 1, 3])
+def test_fit_rejects_short_windows(steps):
+    """Empty window, a window whose warm half is empty, and a window
+    shorter than MIN_TRACE_STEPS (the cold burst would dominate) all
+    refuse to fit — the launcher then degrades to the ladders."""
+    tr = _trace(_tc(), steps=steps)
+    assert len(tr.records) == steps
+    with pytest.raises(at.TraceTooShort):
+        at.CostModel.fit(tr)
+
+
+def test_fit_accepts_minimum_window():
+    model = at.CostModel.fit(_trace(_tc(), steps=at.MIN_TRACE_STEPS))
+    assert model.steps == at.MIN_TRACE_STEPS // 2
+
+
+# ---------------------------------------------------------------------------
+# the prediction contract at the anchor
+# ---------------------------------------------------------------------------
+
+def test_anchor_prediction_is_exact():
+    """Predicting the traced candidate reproduces the warm-window sums,
+    the measured static bytes, and the traced mean step time EXACTLY —
+    the differential-test contract, here on a synthetic trace."""
+    tc = _tc(mode="tiered")
+    tr = _trace(tc)
+    model = at.CostModel.fit(tr)
+    warm = tr.warm_records()
+    p = model.predict(tc.candidate())
+    assert p.n_hits == sum(r.n_hits for r in warm)
+    assert p.n_l1_hits == sum(r.n_l1_hits for r in warm)
+    assert p.n_misses == sum(r.n_misses for r in warm)
+    assert p.n_distinct == sum(r.n_distinct() for r in warm)
+    assert p.step_time_s == model.wall_mean_s
+    probe, gather, _ = at.static_wire_bytes(tc, tc.candidate())
+    assert p.probe_round_bytes == probe
+    assert p.host_gather_bytes == gather
+    # the cold half is excluded: the mean must be the warm 1x wall, not
+    # the 3x cold wall the first half of the window carries
+    assert model.wall_mean_s == pytest.approx(2e-3)
+
+
+def test_host_trace_feeds_the_gather_term():
+    """A host-store trace routes the miss residue to the L3 tier and its
+    PCIe gather bytes enter the prediction (the roofline host term)."""
+    tc = _tc(mode="sharded", store="host")
+    tr = _trace(tc)
+    assert all(r.host_gather_bytes > 0 for r in tr.records)
+    model = at.CostModel.fit(tr)
+    warm = tr.warm_records()
+    p = model.predict(tc.candidate())
+    assert p.host_gather_bytes > 0
+    assert p.n_l3_hits == sum(r.n_l3_hits for r in warm)
+    assert p.n_misses == 0.0
+    from repro.core.config import PCIE_BW
+    assert p.cost_s >= p.host_gather_bytes / PCIE_BW
+
+
+# ---------------------------------------------------------------------------
+# property tests: the model contract over the search space
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(["replicated", "sharded", "tiered"]),
+       st.sampled_from([(2, 2), (3, 2), (4, 3)]),
+       st.integers(5, 9),                   # log2 traced cache rows
+       st.sampled_from([1, 2, 4]),
+       st.integers(0, 24),                  # traced hit_cap (0 = auto)
+       st.sampled_from([0.5, 1.0, 2.0]))
+def test_predicted_bytes_monotone_in_capacity(mode, fanouts, log_rows,
+                                              assoc, hit_cap, slack):
+    """More cache capacity can never cost wire bytes: predicted misses,
+    interconnect bytes, and step time are monotone non-increasing in
+    cache_rows (and in l1_rows for the tiered mode) with every other
+    knob held at the traced point."""
+    tc = _tc(mode=mode, fanouts=fanouts, rows=2 ** log_rows,
+             l1=max(2 ** (log_rows - 3), 1), assoc=assoc,
+             hit_cap=hit_cap, slack=slack)
+    model = at.CostModel.fit(_trace(tc))
+    base = tc.candidate()
+    preds = [model.predict(base._replace(cache_rows=2 ** k))
+             for k in range(3, 13)]
+    for a, b in zip(preds, preds[1:]):
+        assert b.n_misses <= a.n_misses + 1e-9
+        assert b.wire_bytes <= a.wire_bytes + 1e-9
+        assert b.step_time_s <= a.step_time_s + 1e-9
+    if mode == "tiered":
+        preds = [model.predict(base._replace(l1_rows=2 ** k))
+                 for k in range(0, 8)]
+        for a, b in zip(preds, preds[1:]):
+            assert b.wire_bytes <= a.wire_bytes + 1e-9
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(["replicated", "sharded", "tiered", None]),
+       st.integers(5, 8),                   # log2 traced cache rows
+       st.sampled_from([0.5, 1.0, 2.0]))
+def test_grid_predictions_positive_finite_and_replay_deterministic(
+        mode, log_rows, slack):
+    """Over the WHOLE candidate grid: every predicted step time is
+    strictly positive and finite, and two independent fits of the same
+    trace replay every candidate bit-identically (no wall clocks, no
+    RNG inside the model)."""
+    tc = _tc(mode=mode, rows=2 ** log_rows,
+             l1=max(2 ** (log_rows - 3), 1), slack=slack)
+    cfg = _cache_cfg(tc)
+    grid = at.candidate_grid(tc, cfg)
+    assert grid
+    m1 = at.CostModel.fit(_trace(tc))
+    m2 = at.CostModel.fit(_trace(tc))
+    for cand in grid:
+        p1, p2 = m1.predict(cand), m2.predict(cand)
+        assert p1.step_time_s > 0.0 and math.isfinite(p1.step_time_s)
+        assert p1.cost_s > 0.0 and math.isfinite(p1.cost_s)
+        assert p1 == p2                     # bit-identical replay
+    best1, ranked1 = at.search(m1, grid)
+    best2, ranked2 = at.search(m2, grid)
+    assert best1 == best2 and ranked1 == ranked2
+
+
+def test_observed_floors_bound_the_grid():
+    """Every compact-wire hit cap the floored grid offers carries the
+    traced per-destination hit peak, SCALED by the candidate's
+    effective-capacity growth (more cache rows -> more hits -> higher
+    peaks); the never-demoting full-capacity cap always survives, so
+    the floor can narrow the grid but never empty it."""
+    from repro.core.generation import probe_round_capacity
+
+    tc = _tc()
+    tr = _trace(tc)
+    floors = at.observed_floors(tr)
+    assert floors["hit_peak"] > 0
+    grid = at.candidate_grid(tc, _cache_cfg(tc), floors=floors)
+    open_grid = at.candidate_grid(tc, _cache_cfg(tc))
+    assert grid and len(grid) < len(open_grid)
+    e0 = at._effective_capacity(tc, tc.cache_rows, tc.assoc)
+    for cand in grid:
+        cap = probe_round_capacity(
+            at._requests_per_worker(cand.fanouts, tc.batch_per_worker),
+            tc.n_workers, cand.capacity_slack)
+        e = at._effective_capacity(tc, cand.cache_rows, cand.assoc)
+        hp = min(math.ceil(floors["hit_peak"] * max(e / e0, 1.0)), cap)
+        hc = cap // 2 if cand.hit_cap == 0 else min(cand.hit_cap, cap)
+        assert hc >= hp, (cand, cap, hp)
+    # an absurd traced peak still leaves the full-capacity caps standing
+    tall = at.candidate_grid(tc, _cache_cfg(tc),
+                             floors={"hit_peak": 10 ** 6})
+    assert tall
+    for cand in tall:
+        cap = probe_round_capacity(
+            at._requests_per_worker(cand.fanouts, tc.batch_per_worker),
+            tc.n_workers, cand.capacity_slack)
+        assert cand.hit_cap >= cap
+
+
+# ---------------------------------------------------------------------------
+# autotune_gcn fallback mapping (instrumented run monkeypatched out)
+# ---------------------------------------------------------------------------
+
+class _Mesh:
+    shape = {"data": 4}
+
+
+def _run_autotune(monkeypatch, traces, **kw):
+    """Drive autotune_gcn against canned traces: the first feeds the
+    fit; the rest play the live-validator windows of the ranked walk,
+    repeating the last trace if the walk visits more picks."""
+    queue = list(traces)
+    monkeypatch.setattr(
+        at, "_instrumented_run",
+        lambda mesh, part, feats, labels, tc, cache_cfg, probes:
+            queue.pop(0) if len(queue) > 1 else queue[0])
+    tc = _tc()
+    feats = np.zeros((64, tc.feat_dim), np.float32)
+    return at.autotune_gcn(
+        _Mesh(), None, feats, None, fanouts=tc.fanouts,
+        cache_cfg=_cache_cfg(tc), feature_store=tc.store,
+        batch_per_worker=tc.batch_per_worker,
+        seeds_for=lambda t: None, rngs=[None] * 16,
+        slack=tc.capacity_slack, **kw)
+
+
+def test_corrupted_trace_is_rejected(monkeypatch):
+    """A trace breaching the conservation identities must NOT become a
+    confident model — the result demands the ladder fallback."""
+    tr = _trace(_tc())
+    bad = at.Trace(config=tr.config, records=(
+        tr.records[0]._replace(probe_round_bytes=1),) + tr.records[1:])
+    res = _run_autotune(monkeypatch, [bad])
+    assert res.accepted is False
+    assert "TraceInconsistent" in res.reason
+    assert res.candidate is None
+
+
+def test_short_trace_degrades_to_ladders(monkeypatch):
+    res = _run_autotune(monkeypatch, [_trace(_tc(), steps=2)])
+    assert res.accepted is False
+    assert "TraceTooShort" in res.reason
+
+
+def test_validator_rejects_a_dropping_pick(monkeypatch):
+    """The model has no drop term; a pick that drops requests live is
+    rolled back regardless of its predicted step time."""
+    good = _trace(_tc())
+    vt = _trace(_tc())
+    vt = at.Trace(config=vt.config, records=(
+        vt.records[0]._replace(n_dropped=3),) + vt.records[1:])
+    res = _run_autotune(monkeypatch, [good, vt])
+    assert res.accepted is False
+    assert "validator rejected" in res.reason and "dropped=3" in res.reason
+    assert res.candidate is not None        # there WAS a pick to reject
+
+
+def test_validator_rejects_a_slow_pick(monkeypatch):
+    """Measured step time beyond VALIDATOR_RATIO x max(predicted,
+    traced) means the model mis-fit — reject, fall back."""
+    res = _run_autotune(monkeypatch, [_trace(_tc()), _trace(_tc())],
+                        validator_ratio=1e-9)
+    assert res.accepted is False
+    assert "validator rejected" in res.reason
+    assert res.measured_step_s > 0.0
+
+
+def test_clean_run_is_accepted(monkeypatch):
+    res = _run_autotune(monkeypatch, [_trace(_tc()), _trace(_tc())])
+    assert res.accepted is True and res.reason == "accepted"
+    assert res.candidate == res.prediction.candidate
+    assert res.measured_step_s == pytest.approx(2e-3)
+
+
+# ---------------------------------------------------------------------------
+# W=4 differential + launcher degradation (subprocess, forced devices)
+# ---------------------------------------------------------------------------
+
+def _run_forced(code: str, devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    prologue = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = "
+        f"'--xla_force_host_platform_device_count={devices}'\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", prologue + textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return proc.stdout
+
+
+def test_differential_replay_matches_live_telemetry():
+    """The satellite-2 contract on the W=4 smoke shape: the anchor
+    prediction reproduces the REAL trace's warm hit/miss counts and
+    probe-round bytes exactly, and its step time holds against a live
+    re-measure within the validator tolerance."""
+    out = _run_forced("""
+        import jax, jax.numpy as jnp, numpy as np
+        import repro.launch.autotune as at
+        from repro.graph.synthetic import powerlaw_graph, node_features, node_labels
+        from repro.core.balance import balance_table
+        from repro.core.feature_cache import CacheConfig
+        from repro.core.partition import partition_edges
+        from repro.launch.mesh import make_mesh
+
+        w, b, dim = 4, 8, 16
+        mesh = make_mesh((w,), ("data",))
+        g = powerlaw_graph(2000, avg_degree=8, n_hot=3, hot_degree=400,
+                           seed=0)
+        part = partition_edges(g, w)
+        X = node_features(2000, dim); Y = node_labels(2000, 5)
+        table = balance_table(np.arange(2000), w, seed=0)
+        cfg = CacheConfig(256, admit=1, assoc=2, mode="sharded",
+                          wire="compact", hit_cap=0)
+        tc = at._traced_config((3, 2), w, b, dim, cfg, 1.0, "device")
+        rngs = jax.random.split(jax.random.PRNGKey(1), 8)
+        def seeds_for(t):
+            cols = (np.arange(b) + t * b) % table.per_worker.shape[1]
+            return jnp.asarray(table.per_worker[:, cols])
+        probes = [(seeds_for(t), rngs[t]) for t in range(8)]
+        trace = at._instrumented_run(mesh, part, X, Y, tc, cfg, probes)
+        assert len(trace.records) == 8, trace.records
+        assert trace.violations() == (), trace.violations()
+        model = at.CostModel.fit(trace)
+        warm = trace.warm_records()
+        p = model.predict(tc.candidate())
+        # counts: the replay must equal the live CacheStats/FetchStats sums
+        assert p.n_hits == sum(r.n_hits for r in warm), (p, warm)
+        assert p.n_l1_hits == sum(r.n_l1_hits for r in warm)
+        assert p.n_misses == sum(r.n_misses for r in warm)
+        assert p.n_distinct == sum(r.n_distinct() for r in warm)
+        # bytes: the static formula must equal every measured round
+        for r in trace.records:
+            assert r.probe_round_bytes == w * p.probe_round_bytes, r
+            assert r.host_gather_bytes == 0
+        # step time: exact at the anchor, and within the validator
+        # tolerance of an independent live re-measure
+        assert p.step_time_s == model.wall_mean_s
+        t2 = at._instrumented_run(mesh, part, X, Y, tc, cfg, probes[:6])
+        w2 = t2.warm_records()
+        measured = sum(r.wall_time_s for r in w2) / len(w2)
+        assert measured <= at.VALIDATOR_RATIO * max(p.step_time_s,
+                                                    model.wall_mean_s), \\
+            (measured, p.step_time_s, model.wall_mean_s)
+        print("DIFFERENTIAL_OK", int(p.n_hits), int(p.n_misses))
+    """)
+    assert "DIFFERENTIAL_OK" in out
+
+
+def test_train_autotune_short_window_warns_and_falls_back(tmp_path):
+    """``--autotune`` with fewer than MIN_TRACE_STEPS instrumented steps
+    must degrade to the calibration ladders with a warning — and still
+    train to completion (satellite-3 coverage of the launcher seam)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["REPRO_FORCE_DEVICES"] = "4"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "graphgen-gcn", "--smoke", "--workers", "4", "--steps", "3",
+         "--nodes", "2000", "--batch-per-worker", "8", "--autotune",
+         "--autotune-steps", "2", "--log-every", "1",
+         "--ckpt-dir", str(tmp_path)],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "falling back to the calibration ladders" in proc.stdout
+    assert "TraceTooShort" in proc.stdout
+    assert "trained 3 steps" in proc.stdout

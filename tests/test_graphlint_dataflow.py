@@ -142,6 +142,52 @@ def test_lifecycle_escaping_handle_silent():
         """)
 
 
+def test_lifecycle_trace_recorder_drain_shape_silent():
+    """The autotune trace recorder's loop shape (PR 10): drain the
+    previous gather before reissuing, break early on bad telemetry, and
+    the post-loop None-guarded drain catches whatever is in flight on
+    EVERY exit path — the fixture pins the shape
+    ``repro.launch.autotune.record_trace`` relies on staying lint-clean."""
+    _assert_silent("""\
+        def record(host_store, probes, gen):
+            pending = None
+            records = []
+            for seeds in probes:
+                req = gen(seeds)
+                if pending is not None:
+                    pending.rows()
+                pending = host_store.issue(req)
+                records.append(req)
+                if req < 0:
+                    break
+            if pending is not None:
+                pending.rows()
+            return records
+        """)
+
+
+def test_lifecycle_trace_recorder_early_return_fires():
+    """The one-token mutation that breaks the recorder's contract: an
+    early ``return`` inside the loop skips the post-loop drain and
+    leaks the in-flight gather."""
+    _assert_fires("handle-lifecycle", """\
+        def record(host_store, probes, gen):
+            pending = None
+            records = []
+            for seeds in probes:
+                req = gen(seeds)
+                if pending is not None:
+                    pending.rows()
+                pending = host_store.issue(req)
+                records.append(req)
+                if req < 0:
+                    return records
+            if pending is not None:
+                pending.rows()
+            return records
+        """)
+
+
 def test_lifecycle_unjoined_thread_fires_joined_silent():
     _assert_fires("handle-lifecycle", """\
         import threading

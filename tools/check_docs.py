@@ -55,6 +55,7 @@ PUBLIC_API_MODULES = (
     "repro.kernels.cache_gather",
     "repro.kernels.ref",
     "repro.kernels.ops",
+    "repro.launch.autotune",
     "repro.launch.serve",
     "repro.train.checkpoint",
 )
@@ -64,6 +65,8 @@ PUBLIC_API_MODULES = (
 PUBLIC_API_SYMBOLS = (
     "repro.launch.train:calibrate_capacity_slack",
     "repro.launch.train:calibrate_probe_hit_cap",
+    "repro.launch.roofline:roofline_terms",
+    "repro.launch.roofline:step_lower_bound",
 )
 
 #: a docstring shorter than this is a placeholder, not documentation
